@@ -1,0 +1,53 @@
+"""Fig 4 (top): test-set SSE of forests trained on coreset vs uniform sample
+of equal size, across compression sizes (the paper's x-axis); full-data
+forest as the floor."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import signal_coreset_to_size
+from repro.data import patch_mask, sensor_matrix
+from repro.trees import (RandomForestRegressor, signal_to_points,
+                         uniform_sample)
+
+from .common import emit, save_json, timed
+
+
+def run(n: int = 3000, m: int = 15, k_model: int = 128, coreset_k: int = 64,
+        fracs=(0.01, 0.02, 0.05, 0.10), n_estimators: int = 5, seed: int = 0):
+    y = sensor_matrix(n, m, seed=seed)
+    train, test = patch_mask(n, m, 0.3, 5, seed=seed + 1)
+    X_tr, y_tr = signal_to_points(y, train)
+    X_te, y_te = signal_to_points(y, test)
+    rng = np.random.default_rng(seed)
+
+    def forest_sse(X, yy, w):
+        f = RandomForestRegressor(n_estimators=n_estimators,
+                                  max_leaves=k_model, random_state=0)
+        f.fit(X, yy, sample_weight=w)
+        return float(((f.predict(X_te) - y_te) ** 2).sum())
+
+    full_sse, t_full = timed(forest_sse, X_tr, y_tr, None)
+    emit("compression/full", t_full * 1e6, f"sse={full_sse:.1f};size={len(y_tr)}")
+
+    rows = {"full": {"sse": full_sse, "size": len(y_tr)}, "points": []}
+    for frac in fracs:
+        cs, t_build = timed(signal_coreset_to_size, y, coreset_k, frac,
+                            mask=train)
+        Xc, yc, wc = cs.as_points()
+        c_sse, t_c = timed(forest_sse, Xc, yc, wc)
+        Xu, yu, wu = uniform_sample(X_tr, y_tr, len(yc), rng)
+        u_sse, t_u = timed(forest_sse, Xu, yu, wu)
+        got = len(yc) / len(y_tr)
+        rows["points"].append({"frac": got, "size": len(yc),
+                               "coreset_sse": c_sse, "uniform_sse": u_sse,
+                               "build_s": t_build})
+        emit(f"compression/frac={frac}", (t_build + t_c) * 1e6,
+             f"got={got:.3f};coreset_sse={c_sse:.1f};uniform_sse={u_sse:.1f};"
+             f"full_sse={full_sse:.1f}")
+    save_json("bench_compression", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

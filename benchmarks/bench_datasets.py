@@ -1,0 +1,42 @@
+"""Appendix A (Figs 5-7): blobs / moons / circles rasterized as signals —
+coreset size and the SSE parity of trees trained on coreset vs full."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import signal_coreset
+from repro.data import blobs, circles, moons, rasterize
+from repro.trees import DecisionTreeRegressor, signal_to_points
+
+from .common import emit, save_json, timed
+
+
+def run(res: int = 96, k: int = 64, eps: float = 0.35):
+    gens = {"blobs": blobs(4000), "moons": moons(6000), "circles": circles(6000)}
+    out = {}
+    for name, (X, lab) in gens.items():
+        y = rasterize(X, lab, res, res)
+        cs, dt = timed(signal_coreset, y, k, eps)
+        Xf, yf = signal_to_points(y)
+        Xc, yc, wc = cs.as_points()
+        t_full = DecisionTreeRegressor(max_leaves=k).fit(Xf, yf)
+        t_core = DecisionTreeRegressor(max_leaves=k).fit(Xc, yc, sample_weight=wc)
+        # class labels are discrete: compare decision surfaces (rounded
+        # prediction accuracy) like the paper's appendix figures, plus MSE
+        lab_true = np.round(yf)
+        acc_full = float((np.round(t_full.predict(Xf)) == lab_true).mean())
+        acc_core = float((np.round(t_core.predict(Xf)) == lab_true).mean())
+        mse_full = float(((t_full.predict(Xf) - yf) ** 2).mean())
+        mse_core = float(((t_core.predict(Xf) - yf) ** 2).mean())
+        out[name] = {"frac": cs.compression_ratio(), "acc_full": acc_full,
+                     "acc_coreset": acc_core, "mse_full": mse_full,
+                     "mse_coreset": mse_core}
+        emit(f"datasets/{name}", dt * 1e6,
+             f"frac={cs.compression_ratio():.3f};acc_full={acc_full:.3f};"
+             f"acc_coreset={acc_core:.3f};mse={mse_full:.4f}->{mse_core:.4f}")
+    save_json("bench_datasets", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Theorem 8 empirically: max relative error of FITTING-LOSS vs true loss
+over random + near-optimal trees, per eps, per signal family."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PrefixStats, fitting_loss, greedy_tree,
+                        random_tree_segmentation, signal_coreset, true_loss)
+from repro.data import piecewise_signal, sensor_matrix, smooth_field
+
+from .common import emit, save_json, timed
+
+
+def run(eps_grid=(0.4, 0.2, 0.1), k: int = 25, trees: int = 20, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    signals = {
+        "piecewise": piecewise_signal(250, 300, k, noise=0.15, seed=seed),
+        "smooth": smooth_field(250, 300, noise=0.1, seed=seed),
+        "sensor": sensor_matrix(1500, 15, seed=seed),
+        "noise": rng.normal(size=(250, 300)),
+    }
+    out = {}
+    for name, y in signals.items():
+        ps = PrefixStats.build(y)
+        g = greedy_tree(ps, k)
+        gl = true_loss(y, g.rects, g.labels, ps=ps)
+        for eps in eps_grid:
+            cs, t_build = timed(signal_coreset, y, k, eps)
+            errs = []
+            for _ in range(trees):
+                q = random_tree_segmentation(*y.shape, k, rng)
+                tl = true_loss(y, q.rects, q.labels, ps=ps)
+                errs.append(abs(fitting_loss(cs, q.rects, q.labels) - tl)
+                            / max(tl, 1e-12))
+            gerr = abs(fitting_loss(cs, g.rects, g.labels) - gl) / gl
+            worst = max(max(errs), gerr)
+            ok = worst <= eps
+            out[f"{name}/eps={eps}"] = {
+                "max_rel_err": worst, "greedy_err": gerr,
+                "size_frac": cs.compression_ratio(), "within_eps": ok}
+            emit(f"guarantee/{name}/eps={eps}", t_build * 1e6,
+                 f"max_err={worst:.4f};frac={cs.compression_ratio():.4f};"
+                 f"ok={ok}")
+    save_json("bench_guarantee", out)
+    assert all(v["within_eps"] for v in out.values()), "eps guarantee violated"
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Kernel micro-benches.  On this CPU container the Pallas kernels execute
+under interpret=True (kernel-body semantics, not TPU timing), so wall-times
+reported here are for the *jitted pure-jnp refs* (the XLA path the dry-run
+compiles) plus correctness deltas vs the kernels; TPU timings come from the
+roofline model in bench_roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.histsplit import ref as h_ref
+from repro.kernels.sat2d import ops as sat_ops, ref as sat_ref
+
+from .common import emit, timed
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # sat2d ref (jitted) on a 2k x 2k signal
+    y = jnp.asarray(rng.normal(size=(2048, 2048)), jnp.float32)
+    f = jax.jit(sat_ref.sat_moments_ref)
+    f(y).block_until_ready()
+    _, dt = timed(lambda: f(y).block_until_ready(), repeat=3)
+    emit("kernels/sat_moments_ref_2k", dt * 1e6,
+         f"GB/s={(3*y.size*4*2)/dt/1e9:.2f}")
+
+    # histsplit ref (jitted): 200k x 8 features x 256 bins
+    P, F, B = 200_000, 8, 256
+    codes = jnp.asarray(rng.integers(0, B, size=(P, F)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, P), jnp.float32)
+    h = jax.jit(lambda c, a, b, d: h_ref.histograms_ref(c, a, b, d, B))
+    h(codes, w, w, w).block_until_ready()
+    _, dt = timed(lambda: h(codes, w, w, w).block_until_ready(), repeat=3)
+    emit("kernels/histsplit_ref_200k", dt * 1e6,
+         f"Melem/s={(P*F)/dt/1e6:.1f}")
+
+    # flash attention: correctness delta kernel-vs-ref at a serving shape
+    q = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    ref = jax.jit(lambda q, k, v: fa_ref.attention_ref(q, k, v))
+    ref(q, k, v).block_until_ready()
+    _, dt = timed(lambda: ref(q, k, v).block_until_ready(), repeat=3)
+    delta = float(jnp.max(jnp.abs(
+        fa_ops.flash_attention(q, k, v) - ref(q, k, v))))
+    flops = 4 * 8 * 512 * 512 * 64
+    emit("kernels/attention_ref_512", dt * 1e6,
+         f"GFLOP/s={flops/dt/1e9:.1f};kernel_max_delta={delta:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,114 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run JSONs.
+
+Hardware model (TPU v5e targets from the brief):
+  peak   = 197e12 bf16 FLOP/s per chip
+  hbm    = 819e9  B/s per chip
+  link   = 50e9   B/s ICI per link (we charge the parsed per-chip collective
+           result bytes against one link — a conservative single-link model;
+           all-reduce ring traffic is ~2x the payload, all-gather ~1x, noted
+           per kind in the JSON)
+
+The dry-run's costing numbers (flops / bytes / collective bytes) are
+*per-chip* quantities of the SPMD program, extrapolated over the layer loop
+(see launch/dryrun.py), so:
+
+  compute_s    = flops / peak
+  memory_s     = bytes / hbm
+  collective_s = ring_factor-weighted collective bytes / link
+
+  bottleneck   = argmax of the three
+  MFU estimate = (MODEL_FLOPS / chips / peak) / max(terms)
+  useful ratio = MODEL_FLOPS / (flops * chips)     (remat/dispatch overhead)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import get_arch, get_shape
+
+from .common import RESULTS, emit, save_json
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+RING = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+        "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_arch(arch)
+    sh = get_shape(shape)
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * n * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * n * tokens
+    tokens = sh["global_batch"]          # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    cost = rec.get("costing")
+    if not cost:
+        return None
+    chips = 1
+    for s in rec["mesh_shape"]:
+        chips *= s
+    flops = cost["flops"]
+    bytes_ = cost["bytes"]
+    coll = sum(RING.get(k, 1.0) * v
+               for k, v in cost["collectives_by_kind"].items())
+    compute_s = flops / PEAK
+    memory_s = bytes_ / HBM
+    coll_s = coll / LINK
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])
+    mf = model_flops(rec["arch"], rec["shape"])
+    ideal_s = mf / chips / PEAK
+    step_s = max(compute_s, memory_s, coll_s)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "bottleneck": dominant[0],
+        "model_flops": mf,
+        "useful_ratio": mf / max(flops * chips, 1e-9),
+        "mfu_estimate": ideal_s / max(step_s, 1e-30),
+        "peak_hbm_gib": rec["full"]["memory"]["peak_hbm_estimate"] / 2**30,
+        "fits_16gib": rec["full"]["memory"]["peak_hbm_estimate"] < 16 * 2**30,
+    }
+
+
+def run(dryrun_dir: str | None = None, mesh: str = "single"):
+    d = pathlib.Path(dryrun_dir or (RESULTS / "dryrun"))
+    rows = []
+    for p in sorted(d.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+            emit(f"roofline/{row['arch']}/{row['shape']}", 0.0,
+                 f"comp={row['compute_s']*1e3:.2f}ms;mem={row['memory_s']*1e3:.2f}ms;"
+                 f"coll={row['collective_s']*1e3:.2f}ms;dom={row['bottleneck']};"
+                 f"mfu~{row['mfu_estimate']:.2f};useful={row['useful_ratio']:.2f}")
+    save_json("bench_roofline", rows)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| MODEL/HLO | MFU est | peak GiB |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_estimate']:.2f} | {r['peak_hbm_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

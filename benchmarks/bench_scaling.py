@@ -1,0 +1,33 @@
+"""Theorem 8: construction time is O(Nk) — linearity in N (and the size
+stays sub-linear)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import signal_coreset
+from repro.data import piecewise_signal
+
+from .common import emit, save_json, timed
+
+
+def run(k: int = 25, eps: float = 0.3, sizes=((125, 150), (250, 300),
+                                              (500, 600), (1000, 600))):
+    rows = []
+    for n, m in sizes:
+        y = piecewise_signal(n, m, k, noise=0.15, seed=1)
+        cs, dt = timed(signal_coreset, y, k, eps)
+        rows.append({"N": n * m, "seconds": dt, "size": cs.size,
+                     "frac": cs.compression_ratio()})
+        emit(f"scaling/N={n*m}", dt * 1e6,
+             f"size={cs.size};frac={cs.compression_ratio():.4f}")
+    # linear fit in N: time ~ a + b N; report sublinearity of the exponent
+    Ns = np.array([r["N"] for r in rows], float)
+    ts = np.array([r["seconds"] for r in rows], float)
+    slope = np.polyfit(np.log(Ns), np.log(ts), 1)[0]
+    emit("scaling/exponent", 0.0, f"time~N^{slope:.2f} (O(Nk) predicts ~1)")
+    save_json("bench_scaling", {"rows": rows, "exponent": float(slope)})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

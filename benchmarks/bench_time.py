@@ -1,0 +1,38 @@
+"""Fig 4 (bottom-right): total time to tune k — construction + sweep on the
+compression vs the sweep on full data; reports the x-speedup."""
+from __future__ import annotations
+
+import time
+
+from repro.data import patch_mask, sensor_matrix
+from repro.trees import tune_k
+
+from .common import emit, save_json
+
+
+def run(n: int = 9358, m: int = 15,
+        ks=(8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768),
+        target_frac: float = 0.02, n_estimators: int = 24, seed: int = 0):
+    """Defaults sized like the paper's sweep (50 k-values, 100-tree forests,
+    N = 140k): construction is one-off, the sweep amortizes it."""
+    y = sensor_matrix(n, m, seed=seed)
+    train, test = patch_mask(n, m, 0.3, 5, seed=seed + 1)
+    res = tune_k(y, train, test, ks=list(ks), coreset_k=64,
+                 target_frac=target_frac, n_estimators=n_estimators)
+    t_full = res.times["full"]
+    t_core = res.times["coreset"]           # includes the one-off build
+    t_unif = res.times["uniform"]
+    speedup = t_full / max(t_core, 1e-9)
+    emit("time/full", t_full * 1e6, f"sweep={len(ks)}k;sse={min(res.losses['full']):.1f}")
+    emit("time/coreset", t_core * 1e6,
+         f"speedup=x{speedup:.1f};size={res.sizes['coreset']};"
+         f"sse={min(res.losses['coreset']):.1f}")
+    emit("time/uniform", t_unif * 1e6, f"sse={min(res.losses['uniform']):.1f}")
+    save_json("bench_time", {"times": res.times, "speedup": speedup,
+                             "sizes": res.sizes,
+                             "best_sse": {k: min(v) for k, v in res.losses.items()}})
+    return speedup
+
+
+if __name__ == "__main__":
+    run()

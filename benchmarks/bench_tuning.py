@@ -1,0 +1,39 @@
+"""Fig 4 (bottom-left): loss-vs-k tuning curves on coreset vs full data.
+
+The headline claim: the curve computed on the (once-built) coreset tracks
+the curve computed on the full data, so the argmin transfers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import patch_mask, sensor_matrix
+from repro.trees import tune_k
+
+from .common import emit, save_json
+
+
+def run(n: int = 2500, m: int = 15, ks=(8, 16, 32, 64, 128, 256),
+        target_frac: float = 0.05, seed: int = 0):
+    y = sensor_matrix(n, m, seed=seed)
+    train, test = patch_mask(n, m, 0.3, 5, seed=seed + 1)
+    res = tune_k(y, train, test, ks=list(ks), coreset_k=64,
+                 target_frac=target_frac, n_estimators=4)
+    for name, ls in res.losses.items():
+        emit(f"tuning/{name}", res.times[name] * 1e6,
+             "curve=" + "|".join(f"{k}:{l:.0f}" for k, l in zip(res.ks, ls))
+             + f";best_k={res.best_k[name]}")
+    # curve agreement: Spearman-ish sign agreement between full and coreset
+    full = np.array(res.losses["full"])
+    core = np.array(res.losses["coreset"])
+    agree = np.mean(np.sign(np.diff(full)) == np.sign(np.diff(core)))
+    emit("tuning/curve_agreement", 0.0, f"monotone_agreement={agree:.2f};"
+         f"best_full={res.best_k['full']};best_coreset={res.best_k['coreset']}")
+    save_json("bench_tuning", {"ks": res.ks, "losses": res.losses,
+                               "times": res.times, "best_k": res.best_k,
+                               "agreement": float(agree)})
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing + CSV rows (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def save_json(name: str, obj) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1, default=float))
+    return p

@@ -1,0 +1,69 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+#   Fig 4 top          -> bench_compression   (coreset vs uniform SSE)
+#   Fig 4 bottom-left  -> bench_tuning        (loss-vs-k curves transfer)
+#   Fig 4 bottom-right -> bench_time          (x-speedup of tuning)
+#   Theorem 8          -> bench_guarantee     (empirical eps), bench_scaling
+#                         (O(Nk) time), bench_size (|C| << theory)
+#   Appendix A         -> bench_datasets      (blobs/moons/circles)
+#   kernels            -> bench_kernels
+#   §Roofline          -> bench_roofline      (needs dry-run JSONs)
+#
+# ``--fast`` shrinks problem sizes ~4x for CI-style runs.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: compression,tuning,time,guarantee,"
+                         "scaling,size,datasets,kernels,roofline")
+    args = ap.parse_args()
+    from . import (bench_compression, bench_datasets, bench_guarantee,
+                   bench_kernels, bench_roofline, bench_scaling, bench_size,
+                   bench_time, bench_tuning)
+
+    fast = args.fast
+    jobs = {
+        "guarantee": lambda: bench_guarantee.run(
+            eps_grid=(0.4, 0.2) if fast else (0.4, 0.2, 0.1),
+            trees=8 if fast else 20),
+        "compression": lambda: bench_compression.run(
+            n=1500 if fast else 3000,
+            fracs=(0.02, 0.05) if fast else (0.01, 0.02, 0.05, 0.10),
+            n_estimators=3 if fast else 5),
+        "tuning": lambda: bench_tuning.run(
+            n=1200 if fast else 2500, ks=(8, 32, 128) if fast else
+            (8, 16, 32, 64, 128, 256)),
+        "time": (lambda: bench_time.run(n=2000, ks=(8, 32, 128),
+                                        n_estimators=4)) if fast \
+        else bench_time.run,
+        "scaling": lambda: bench_scaling.run(
+            sizes=((125, 150), (250, 300), (500, 600)) if fast else
+            ((125, 150), (250, 300), (500, 600), (1000, 600))),
+        "size": lambda: bench_size.run(n=3000 if fast else 9358,
+                                       k=500 if fast else 2000),
+        "datasets": lambda: bench_datasets.run(res=64 if fast else 96),
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(jobs)
+    failed = []
+    for name, job in jobs.items():
+        if name not in only:
+            continue
+        try:
+            job()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0.0,ERROR={e!r}")
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

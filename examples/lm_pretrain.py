@@ -1,0 +1,55 @@
+"""End-to-end LM training driver (deliverable (b)): a ~100M-parameter
+qwen2-family model trained for a few hundred steps on the synthetic token
+stream, with checkpointing + restart through the production code path.
+
+Full-size invocation (TPU pod): drop --reduced overrides and pass
+--production-mesh.  On this CPU container the default below finishes in
+roughly half an hour; pass --steps 30 for a quick look.
+
+    PYTHONPATH=src python examples/lm_pretrain.py --steps 300
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.launch.train import train_loop  # noqa: E402
+from repro.models import init_params  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-parameter member of the qwen2 family (GQA + QKV bias preserved)
+    cfg = dataclasses.replace(
+        get_arch("qwen2-0.5b"), n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=2, d_ff=2048, vocab=32000, dtype="float32", remat=False)
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    print(f"model: {n_params / 1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model} GQA {cfg.n_heads}/{cfg.n_kv_heads})")
+
+    state = train_loop(cfg, steps=args.steps, batch=args.batch,
+                       seq_len=args.seq, ckpt_dir=args.ckpt, save_every=100,
+                       log_every=10)
+    ls = state["losses"]
+    k = max(len(ls) // 10, 1)
+    print(f"loss: {np.mean(ls[:k]):.3f} -> {np.mean(ls[-k:]):.3f} over "
+          f"{len(ls)} steps (vocab {cfg.vocab}: random = "
+          f"{np.log(cfg.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

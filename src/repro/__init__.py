@@ -1,0 +1,4 @@
+"""repro: Coresets for Decision Trees of Signals (NeurIPS 2021) as a
+production multi-pod JAX framework.  See DESIGN.md for the system map."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from .checkpointer import CheckpointManager
+
+__all__ = ["CheckpointManager"]

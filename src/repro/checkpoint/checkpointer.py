@@ -1,0 +1,125 @@
+"""Sharded, asynchronous, atomic checkpointing with elastic restore.
+
+Layout per step:  <dir>/step_<k>/host_<i>.npz.zst  +  <dir>/step_<k>/DONE
+                  <dir>/latest   (text pointer, written after DONE)
+
+Design points for the 1000-node posture:
+  * each host serializes only its addressable shard values (here: the whole
+    array on the single-host container; the API takes the host count);
+  * writes go to a temp name and are renamed — a reader never sees a torn
+    file; the DONE marker commits the step atomically across files;
+  * saving runs on a background thread (training continues; ``wait()``
+    joins before the next save or at exit);
+  * restore reshards on load: arrays are device_put against the *current*
+    mesh's shardings, so reloading onto a different mesh (elastic resize)
+    is the same code path;
+  * ``max_to_keep`` garbage-collects old steps after commit.
+"""
+from __future__ import annotations
+
+import io
+import json
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+import zstandard
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+            for kp, _ in flat]
+    return keys, [v for _, v in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, max_to_keep: int = 3,
+                 host_id: int = 0, num_hosts: int = 1, async_save: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.max_to_keep = max_to_keep
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        keys, leaves, _ = _flatten(tree)
+        arrays = [np.asarray(v) for v in leaves]   # host copy before async
+
+        def _write():
+            step_dir = self.dir / f"step_{step:08d}"
+            step_dir.mkdir(parents=True, exist_ok=True)
+            buf = io.BytesIO()
+            np.savez(buf, **{k: a for k, a in zip(keys, arrays)})
+            payload = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
+            tmp = step_dir / f"host_{self.host_id}.npz.zst.tmp"
+            final = step_dir / f"host_{self.host_id}.npz.zst"
+            tmp.write_bytes(payload)
+            tmp.rename(final)
+            # single-host container: host 0 commits
+            if self.host_id == 0:
+                (step_dir / "DONE").write_text(json.dumps(
+                    {"step": step, "num_hosts": self.num_hosts}))
+                (self.dir / "latest.tmp").write_text(str(step))
+                (self.dir / "latest.tmp").rename(self.dir / "latest")
+                self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.max_to_keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "DONE").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        p = self.dir / "latest"
+        if p.exists():
+            s = int(p.read_text())
+            if (self.dir / f"step_{s:08d}" / "DONE").exists():
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Load into the template tree structure; device_put against
+        ``shardings`` (a matching tree) if given — the elastic-remesh path."""
+        step_dir = self.dir / f"step_{step:08d}"
+        payload = (step_dir / f"host_{self.host_id}.npz.zst").read_bytes()
+        raw = zstandard.ZstdDecompressor().decompress(payload)
+        npz = np.load(io.BytesIO(raw))
+        keys, leaves, treedef = _flatten(template)
+        out = []
+        for k, tmpl in zip(keys, leaves):
+            a = npz[k]
+            if hasattr(tmpl, "dtype"):
+                a = a.astype(tmpl.dtype)
+            out.append(a)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree

@@ -1,0 +1,6 @@
+from .base import ArchConfig
+from .registry import ARCHS, SHAPES, get_arch, get_shape, runnable_cells
+from .shapes import input_specs, reduced_config
+
+__all__ = ["ArchConfig", "ARCHS", "SHAPES", "get_arch", "get_shape",
+           "runnable_cells", "input_specs", "reduced_config"]

@@ -1,0 +1,6 @@
+"""granite-20b — [dense] MQA (kv=1), code model. [arXiv:2405.04324; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b", family="dense", n_layers=52, d_model=6144,
+    n_heads=48, n_kv_heads=1, d_ff=24576, vocab=49152)

@@ -1,0 +1,83 @@
+"""Input specs: ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation — the dry-run lowers against these.  Frontends are
+stubs per the brief: pixtral gets precomputed patch embeddings, musicgen a
+(B, L, n_codebooks) token grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+from .registry import get_shape
+
+__all__ = ["input_specs", "reduced_config"]
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Pytree of ShapeDtypeStructs for the cell's entry point.
+
+    train:   {"tokens", "targets"} full-sequence batches
+    prefill: {"tokens"} full-sequence batch
+    decode:  {"tokens"} single-token batch (cache is built separately)
+    """
+    sh = get_shape(shape_name)
+    B, L = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    if sh["kind"] == "decode":
+        tok_len = 1
+    else:
+        tok_len = L
+
+    if cfg.frontend == "audio_codebooks":
+        toks = jax.ShapeDtypeStruct((B, tok_len, cfg.n_codebooks), i32)
+    elif cfg.frontend == "vision_stub" and sh["kind"] != "decode":
+        # patch embeddings replace the first n_patches positions
+        text_len = max(tok_len - cfg.n_patches, 1)
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, text_len), i32),
+            **({"targets": jax.ShapeDtypeStruct((B, cfg.n_patches + text_len), i32)}
+               if sh["kind"] == "train" else {}),
+        }
+    else:
+        toks = jax.ShapeDtypeStruct((B, tok_len), i32)
+
+    specs = {"tokens": toks}
+    if sh["kind"] == "train":
+        specs["targets"] = jax.ShapeDtypeStruct(toks.shape, i32)
+    return specs
+
+
+def reduced_config(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """CPU-smoke-test-sized variant of the same family: tiny widths/layers,
+    few experts, small vocab — same code paths."""
+    import dataclasses
+    small = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(max(cfg.n_kv_heads * 4 // max(cfg.n_heads, 1), 1), 4),
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        head_dim=32 if cfg.head_dim else 0,
+    )
+    if cfg.is_moe:
+        small.update(n_experts=4, moe_top_k=2, d_ff_expert=64,
+                     n_shared_experts=min(cfg.n_shared_experts, 1))
+    if cfg.is_mla:
+        # v_head_dim deliberately != qk_nope+qk_rope (catches mixed-head-dim
+        # attention bugs, as in the full DeepSeek config: 128 vs 192)
+        small.update(kv_lora_rank=32, q_lora_rank=48 if cfg.q_lora_rank else 0,
+                     qk_rope_dim=16, qk_nope_dim=16, v_head_dim=48)
+    if cfg.is_ssm:
+        small.update(ssm_state=min(cfg.ssm_state, 16), ssm_chunk=16,
+                     mamba_headdim=16)
+    if cfg.attn_every:
+        small.update(attn_every=2)
+    if cfg.n_patches:
+        small.update(n_patches=8)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

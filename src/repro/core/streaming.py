@@ -1,0 +1,168 @@
+"""Streaming / merge-reduce coresets (paper §1.1 "merge and reduce").
+
+Coresets of disjoint sub-signals *compose*: if (C_i, u_i) is a (k, eps)-
+coreset of row-band D_i, the union is a (k, eps)-coreset of D = U D_i — a
+k-segmentation restricted to a band is still a <=k-segmentation, and the
+per-band multiplicative errors add up to eps * ell(D, s).  ``compose`` is
+therefore exact concatenation (with row offsets).
+
+``recompress`` runs the full pipeline again over the *weighted* union
+(coreset points rastered to per-cell moments), giving the classic
+merge-reduce tree: eps grows additively per level, size stays bounded.
+``StreamingBuilder`` maintains the log-depth bucket structure for an
+append-only stream of row bands, and supports band replacement (dynamic
+updates, challenge (iv) of the paper's introduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .balanced import balanced_partition
+from .bicriteria import bicriteria
+from .caratheodory import block_representatives
+from .coreset import SignalCoreset
+from .stats import PrefixStats
+
+__all__ = ["compose", "recompress", "weighted_signal_coreset", "StreamingBuilder"]
+
+
+def compose(coresets: list[SignalCoreset], row_offsets: list[int], n_total: int,
+            ) -> SignalCoreset:
+    """Union of per-band coresets -> coreset of the stacked signal."""
+    if not coresets:
+        raise ValueError("need at least one coreset")
+    m = coresets[0].m
+    rects = []
+    for cs, off in zip(coresets, row_offsets):
+        r = cs.rects.copy()
+        r[:, 0] += off
+        r[:, 1] += off
+        rects.append(r)
+    return SignalCoreset(
+        n=n_total, m=m, k=coresets[0].k,
+        eps=max(c.eps for c in coresets),
+        rects=np.concatenate(rects, axis=0),
+        labels=np.concatenate([c.labels for c in coresets], axis=0),
+        weights=np.concatenate([c.weights for c in coresets], axis=0),
+        moments=np.concatenate([c.moments for c in coresets], axis=0),
+        sigma=min(c.sigma for c in coresets),
+        tolerance=min(c.tolerance for c in coresets),
+        max_slices=max(c.max_slices for c in coresets),
+        bicriteria=coresets[0].bicriteria,
+        build_seconds=sum(c.build_seconds for c in coresets),
+        certified=all(c.certified for c in coresets),
+    )
+
+
+def weighted_signal_coreset(n: int, m: int, rows: np.ndarray, cols: np.ndarray,
+                            labels: np.ndarray, weights: np.ndarray, k: int,
+                            eps: float, *, fidelity: str = "practical",
+                            tolerance_override: float | None = None,
+                            max_slices_override: int | None = None,
+                            _sigma_hint=None) -> SignalCoreset:
+    """SIGNAL-CORESET over a weighted sparse signal (points on the grid).
+
+    Used by merge-reduce: the input points are themselves coreset points.
+    All pipeline stages only consume (sum w, sum w y, sum w y^2) rasters, so
+    the generalization is direct.
+    """
+    import time
+    t0 = time.perf_counter()
+    rows = np.asarray(rows, np.int64); cols = np.asarray(cols, np.int64)
+    labels = np.asarray(labels, np.float64); weights = np.asarray(weights, np.float64)
+    w0 = np.zeros((n, m), np.float64)
+    w1 = np.zeros((n, m), np.float64)
+    w2 = np.zeros((n, m), np.float64)
+    np.add.at(w0, (rows, cols), weights)
+    np.add.at(w1, (rows, cols), weights * labels)
+    np.add.at(w2, (rows, cols), weights * labels * labels)
+
+    ps = PrefixStats.build_moments(w0, w1, w2)
+    if _sigma_hint is not None:       # size-bisection path: sigma known
+        sigma, certified, bic = _sigma_hint
+    else:
+        bic = bicriteria(None, k, fidelity=fidelity, moments=(w0, w1, w2))
+        sigma = bic.sigma
+        certified = True
+        if fidelity != "paper":
+            # heuristic sigma floor (see signal_coreset): greedy k-tree loss/4
+            from .segmentation import greedy_tree
+            g = greedy_tree(ps, k)
+            s0, s1, s2 = ps.sums(g.rects[:, 0], g.rects[:, 1], g.rects[:, 2], g.rects[:, 3])
+            heur = float(np.maximum(s2 - s1 * s1 / np.maximum(s0, 1e-300), 0.0).sum()) / 6.0
+            if heur > sigma:
+                sigma, certified = heur, False
+    from .coreset import resolve_partition_params
+    tol, max_slices = resolve_partition_params(sigma, k, eps, fidelity, bic.alpha_hat)
+    if tolerance_override is not None:
+        tol = float(tolerance_override)
+    if max_slices_override is not None:
+        max_slices = int(max_slices_override)
+
+    part = balanced_partition(ps, tol, max_slices)
+    raster = part.block_id_raster(n, m)
+    bid_pts = raster[rows, cols]
+    lab4, w4, mom = block_representatives(labels, bid_pts, part.num_blocks,
+                                          w_flat=weights)
+    keep = mom[:, 0] > 0  # drop mass-less blocks (all-empty regions)
+    return SignalCoreset(
+        n=n, m=m, k=k, eps=eps,
+        rects=part.rects[keep], labels=lab4[keep], weights=w4[keep],
+        moments=mom[keep], sigma=float(sigma), tolerance=tol,
+        max_slices=max_slices, bicriteria=bic,
+        build_seconds=time.perf_counter() - t0, certified=certified,
+    )
+
+
+def recompress(cs: SignalCoreset, k: int | None = None, eps: float | None = None,
+               ) -> SignalCoreset:
+    """Reduce step of merge-reduce: coreset-of-the-coreset."""
+    # exact-moment (Caratheodory) labels: re-compression must preserve M2
+    X, y, w = cs.as_points(style="caratheodory")
+    return weighted_signal_coreset(
+        cs.n, cs.m, X[:, 0].astype(np.int64), X[:, 1].astype(np.int64), y, w,
+        k or cs.k, eps or cs.eps)
+
+
+@dataclasses.dataclass
+class StreamingBuilder:
+    """Merge-reduce over an append-only stream of row bands.
+
+    Buckets hold coresets of 2^level bands; inserting a band cascades merges
+    (compose + recompress) like binary addition, so memory stays
+    O(log #bands * coreset size) and each band is touched O(log) times.
+    """
+
+    m: int
+    k: int
+    eps: float
+    recompress_levels: bool = True
+    _buckets: dict[int, tuple[SignalCoreset, int, int]] = dataclasses.field(default_factory=dict)
+    _next_row: int = 0
+
+    def insert_band(self, band_values: np.ndarray) -> None:
+        from .coreset import signal_coreset
+        cs = signal_coreset(band_values, self.k, self.eps)
+        item = (cs, self._next_row, band_values.shape[0])
+        self._next_row += band_values.shape[0]
+        level = 0
+        while level in self._buckets:
+            other, o_row, o_rows = self._buckets.pop(level)
+            lo = min(o_row, item[1])
+            merged = compose([other, item[0]], [o_row - lo, item[1] - lo],
+                             n_total=o_rows + item[2])
+            if self.recompress_levels:
+                merged = recompress(merged)
+            # re-anchor: merged covers rows [lo, lo + total)
+            item = (merged, lo, o_rows + item[2])
+            level += 1
+        self._buckets[level] = item
+
+    def result(self) -> SignalCoreset:
+        items = sorted(self._buckets.values(), key=lambda t: t[1])
+        if not items:
+            raise ValueError("empty stream")
+        return compose([it[0] for it in items], [it[1] for it in items],
+                       n_total=self._next_row)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot spots (validated with
+# interpret=True on CPU; see DESIGN.md §4 for the GPU->TPU adaptations):
+#   sat2d           - blocked 2D prefix sums (coreset prefix statistics)
+#   histsplit       - split histograms as one-hot MXU matmuls (CART/GBDT)
+#   flash_attention - causal GQA flash attention (LM substrate)
+#   fitting_loss    - Algorithm-5 coreset queries, fused
+from . import fitting_loss, flash_attention, histsplit, sat2d  # noqa: F401

@@ -1,0 +1,31 @@
+"""Shared kernel plumbing: interpret-mode default and tiling helpers.
+
+All kernels are written against the TPU backend (pl.pallas_call + BlockSpec
+VMEM tiling, MXU-aligned shapes); on CPU they run the kernel body under
+``interpret=True`` (the correctness path used by the test suite — this
+container has no TPU).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "ceil_div", "pad_to"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x, multiple: int, axis: int):
+    import jax.numpy as jnp
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import fitting_loss_call
+
+__all__ = ["ops", "ref", "fitting_loss_call"]

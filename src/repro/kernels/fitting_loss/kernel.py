@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: Algorithm 5 (FITTING-LOSS) evaluation, fused.
+
+The tree-tuning inner loop evaluates many candidate k-trees against the
+coreset.  Per (block-tile, all K leaves): rectangle-overlap counts, the
+cumulative-mass interval overlap (the closed form of the paper's while-loop,
+see core/fitting_loss.py), and the weighted squared-difference reduction —
+all fused in VMEM, so HBM traffic is one read of the coreset tile and the
+(K, 5) segmentation instead of a (B, K, 4) intermediate.
+
+Grid: (B / TB,).  Blocks: coreset tile (TB, 16) (rects|labels|weights packed
+and padded to the lane quantum), segmentation (K, 8).  Output: per-tile
+partial sums (grid, 8) reduced by the wrapper (keeps the kernel free of
+cross-tile accumulation ordering concerns).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import default_interpret
+
+__all__ = ["fitting_loss_call"]
+
+
+def _fl_kernel(blk_ref, seg_ref, o_ref):
+    blk = blk_ref[...]                         # (TB, 16)
+    rects = blk[:, 0:4]
+    labels4 = blk[:, 4:8]
+    weights4 = blk[:, 8:12]
+    seg = seg_ref[...]                         # (K, 8)
+    seg_rects = seg[:, 0:4]
+    seg_labels = seg[:, 4]
+
+    z_r = jnp.clip(jnp.minimum(rects[:, None, 1], seg_rects[None, :, 1])
+                   - jnp.maximum(rects[:, None, 0], seg_rects[None, :, 0]), 0, None)
+    z_c = jnp.clip(jnp.minimum(rects[:, None, 3], seg_rects[None, :, 3])
+                   - jnp.maximum(rects[:, None, 2], seg_rects[None, :, 2]), 0, None)
+    z = z_r * z_c                              # (TB, K)
+    Z = jnp.cumsum(z, axis=1)
+    Zp = Z - z
+    U = jnp.cumsum(weights4, axis=1)
+    Up = U - weights4
+    lo = jnp.maximum(Zp[:, :, None], Up[:, None, :])
+    hi = jnp.minimum(Z[:, :, None], U[:, None, :])
+    consumed = jnp.clip(hi - lo, 0.0, None)    # (TB, K, 4)
+    diff = seg_labels[None, :, None] - labels4[:, None, :]
+    part = (consumed * diff * diff).sum()
+    o_ref[...] = jnp.full_like(o_ref, part)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def fitting_loss_call(rects, labels4, weights4, seg_rects, seg_labels,
+                      tile_b: int = 1024, interpret: bool | None = None):
+    """Scalar Algorithm-5 loss. rects/labels4/weights4: (B, 4) f32;
+    seg_rects: (K, 4) f32; seg_labels: (K,) f32."""
+    if interpret is None:
+        interpret = default_interpret()
+    B = rects.shape[0]
+    K = seg_rects.shape[0]
+    tb = min(tile_b, max(B, 1))
+    pad = (-B) % tb
+    blk = jnp.concatenate([rects, labels4, weights4,
+                           jnp.zeros((B, 4), rects.dtype)], axis=1)  # (B,16)
+    if pad:
+        blk = jnp.pad(blk, ((0, pad), (0, 0)))   # zero-weight blocks: no loss
+    seg = jnp.concatenate([seg_rects, seg_labels[:, None],
+                           jnp.zeros((K, 3), seg_rects.dtype)], axis=1)  # (K,8)
+    grid = (blk.shape[0] // tb,)
+    partials = pl.pallas_call(
+        _fl_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, 16), lambda i: (i, 0)),
+            pl.BlockSpec((K, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 8), jnp.float32),
+        interpret=interpret,
+    )(blk.astype(jnp.float32), seg.astype(jnp.float32))
+    return partials[:, 0].sum()

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper: evaluate a segmentation (or many) on a coreset."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import fitting_loss_call
+
+__all__ = ["coreset_loss", "coreset_loss_many"]
+
+
+def coreset_loss(cs, seg_rects, seg_labels, interpret: bool | None = None):
+    """Algorithm-5 loss of one segmentation against a SignalCoreset."""
+    return fitting_loss_call(
+        jnp.asarray(cs.rects, jnp.float32), jnp.asarray(cs.labels, jnp.float32),
+        jnp.asarray(cs.weights, jnp.float32),
+        jnp.asarray(seg_rects, jnp.float32), jnp.asarray(seg_labels, jnp.float32),
+        interpret=interpret)
+
+
+def coreset_loss_many(cs, seg_rects_batch, seg_labels_batch,
+                      interpret: bool | None = None):
+    """(T,) losses for T segmentations (the tuning inner loop)."""
+    rects = jnp.asarray(cs.rects, jnp.float32)
+    lab = jnp.asarray(cs.labels, jnp.float32)
+    wgt = jnp.asarray(cs.weights, jnp.float32)
+    out = [fitting_loss_call(rects, lab, wgt,
+                             jnp.asarray(sr, jnp.float32),
+                             jnp.asarray(sl, jnp.float32), interpret=interpret)
+           for sr, sl in zip(seg_rects_batch, seg_labels_batch)]
+    return jnp.stack(out)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Algorithm-5 smoothed-assignment loss."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fitting_loss_ref"]
+
+
+def fitting_loss_ref(rects, labels4, weights4, seg_rects, seg_labels):
+    """Dense Algorithm 5 over all (block, leaf, point) triples.
+
+    rects (B,4) f32 half-open block corners; labels4/weights4 (B,4);
+    seg_rects (K,4); seg_labels (K,).  Returns the scalar loss.
+    (The smoothed path reduces to the exact moment formula when one leaf
+    covers a block, so no separate exact branch is needed.)
+    """
+    z_r = jnp.clip(jnp.minimum(rects[:, None, 1], seg_rects[None, :, 1])
+                   - jnp.maximum(rects[:, None, 0], seg_rects[None, :, 0]), 0, None)
+    z_c = jnp.clip(jnp.minimum(rects[:, None, 3], seg_rects[None, :, 3])
+                   - jnp.maximum(rects[:, None, 2], seg_rects[None, :, 2]), 0, None)
+    z = (z_r * z_c).astype(jnp.float32)              # (B, K)
+    Z = jnp.cumsum(z, axis=1)
+    Zp = Z - z
+    U = jnp.cumsum(weights4, axis=1)                  # (B, 4)
+    Up = U - weights4
+    lo = jnp.maximum(Zp[:, :, None], Up[:, None, :])
+    hi = jnp.minimum(Z[:, :, None], U[:, None, :])
+    consumed = jnp.clip(hi - lo, 0.0, None)           # (B, K, 4)
+    diff = seg_labels[None, :, None] - labels4[:, None, :]
+    return (consumed * diff * diff).sum()

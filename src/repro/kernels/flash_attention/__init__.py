@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import flash_attention_call
+
+__all__ = ["ops", "ref", "flash_attention_call"]

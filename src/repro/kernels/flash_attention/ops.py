@@ -1,0 +1,11 @@
+"""Jit'd public wrapper for flash attention."""
+from __future__ import annotations
+
+from .kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, causal: bool = True, interpret: bool | None = None):
+    """Causal GQA flash attention; q (B,Hq,L,D), k/v (B,Hkv,L,D)."""
+    return flash_attention_call(q, k, v, causal=causal, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: causal (optionally GQA) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D) with Hq % Hkv == 0."""
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        # decode-style alignment: query i attends to keys <= i + (Lk - Lq)
+        qi = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        ki = jnp.arange(Lk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)

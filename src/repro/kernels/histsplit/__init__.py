@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import histograms_kernel_call
+
+__all__ = ["ops", "ref", "histograms_kernel_call"]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: CART/GBDT split histograms as one-hot MXU matmuls.
+
+GPU gradient-boosting libraries (LightGBM/XGBoost CUDA) build per-node split
+histograms with shared-memory **atomic scatter-adds**.  TPUs have no atomics
+and no efficient scatter — the TPU-native reformulation (DESIGN.md §4) is
+
+    hist[f] = onehot(codes[:, f])^T  @  [w | wy | wy2]      (B x P)(P x S)
+
+i.e. a dense one-hot contraction that runs on the **MXU systolic array**.
+The one-hot tile is materialized in VMEM from an iota comparison (never in
+HBM), so HBM traffic is just codes + values + the (F, B, S) output.
+
+Grid: (F, P/TP).  The P axis is innermost and sequential on TPU, so the
+output block (B, S) for feature f accumulates across P tiles in place.
+Tiles: TP = 512 rows; B = 256 bins (lane-aligned); S = 8 value lanes
+(w, wy, wy2 + padding to the f32 sublane quantum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import default_interpret
+
+__all__ = ["histograms_kernel_call"]
+
+_S_PAD = 8  # value lanes (3 used), padded for layout friendliness
+
+
+def _hist_kernel(codes_ref, vals_ref, o_ref):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = codes_ref[0, :]                                   # (TP,) int32
+    n_bins = o_ref.shape[1]
+    onehot = (codes[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (codes.shape[0], n_bins), 1)).astype(vals_ref.dtype)
+    # (B, TP) @ (TP, S) on the MXU
+    o_ref[0] += jnp.dot(onehot.T, vals_ref[...],
+                        preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "tile_p", "interpret"))
+def histograms_kernel_call(codes_fp: jnp.ndarray, vals: jnp.ndarray,
+                           n_bins: int, tile_p: int = 512,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """codes_fp: (F, P) int32; vals: (P, S<=8) f32. Returns (F, n_bins, S)."""
+    if interpret is None:
+        interpret = default_interpret()
+    F, P = codes_fp.shape
+    S = vals.shape[1]
+    tp = min(tile_p, P)
+    pad = (-P) % tp
+    if pad:
+        codes_fp = jnp.pad(codes_fp, ((0, 0), (0, pad)), constant_values=n_bins - 1)
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))  # zero weights: no effect
+    Pp = codes_fp.shape[1]
+    vals_p = jnp.pad(vals, ((0, 0), (0, _S_PAD - S))) if S < _S_PAD else vals
+    out = pl.pallas_call(
+        _hist_kernel,
+        grid=(F, Pp // tp),
+        in_specs=[
+            pl.BlockSpec((1, tp), lambda f, p: (f, p)),
+            pl.BlockSpec((tp, _S_PAD), lambda f, p: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_bins, _S_PAD), lambda f, p: (f, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, n_bins, _S_PAD), vals.dtype),
+        interpret=interpret,
+    )(codes_fp, vals_p)
+    return out[:, :, :S]

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the histsplit kernel (matches the numpy-side
+signature used by ``repro.trees.cart``)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import histograms_kernel_call
+
+__all__ = ["histograms"]
+
+
+def histograms(codes, w, wy, wy2, n_bins: int):
+    """codes: (P, F) uint8/int; w/wy/wy2: (P,). Returns (F, n_bins, 3) f32."""
+    codes_fp = jnp.asarray(np.asarray(codes).T, jnp.int32)       # (F, P)
+    vals = jnp.stack([jnp.asarray(w, jnp.float32),
+                      jnp.asarray(wy, jnp.float32),
+                      jnp.asarray(wy2, jnp.float32)], axis=1)    # (P, 3)
+    return histograms_kernel_call(codes_fp, vals, n_bins)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for split-histogram building."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["histograms_ref"]
+
+
+def histograms_ref(codes: jnp.ndarray, w: jnp.ndarray, wy: jnp.ndarray,
+                   wy2: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """(F, n_bins, 3) sums of (w, wy, wy2) per feature x bin.
+
+    codes: (P, F) integer bin ids; w/wy/wy2: (P,).
+    """
+    onehot = (codes[..., None] == jnp.arange(n_bins)[None, None, :]).astype(w.dtype)
+    vals = jnp.stack([w, wy, wy2], axis=1)                   # (P, 3)
+    return jnp.einsum("pfb,ps->fbs", onehot, vals)

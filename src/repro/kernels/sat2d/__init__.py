@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import sat2d, scan_rows
+
+__all__ = ["ops", "ref", "sat2d", "scan_rows"]

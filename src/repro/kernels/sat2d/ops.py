@@ -1,0 +1,33 @@
+"""Jit'd public wrappers for the sat2d kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sat2d, scan_rows
+
+__all__ = ["sat", "sat_moments"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sat(x: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """Summed-area table of a 2D array."""
+    return sat2d(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sat_moments(y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """(3, n, m) integral images of (1, y, y^2): the coreset prefix stats.
+
+    The three channels are folded into the row axis so both scan passes run
+    as single kernel launches ((3n, m) row scan; (m, 3n) per-channel column
+    scan via a channel-blocked layout)."""
+    n, m = y.shape
+    stk = jnp.stack([jnp.ones_like(y), y, y * y], axis=0)   # (3, n, m)
+    r = scan_rows(stk.reshape(3 * n, m), interpret=interpret).reshape(3, n, m)
+    # column pass: transpose each channel, fold channels into rows again
+    rt = r.transpose(0, 2, 1).reshape(3 * m, n)
+    c = scan_rows(rt, interpret=interpret).reshape(3, m, n).transpose(0, 2, 1)
+    return c

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the 2D summed-area table (integral image)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["sat2d_ref", "sat_moments_ref"]
+
+
+def sat2d_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive 2D prefix sum of a (n, m) array."""
+    return jnp.cumsum(jnp.cumsum(x, axis=0), axis=1)
+
+
+def sat_moments_ref(y: jnp.ndarray) -> jnp.ndarray:
+    """(3, n, m) integral images of (1, y, y^2) — the coreset's prefix stats."""
+    stk = jnp.stack([jnp.ones_like(y), y, y * y], axis=0)
+    return jnp.cumsum(jnp.cumsum(stk, axis=1), axis=2)

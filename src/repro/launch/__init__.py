@@ -1,0 +1,6 @@
+# Launch layer. NOTE: dryrun must be imported as a MAIN MODULE
+# (python -m repro.launch.dryrun) so its XLA_FLAGS line runs before jax
+# initializes; do not import it from here.
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,87 @@
+"""Batched serving driver: prefill + decode with a KV/SSM cache.
+
+A minimal continuous-batching front: requests accumulate into a fixed-size
+batch; prefill runs once per batch (right-padded), then the decode loop
+samples until max_new_tokens.  Runs reduced configs on CPU; on a real mesh
+the same code pjit-shards via the cache/batch specs.
+
+  python -m repro.launch.serve --arch qwen2-0.5b --reduced --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced_config
+from repro.models import decode_step, forward, init_cache, init_params
+
+__all__ = ["generate", "main"]
+
+
+def generate(cfg, params, prompts: np.ndarray, max_new_tokens: int,
+             temperature: float = 1.0, seed: int = 0,
+             greedy: bool = False) -> np.ndarray:
+    """prompts: (B, Lp) int32 (right-aligned, no padding support needed for
+    the synthetic demo).  Returns (B, Lp + max_new_tokens)."""
+    B, Lp = prompts.shape
+    max_len = Lp + max_new_tokens
+    cache = init_cache(cfg, B, max_len)
+
+    # prefill: teacher-forced pass through the decode path to fill the cache
+    # (keeps one compiled step; production prefill uses the chunked forward)
+    dec = jax.jit(lambda p, c, b: decode_step(cfg, p, c, b))
+    toks = jnp.asarray(prompts, jnp.int32)
+    logits = None
+    for t in range(Lp):
+        logits, cache = dec(params, cache, {"tokens": toks[:, t:t + 1]})
+
+    rng = jax.random.PRNGKey(seed)
+    out = [toks]
+    cur = None
+    for i in range(max_new_tokens):
+        lf = logits[:, -1].astype(jnp.float32)
+        if greedy or temperature <= 0:
+            cur = jnp.argmax(lf, axis=-1).astype(jnp.int32)[:, None]
+        else:
+            rng, k = jax.random.split(rng)
+            cur = jax.random.categorical(k, lf / temperature).astype(jnp.int32)[:, None]
+        out.append(cur)
+        logits, cache = dec(params, cache, {"tokens": cur})
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    if cfg.frontend == "audio_codebooks":
+        raise SystemExit("use the musicgen example for codebook decoding")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len),
+                           dtype=np.int32)
+    t0 = time.time()
+    out = generate(cfg, params, prompts, args.new_tokens,
+                   temperature=args.temperature)
+    dt = time.time() - t0
+    total_new = args.batch * args.new_tokens
+    print(f"[serve] arch={cfg.name} generated {out.shape} "
+          f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
+    print(out[:, args.prompt_len:][:2])
+
+
+if __name__ == "__main__":
+    main()

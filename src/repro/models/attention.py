@@ -1,0 +1,267 @@
+"""Attention: GQA (+bias), MLA (DeepSeek-V2), chunked-flash XLA path, decode.
+
+Three execution paths:
+  * ``chunked_attention``: pure-JAX flash attention — lax.scan over KV chunks
+    with an online softmax.  O(L * chunk) live memory, compact HLO (the path
+    the 512-device dry-run compiles; 32k prefill would need the O(L^2) score
+    matrix otherwise).
+  * ``repro.kernels.flash_attention``: the Pallas TPU kernel (real-hardware
+    path; numerically identical — validated in tests).
+  * decode: single-query attention against a KV cache (memory-bound einsum).
+
+MLA implements the *absorbed* decode of the DeepSeek-V2 paper: the per-head
+K/V up-projections fold into the query/output projections so decode attends
+directly over the (kv_lora + rope) compressed cache — the whole point of MLA
+serving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, rope
+
+__all__ = ["init_gqa", "gqa_forward", "gqa_decode", "init_mla", "mla_forward",
+           "mla_decode", "chunked_attention"]
+
+_NEG = -1e30
+
+
+# ------------------------------------------------------ chunked flash (XLA)
+def chunked_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
+                      k_chunk: int = 1024, impl: str = "xla",
+                      unroll: bool = False):
+    """q: (B, Hq, Lq, D); k/v: (B, Hkv, Lk, D).  Online-softmax scan over KV
+    chunks, vmapped-free (einsum keeps GQA head groups implicit via repeat on
+    the fly).  Returns (B, Hq, Lq, D).
+
+    ``unroll=True`` replaces the chunk scans with python loops — used only by
+    the dry-run costing lowers, because XLA's cost analysis counts a while
+    body once (see launch/dryrun.py)."""
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal)
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                      # MLA: v head dim != qk head dim
+    group = Hq // Hkv
+    scale = 1.0 / D ** 0.5
+    q_offset = Lk - Lq
+
+    qc = min(q_chunk, Lq)
+    kc = min(k_chunk, Lk)
+    pad_q = (-Lq) % qc
+    pad_k = (-Lk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq, nk = qp.shape[2] // qc, kp.shape[2] // kc
+    # (nk, B, Hkv, kc, D)
+    ks = jnp.moveaxis(kp.reshape(B, Hkv, nk, kc, D), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(B, Hkv, nk, kc, Dv), 2, 0)
+
+    def q_block(qi, q_blk):
+        # q_blk: (B, Hq, qc, D)
+        def kv_step(carry, inp):
+            m, l, acc, kj = carry[0], carry[1], carry[2], carry[3]
+            k_blk, v_blk = inp
+            if group > 1:
+                k_blk = jnp.repeat(k_blk, group, axis=1)
+                v_blk = jnp.repeat(v_blk, group, axis=1)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk).astype(jnp.float32) * scale
+            ki = kj * kc + jnp.arange(kc)[None, :]
+            if causal:
+                qi_abs = qi * qc + jnp.arange(qc)[:, None] + q_offset
+                mask = (ki <= qi_abs) & (ki < Lk)
+            else:
+                mask = jnp.broadcast_to(ki < Lk, (qc, kc))
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk).astype(jnp.float32)
+            return (m_new, l_new, acc_new, kj + 1), None
+
+        init = (jnp.full((B, Hq, qc), _NEG, jnp.float32),
+                jnp.zeros((B, Hq, qc), jnp.float32),
+                jnp.zeros((B, Hq, qc, Dv), jnp.float32),
+                jnp.zeros((), jnp.int32))
+        if unroll:
+            carry = init
+            for j in range(nk):
+                carry, _ = kv_step(carry, (ks[j], vs[j]))
+            m, l, acc = carry[0], carry[1], carry[2]
+        else:
+            # checkpoint each KV step: backward recomputes the (qc, kc)
+            # score tile instead of saving it (flash-attention backward) —
+            # peak live memory drops from O(L^2) to O(qc * kc) per layer.
+            (m, l, acc, _), _ = jax.lax.scan(jax.checkpoint(kv_step), init,
+                                             (ks, vs))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    qs = jnp.moveaxis(qp.reshape(B, Hq, nq, qc, D), 2, 0)
+    if unroll:
+        out = jnp.stack([q_block(jnp.asarray(i), qs[i]) for i in range(nq)])
+    else:
+        out = jax.lax.map(jax.checkpoint(lambda t: q_block(t[0], t[1])),
+                          (jnp.arange(nq), qs))        # (nq, B, Hq, qc, Dv)
+    out = jnp.moveaxis(out, 0, 2).reshape(B, Hq, nq * qc, Dv)
+    return out[:, :, :Lq]
+
+
+# ---------------------------------------------------------------------- GQA
+def init_gqa(key, cfg) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, d, (H, hd), dt, bias=cfg.qkv_bias),
+        "wk": init_linear(k2, d, (Hkv, hd), dt, bias=cfg.qkv_bias),
+        "wv": init_linear(k3, d, (Hkv, hd), dt, bias=cfg.qkv_bias),
+        "wo": init_linear(k4, H * hd, d, dt, scale=(H * hd) ** -0.5),
+    }
+
+
+def gqa_forward(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                attn_impl: str = "xla", return_kv: bool = False,
+                unroll: bool = False):
+    """x: (B, L, d). Returns (B, L, d) (+ optional (k, v) for prefill)."""
+    B, L, _ = x.shape
+    q = linear(p["wq"], x)                        # (B, L, H, hd)
+    k = linear(p["wk"], x)
+    v = linear(p["wv"], x)
+    q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    o = chunked_attention(q, k, v, causal=True, impl=attn_impl, unroll=unroll,
+                          q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, -1)
+    out = linear(p["wo"], o)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray):
+    """One-token decode. x: (B, 1, d); cache: {"k","v"}: (B, Hkv, S, hd),
+    pos: () int32 current position. Returns (out, cache)."""
+    B = x.shape[0]
+    q = linear(p["wq"], x).transpose(0, 2, 1, 3)          # (B, H, 1, hd)
+    k1 = linear(p["wk"], x).transpose(0, 2, 1, 3)         # (B, Hkv, 1, hd)
+    v1 = linear(p["wv"], x).transpose(0, 2, 1, 3)
+    posv = jnp.full((B, 1, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k1 = rope(k1, posv, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                      (0, 0, pos, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                      (0, 0, pos, 0))
+    S = ck.shape[2]
+    group = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(ck, group, axis=1) if group > 1 else ck
+    vv = jnp.repeat(cv, group, axis=1) if group > 1 else cv
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) / cfg.hd ** 0.5
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vv)
+    out = linear(p["wo"], o.transpose(0, 2, 1, 3).reshape(B, 1, -1))
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------- MLA
+def init_mla(key, cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 6)
+    p = {
+        "wkv_a": init_linear(ks[0], d, r_kv + dr, dt),
+        "kv_norm": {"scale": jnp.ones((r_kv,), dt)},
+        "wk_b": init_linear(ks[1], r_kv, (H, dn), dt),
+        "wv_b": init_linear(ks[2], r_kv, (H, dv), dt),
+        "wo": init_linear(ks[3], H * dv, d, dt, scale=(H * dv) ** -0.5),
+    }
+    if r_q:
+        p["wq_a"] = init_linear(ks[4], d, r_q, dt)
+        p["q_norm"] = {"scale": jnp.ones((r_q,), dt)}
+        p["wq_b"] = init_linear(ks[5], r_q, (H, dn + dr), dt)
+    else:
+        p["wq"] = init_linear(ks[4], d, (H, dn + dr), dt)
+    return p
+
+
+def _mla_q(p, cfg, x, positions):
+    from .layers import rms_norm
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if "wq_a" in p:
+        q = linear(p["wq_b"], rms_norm(p["q_norm"], linear(p["wq_a"], x), cfg.norm_eps))
+    else:
+        q = linear(p["wq"], x)
+    q = q.transpose(0, 2, 1, 3)                            # (B, H, L, dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                attn_impl: str = "xla", return_kv: bool = False,
+                unroll: bool = False):
+    from .layers import rms_norm
+    B, L, _ = x.shape
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    kv = linear(p["wkv_a"], x)                              # (B, L, r_kv + dr)
+    c_kv = rms_norm(p["kv_norm"], kv[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(kv[..., None, cfg.kv_lora_rank:].transpose(0, 2, 1, 3),
+                  positions[:, None, :], cfg.rope_theta)    # (B, 1, L, dr)
+    k_nope = linear(p["wk_b"], c_kv).transpose(0, 2, 1, 3)  # (B, H, L, dn)
+    v = linear(p["wv_b"], c_kv).transpose(0, 2, 1, 3)       # (B, H, L, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_nope.shape[:3] + (dr,))],
+                        axis=-1)
+    o = chunked_attention(q, k, v, causal=True, impl=attn_impl, unroll=unroll,
+                          q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    out = linear(p["wo"], o.transpose(0, 2, 1, 3).reshape(B, L, -1))
+    if return_kv:
+        # the compressed latent IS the cache (MLA's point)
+        return out, (c_kv, k_rope[:, 0])
+    return out
+
+
+def mla_decode(p: dict, cfg, x: jnp.ndarray, cache: dict, pos: jnp.ndarray):
+    """Absorbed-matmul decode over the compressed cache.
+    cache: {"c_kv": (B, S, r_kv), "k_rope": (B, S, dr)}."""
+    from .layers import rms_norm
+    B = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    H, r_kv = cfg.n_heads, cfg.kv_lora_rank
+    posv = jnp.full((B, 1, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, jnp.full((B, 1), pos, jnp.int32))
+    kv = linear(p["wkv_a"], x)                              # (B, 1, r_kv+dr)
+    c_new = rms_norm(p["kv_norm"], kv[..., :r_kv], cfg.norm_eps)
+    kr_new = rope(kv[..., None, r_kv:].transpose(0, 2, 1, 3), posv,
+                  cfg.rope_theta)[:, 0]                     # (B, 1, dr)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype),
+                                        (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
+                                          (0, pos, 0))
+    # absorb wk_b into q: q' (B, H, 1, r_kv)
+    q_abs = jnp.einsum("bhqn,rhn->bhqr", q_nope, p["wk_b"]["w"].reshape(r_kv, H, dn))
+    s = (jnp.einsum("bhqr,bsr->bhqs", q_abs, c_kv)
+         + jnp.einsum("bhqr,bsr->bhqs", q_rope, k_rope)).astype(jnp.float32)
+    s = s / (dn + dr) ** 0.5
+    S = c_kv.shape[1]
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    w = jax.nn.softmax(jnp.where(mask, s, _NEG), axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bhqr", w.astype(c_kv.dtype), c_kv)  # (B,H,1,r)
+    # absorb wv_b into the output projection
+    o = jnp.einsum("bhqr,rhv->bhqv", ctx, p["wv_b"]["w"].reshape(r_kv, H, dv))
+    out = linear(p["wo"], o.transpose(0, 2, 1, 3).reshape(B, 1, -1))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,330 @@
+"""Model assembly: init / forward / prefill / decode for every arch family.
+
+One decoder skeleton covers the pool:
+
+  dense / vlm / audio:  [norm -> attention -> norm -> SwiGLU] x L
+  moe (incl. MLA):      [norm -> attention|MLA -> norm -> MoE] x L
+  ssm:                  [norm -> Mamba1] x L                  (no MLP, falcon)
+  hybrid (zamba2):      [norm -> Mamba2] x L, with one *shared* GQA block
+                        applied every cfg.attn_every layers
+
+Layers are stacked along a leading axis and executed with ``lax.scan``
+(+ ``jax.checkpoint`` on the body when cfg.remat): the HLO stays one
+layer-body + loop, which is what keeps 94-layer/512-device dry-run compiles
+tractable, and remat bounds live activation memory.
+
+Modality frontends are stubs per the brief: pixtral consumes precomputed
+patch embeddings concatenated before the text tokens; musicgen sums
+``n_codebooks`` embedding tables and emits per-codebook heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (embed, init_embed, init_linear, init_rmsnorm, init_swiglu,
+                     linear, rms_norm, swiglu)
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "Model"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ================================================================== layer init
+def _init_layer(key, cfg) -> dict:
+    """One decoder layer's params (unstacked)."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": init_rmsnorm(cfg.d_model, dt)}
+    if cfg.family == "ssm":
+        p["mixer"] = ssm_mod.init_mamba1(ks[0], cfg) if cfg.mamba_version == 1 \
+            else ssm_mod.init_mamba2(ks[0], cfg)
+        return p
+    if cfg.family == "hybrid":
+        p["mixer"] = ssm_mod.init_mamba2(ks[0], cfg) if cfg.mamba_version == 2 \
+            else ssm_mod.init_mamba1(ks[0], cfg)
+        return p
+    # attention families
+    p["attn"] = attn.init_mla(ks[0], cfg) if cfg.is_mla else attn.init_gqa(ks[0], cfg)
+    p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+    if cfg.is_moe:
+        p["mlp"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(cfg, rng) -> dict:
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_head, k_shared = jax.random.split(rng, 4)
+    p: dict = {}
+    if cfg.frontend == "audio_codebooks":
+        p["embed"] = {"table": jax.vmap(
+            lambda k: init_embed(k, cfg.vocab, cfg.d_model, dt)["table"])(
+            jax.random.split(k_emb, cfg.n_codebooks))}
+        p["head"] = init_linear(k_head, cfg.d_model, (cfg.n_codebooks, cfg.vocab),
+                                dt, scale=cfg.d_model ** -0.5)
+    else:
+        p["embed"] = init_embed(k_emb, cfg.vocab, cfg.d_model, dt)
+        p["head"] = init_linear(k_head, cfg.d_model, cfg.vocab, dt,
+                                scale=cfg.d_model ** -0.5)
+    # stacked layers (vmapped init -> leading L axis on every leaf)
+    p["layers"] = jax.vmap(lambda k: _init_layer(k, cfg))(
+        jax.random.split(k_layers, cfg.n_layers))
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p["shared_attn"] = attn.init_gqa(k_shared, cfg)
+        p["shared_ln"] = init_rmsnorm(cfg.d_model, dt)
+    p["final_ln"] = init_rmsnorm(cfg.d_model, dt)
+    return p
+
+
+# ================================================================ embeddings
+def embed_inputs(cfg, params, batch: dict) -> jnp.ndarray:
+    """batch -> (B, L, d) hidden states (modality stubs resolved here)."""
+    if cfg.frontend == "audio_codebooks":
+        # tokens: (B, L, n_codebooks) -> summed codebook embeddings
+        return _codebook_embed(params["embed"]["table"], batch["tokens"])
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        # decode steps carry no patch embeddings (image is in the cache)
+        txt = embed(params["embed"], batch["tokens"])            # (B, Lt, d)
+        return jnp.concatenate(
+            [batch["patch_embeds"].astype(txt.dtype), txt], axis=1)
+    return embed(params["embed"], batch["tokens"])
+
+
+def _codebook_embed(table: jnp.ndarray, toks: jnp.ndarray) -> jnp.ndarray:
+    """table: (C, V, d); toks: (B, L, C) -> sum_c table[c, toks[..., c]]."""
+    C = table.shape[0]
+    parts = [jnp.take(table[c], toks[..., c], axis=0) for c in range(C)]
+    return sum(parts)
+
+
+# ==================================================================== forward
+def _layer_apply(cfg, lp, x, positions, attn_impl, unroll=False):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        mix = ssm_mod.mamba1_forward if cfg.mamba_version == 1 else ssm_mod.mamba2_forward
+        x = x + mix(lp["mixer"], cfg, rms_norm(lp["ln1"], x, cfg.norm_eps),
+                    unroll=unroll)
+        return x, aux
+    h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.is_mla:
+        x = x + attn.mla_forward(lp["attn"], cfg, h, positions, attn_impl,
+                                 unroll=unroll)
+    else:
+        x = x + attn.gqa_forward(lp["attn"], cfg, h, positions, attn_impl,
+                                 unroll=unroll)
+    h2 = rms_norm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_forward(lp["mlp"], cfg, h2)
+        x = x + y
+    else:
+        x = x + swiglu(lp["mlp"], h2)
+    return x, aux
+
+
+def forward(cfg, params, batch: dict, attn_impl: str = "xla",
+            unroll: bool = False, return_hidden: bool = False) -> tuple:
+    """-> (logits, aux_loss), or (hidden, aux_loss) with return_hidden=True
+    (training uses the hidden states + a chunked fused CE so the full
+    (B, L, V) logits are never materialized).  batch: {"tokens": ...}
+    (+ frontend inputs).
+
+    ``unroll=True`` replaces every scan (layers + sequence chunks) with
+    python loops — dry-run costing only (see launch/dryrun.py).
+    """
+    x = embed_inputs(cfg, params, batch)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    shared = params.get("shared_attn")
+
+    def shared_apply(x):
+        h = rms_norm(params["shared_ln"], x, cfg.norm_eps)
+        return x + attn.gqa_forward(shared, cfg, h, positions, attn_impl,
+                                    unroll=unroll)
+
+    if unroll:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = _layer_apply(cfg, lp, x, positions, attn_impl, unroll=True)
+            aux = aux + a
+            if shared is not None and cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                x = shared_apply(x)
+    else:
+        def body(carry, scanned):
+            x, aux, idx = carry
+            lp = scanned
+            x, a = _layer_apply(cfg, lp, x, positions, attn_impl)
+            if shared is not None and cfg.attn_every:
+                x = jax.lax.cond((idx + 1) % cfg.attn_every == 0, shared_apply,
+                                 lambda x: x, x)
+            return (x, aux + a, idx + 1), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux, _), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32),
+                                                jnp.zeros((), jnp.int32)),
+                                      params["layers"])
+    x = rms_norm(params["final_ln"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    logits = linear(params["head"], x)
+    return logits, aux
+
+
+# ===================================================================== decode
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    """Per-layer stacked cache pytree (leading L axis, scanned in decode)."""
+    dt = _dtype(cfg)
+    L = cfg.n_layers
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        di = cfg.d_inner
+        if cfg.mamba_version == 1:
+            layer = {"conv": jnp.zeros((L, batch_size, cfg.ssm_conv - 1, di), dt),
+                     "h": jnp.zeros((L, batch_size, di, cfg.ssm_state), jnp.float32)}
+        else:
+            layer = {"conv": jnp.zeros((L, batch_size, cfg.ssm_conv - 1, di), dt),
+                     "S": jnp.zeros((L, batch_size, cfg.ssm_heads, cfg.ssm_state,
+                                     cfg.mamba_headdim), jnp.float32)}
+        cache = {"layers": layer, "pos": jnp.zeros((), jnp.int32)}
+        if cfg.family == "hybrid" and cfg.attn_every:
+            n_shared = cfg.n_layers // cfg.attn_every
+            cache["shared"] = {
+                "k": jnp.zeros((n_shared, batch_size, cfg.n_kv_heads, max_len, cfg.hd), dt),
+                "v": jnp.zeros((n_shared, batch_size, cfg.n_kv_heads, max_len, cfg.hd), dt)}
+        return cache
+    if cfg.is_mla:
+        layer = {"c_kv": jnp.zeros((L, batch_size, max_len, cfg.kv_lora_rank), dt),
+                 "k_rope": jnp.zeros((L, batch_size, max_len, cfg.qk_rope_dim), dt)}
+    else:
+        layer = {"k": jnp.zeros((L, batch_size, cfg.n_kv_heads, max_len, cfg.hd), dt),
+                 "v": jnp.zeros((L, batch_size, cfg.n_kv_heads, max_len, cfg.hd), dt)}
+    return {"layers": layer, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg, params, cache: dict, batch: dict,
+                unroll: bool = False) -> tuple:
+    """One new token for every sequence. batch["tokens"]: (B, 1) (or
+    (B, 1, C) for audio). Returns (logits, new_cache)."""
+    x = embed_inputs(cfg, params, batch)
+    B = x.shape[0]
+    pos = cache["pos"]
+
+    shared = params.get("shared_attn")
+    shared_cache = cache.get("shared")
+
+    if cfg.family in ("ssm", "hybrid"):
+        def ssm_layer(x, sc, lp, lc, idx_static=None, idx_dyn=None):
+            mix = ssm_mod.mamba1_decode if cfg.mamba_version == 1 else ssm_mod.mamba2_decode
+            y, lc_new = mix(lp["mixer"], cfg, rms_norm(lp["ln1"], x, cfg.norm_eps), lc)
+            x = x + y
+
+            def with_attn(op):
+                x, sc = op
+                idx = idx_static if idx_static is not None else idx_dyn
+                si = (idx + 1) // cfg.attn_every - 1
+                h = rms_norm(params["shared_ln"], x, cfg.norm_eps)
+                layer_sc = jax.tree.map(lambda a: a[si], sc)
+                y, new_sc = attn.gqa_decode(shared, cfg, h, layer_sc, pos)
+                sc = jax.tree.map(lambda a, b: a.at[si].set(b), sc, new_sc)
+                return (x + y, sc)
+
+            if shared is not None and cfg.attn_every:
+                if idx_static is not None:
+                    if (idx_static + 1) % cfg.attn_every == 0:
+                        x, sc = with_attn((x, sc))
+                else:
+                    x, sc = jax.lax.cond((idx_dyn + 1) % cfg.attn_every == 0,
+                                         with_attn, lambda op: op, (x, sc))
+            return x, sc, lc_new
+
+        if unroll:
+            new_lc = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                lc = jax.tree.map(lambda a: a[i], cache["layers"])
+                x, shared_cache, lc_new = ssm_layer(x, shared_cache, lp, lc,
+                                                    idx_static=i)
+                new_lc.append(lc_new)
+            new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_lc)
+        else:
+            def body(carry, scanned):
+                x, sc, idx = carry
+                lp, lc = scanned
+                x, sc, lc_new = ssm_layer(x, sc, lp, lc, idx_dyn=idx)
+                return (x, sc, idx + 1), lc_new
+
+            (x, shared_cache, _), new_layers = jax.lax.scan(
+                body, (x, shared_cache, jnp.zeros((), jnp.int32)),
+                (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers, "pos": pos + 1}
+        if shared_cache is not None:
+            new_cache["shared"] = shared_cache
+    else:
+        def attn_layer(x, lp, lc):
+            h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+            if cfg.is_mla:
+                y, lc_new = attn.mla_decode(lp["attn"], cfg, h, lc, pos)
+            else:
+                y, lc_new = attn.gqa_decode(lp["attn"], cfg, h, lc, pos)
+            x = x + y
+            h2 = rms_norm(lp["ln2"], x, cfg.norm_eps)
+            if cfg.is_moe:
+                y2, _ = moe_mod.moe_forward(lp["mlp"], cfg, h2)
+            else:
+                y2 = swiglu(lp["mlp"], h2)
+            return x + y2, lc_new
+
+        if unroll:
+            new_lc = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                lc = jax.tree.map(lambda a: a[i], cache["layers"])
+                x, lc_new = attn_layer(x, lp, lc)
+                new_lc.append(lc_new)
+            new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_lc)
+        else:
+            def body(carry, scanned):
+                lp, lc = scanned
+                return attn_layer(carry, lp, lc)
+
+            x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers, "pos": pos + 1}
+
+    x = rms_norm(params["final_ln"], x, cfg.norm_eps)
+    logits = linear(params["head"], x)
+    return logits, new_cache
+
+
+def prefill(cfg, params, batch: dict, attn_impl: str = "xla",
+            unroll: bool = False):
+    """Prefill = forward pass producing logits (cache omitted: the dry-run
+    measures prefill compute; decode shapes carry the cache)."""
+    return forward(cfg, params, batch, attn_impl, unroll=unroll)
+
+
+class Model:
+    """Convenience OO wrapper over the functional API."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    def apply(self, params, batch, attn_impl: str = "xla"):
+        return forward(self.cfg, params, batch, attn_impl)
+
+    def decode(self, params, cache, batch):
+        return decode_step(self.cfg, params, cache, batch)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return init_cache(self.cfg, batch_size, max_len)

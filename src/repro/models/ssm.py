@@ -1,0 +1,248 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD), + decode.
+
+Both use the chunked formulation that TPU likes (DESIGN.md §4): the
+sequence is cut into chunks of Q steps; within a chunk the recurrence is
+evaluated in parallel (associative scan for Mamba1's diagonal dynamics,
+matmul-form SSD for Mamba2's scalar-per-head dynamics — the latter runs on
+the MXU), and a single (state)-sized carry crosses chunk boundaries via
+lax.scan.  Live memory is O(Q * d_inner * state / TP-shards) instead of
+O(L * ...), and the HLO stays compact for the 512-device dry-run.
+
+Decode is the O(1) recurrent update (conv window + state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, truncated_normal
+
+__all__ = ["init_mamba1", "mamba1_forward", "mamba1_decode",
+           "init_mamba2", "mamba2_forward", "mamba2_decode"]
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ===================================================================== Mamba1
+def init_mamba1(key, cfg) -> dict:
+    d, di, s = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dt),
+        "conv": truncated_normal(ks[1], (di, cfg.ssm_conv), cfg.ssm_conv ** -0.5, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_linear(ks[2], di, dt_rank + 2 * s, dt),
+        "dt_proj": init_linear(ks[3], dt_rank, di, dt, bias=True),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, s + 1, dtype=jnp.float32), (di, s))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, d, dt, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b, window: int):
+    """x: (B, L, di); depthwise causal conv along L (shift-and-scale form:
+    window is tiny, so W shifted adds beat a conv op for layout)."""
+    xp = jnp.pad(x, ((0, 0), (window - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i][None, None, :]
+              for i in range(window))
+    return out + b[None, None, :]
+
+
+def _mamba1_ssm_chunked(dA, dBx, C, chunk: int, unroll: bool = False):
+    """Diagonal linear recurrence h_t = dA_t * h_{t-1} + dBx_t, y_t = <C_t, h_t>.
+
+    dA, dBx: (B, L, di, s); C: (B, L, s).  Chunked associative scan.
+    """
+    B, L, di, s = dA.shape
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nq = dA.shape[1] // Q
+    dA_c = jnp.moveaxis(dA.reshape(B, nq, Q, di, s), 1, 0)
+    dBx_c = jnp.moveaxis(dBx.reshape(B, nq, Q, di, s), 1, 0)
+    C_c = jnp.moveaxis(C.reshape(B, nq, Q, s), 1, 0)
+
+    def chunk_step(h0, inp):
+        a, bx, c = inp                                  # (B,Q,di,s),(B,Q,s)
+        # within-chunk associative scan of (a, b) pairs
+        def combine(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+        aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h = hh + aa * h0[:, None]                        # inject carry
+        y = jnp.einsum("bqds,bqs->bqd", h, c)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, di, s), dA.dtype)
+    if unroll:
+        ys_list, h = [], h0
+        for i in range(nq):
+            h, y_i = chunk_step(h, (dA_c[i], dBx_c[i], C_c[i]))
+            ys_list.append(y_i)
+        ys = jnp.stack(ys_list)
+    else:
+        # checkpoint per chunk: backward recomputes the (Q, di, s) intra-
+        # chunk states instead of saving them for every chunk.
+        _, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, (dA_c, dBx_c, C_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nq * Q, di)
+    return y[:, :L] if pad else y
+
+
+def mamba1_forward(p: dict, cfg, x: jnp.ndarray, unroll: bool = False):
+    """x: (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    di, s = cfg.d_inner, cfg.ssm_state
+    xz = linear(p["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = jax.nn.silu(_causal_conv(xin, p["conv"], p["conv_b"], cfg.ssm_conv))
+    proj = linear(p["x_proj"], xin)
+    dt_rank = max(d // 16, 1)
+    dt_raw = linear(p["dt_proj"], proj[..., :dt_rank])
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32))          # (B, L, di)
+    Bmat = proj[..., dt_rank:dt_rank + s].astype(jnp.float32)    # (B, L, s)
+    Cmat = proj[..., dt_rank + s:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                     # (di, s)
+    dA = jnp.exp(delta[..., None] * A[None, None])               # (B, L, di, s)
+    dBx = (delta * xin.astype(jnp.float32))[..., None] * Bmat[:, :, None, :]
+    y = _mamba1_ssm_chunked(dA, dBx, Cmat, cfg.ssm_chunk, unroll=unroll)
+    y = y + p["D"][None, None] * xin.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return linear(p["out_proj"], y)
+
+
+def mamba1_decode(p: dict, cfg, x: jnp.ndarray, cache: dict):
+    """One-step recurrence. x: (B, 1, d); cache: {"conv": (B, W-1, di),
+    "h": (B, di, s)}. Returns (y, cache)."""
+    B = x.shape[0]
+    d, di, s = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    W = cfg.ssm_conv
+    xz = linear(p["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+    win = jnp.concatenate([cache["conv"], xin], axis=1)          # (B, W, di)
+    conv_out = jnp.einsum("bwd,dw->bd", win, p["conv"]) + p["conv_b"]
+    xc = jax.nn.silu(conv_out)[:, None, :]                        # (B, 1, di)
+    proj = linear(p["x_proj"], xc)
+    dt_rank = max(d // 16, 1)
+    delta = jax.nn.softplus(linear(p["dt_proj"], proj[..., :dt_rank]).astype(jnp.float32))
+    Bmat = proj[..., dt_rank:dt_rank + s].astype(jnp.float32)
+    Cmat = proj[..., dt_rank + s:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(delta[:, 0, :, None] * A[None])                  # (B, di, s)
+    h = cache["h"] * dA + (delta[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * Bmat[:, 0, None, :]
+    y = jnp.einsum("bds,bs->bd", h, Cmat[:, 0]) + p["D"][None] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return linear(p["out_proj"], y), {"conv": win[:, 1:], "h": h}
+
+
+# ===================================================================== Mamba2
+def init_mamba2(key, cfg) -> dict:
+    d, di, s = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dt),            # x and z
+        "bc_proj": init_linear(ks[1], d, 2 * s + H, dt),         # B, C, dt
+        "conv": truncated_normal(ks[2], (di, cfg.ssm_conv), cfg.ssm_conv ** -0.5, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": init_linear(ks[3], di, d, dt, scale=di ** -0.5),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+    }
+
+
+def mamba2_forward(p: dict, cfg, x: jnp.ndarray, unroll: bool = False):
+    """SSD (chunked matmul) forward. x: (B, L, d) -> (B, L, d)."""
+    B, L, d = x.shape
+    di, s, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.mamba_headdim
+    xz = linear(p["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = jax.nn.silu(_causal_conv(xin, p["conv"], p["conv_b"], cfg.ssm_conv))
+    bc = linear(p["bc_proj"], x)
+    Bm = bc[..., :s].astype(jnp.float32)                          # (B, L, s)
+    Cm = bc[..., s:2 * s].astype(jnp.float32)
+    dt_raw = bc[..., 2 * s:].astype(jnp.float32) + p["dt_bias"]
+    delta = jax.nn.softplus(dt_raw)                               # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    a = jnp.exp(delta * A[None, None])                            # (B, L, H) decay
+    xh = xin.reshape(B, L, H, P).astype(jnp.float32)
+    xd = xh * delta[..., None]                                    # Δ-scaled input
+
+    Q = min(cfg.ssm_chunk, L)
+    pad = (-L) % Q
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nq = a.shape[1] // Q
+
+    a_c = jnp.moveaxis(a.reshape(B, nq, Q, H), 1, 0)
+    x_c = jnp.moveaxis(xd.reshape(B, nq, Q, H, P), 1, 0)
+    B_c = jnp.moveaxis(Bm.reshape(B, nq, Q, s), 1, 0)
+    C_c = jnp.moveaxis(Cm.reshape(B, nq, Q, s), 1, 0)
+
+    def chunk_step(S0, inp):
+        av, xv, bv, cv = inp          # (B,Q,H) (B,Q,H,P) (B,Q,s) (B,Q,s)
+        la = jnp.log(jnp.maximum(av, 1e-30))
+        cum = jnp.cumsum(la, axis=1)                              # (B,Q,H)
+        # intra-chunk: Gamma[i,j] = prod_{r=j+1..i} a_r  (i >= j)
+        gam = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])    # (B,Qi,Qj,H)
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        gam = jnp.where(mask[None, :, :, None], gam, 0.0)
+        cb = jnp.einsum("bis,bjs->bij", cv, bv)                   # (B,Qi,Qj)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, gam, xv)
+        # carry-in contribution: C_i (prod_{r<=i} a) S0
+        dec = jnp.exp(cum)                                        # (B,Q,H)
+        y_carry = jnp.einsum("bis,bih,bhsp->bihp", cv, dec, S0)
+        # next state: S = a_total * S0 + sum_j (prod_{r>j} a) B_j x_j^T
+        rev = jnp.exp(cum[:, -1:, :] - cum)                       # (B,Q,H)
+        S_new = dec[:, -1][:, :, None, None] * S0 + jnp.einsum(
+            "bjs,bjh,bjhp->bhsp", bv, rev, xv)
+        return S_new, y_intra + y_carry
+
+    S0 = jnp.zeros((B, H, s, P), jnp.float32)
+    if unroll:
+        ys_list, S = [], S0
+        for i in range(nq):
+            S, y_i = chunk_step(S, (a_c[i], x_c[i], B_c[i], C_c[i]))
+            ys_list.append(y_i)
+        ys = jnp.stack(ys_list)
+    else:
+        # checkpoint per chunk (see mamba1): the (Q, Q, H) decay tensor is
+        # recomputed in backward, not saved per chunk.
+        _, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0, (a_c, x_c, B_c, C_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nq * Q, H, P)[:, :L]
+    y = y + p["D"][None, None, :, None] * xh
+    y = (y.reshape(B, L, di).astype(x.dtype)) * jax.nn.silu(z)
+    return linear(p["out_proj"], y)
+
+
+def mamba2_decode(p: dict, cfg, x: jnp.ndarray, cache: dict):
+    """cache: {"conv": (B, W-1, di), "S": (B, H, s, P)}."""
+    B = x.shape[0]
+    di, s, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.mamba_headdim
+    xz = linear(p["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+    win = jnp.concatenate([cache["conv"], xin], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bwd,dw->bd", win, p["conv"]) + p["conv_b"])
+    bc = linear(p["bc_proj"], x)[:, 0]
+    Bm = bc[:, :s].astype(jnp.float32)
+    Cm = bc[:, s:2 * s].astype(jnp.float32)
+    delta = jax.nn.softplus(bc[:, 2 * s:].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(delta * (-jnp.exp(p["A_log"]))[None])             # (B, H)
+    xh = xc.reshape(B, H, P).astype(jnp.float32) * delta[..., None]
+    S = cache["S"] * a[:, :, None, None] + jnp.einsum("bs,bhp->bhsp", Bm, xh)
+    y = jnp.einsum("bhsp,bs->bhp", S, Cm) + p["D"][None, :, None] \
+        * xc.reshape(B, H, P).astype(jnp.float32)
+    y = (y.reshape(B, 1, di).astype(x.dtype)) * jax.nn.silu(z)
+    return linear(p["out_proj"], y), {"conv": win[:, 1:], "S": S}

@@ -1,0 +1,302 @@
+"""Logical sharding rules: param/optimizer/cache/batch PartitionSpecs.
+
+Axis semantics of the production mesh (launch/mesh.py):
+  "pod"   — data parallel across pods (slow DCN links; grad sync crosses it)
+  "data"  — data parallel within a pod
+  "model" — tensor/expert parallel (attention heads, ffn hidden, experts,
+            mamba inner channels, vocab)
+
+Rules are path-based with divisibility guards: a dim is sharded only when
+divisible by the mesh axis size (e.g. granite's kv=1 head stays replicated —
+the realistic MQA serving layout).  ZeRO-1: optimizer-state leaves get their
+first still-replicated divisible dim sharded over "data" on top of the param
+layout.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
+           "named", "data_axes"]
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, name) -> int:
+    # mesh.shape is an axis-name -> size mapping for both Mesh and
+    # AbstractMesh (the latter lets spec logic run without real devices)
+    return dict(mesh.shape).get(name, 1)
+
+
+def named(mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], msize: int) -> P:
+    """Param sharding for one leaf, identified by its dict path."""
+    p = list(path)
+    stacked = p and p[0] == "layers"
+    off = 1 if stacked else 0           # leading L axis of scanned stacks
+
+    def spec(*axes):
+        return P(*([None] * off + list(axes)))
+
+    name = p[-1]
+    parent = p[-2] if len(p) >= 2 else ""
+    gparent = p[-3] if len(p) >= 3 else ""
+    dims = shape[off:]
+
+    def model_if(idx: int):
+        axes = [None] * len(dims)
+        if _div(dims[idx], msize):
+            axes[idx] = "model"
+        return spec(*axes)
+
+    # ---- embeddings / head ------------------------------------------------
+    if parent == "embed" and name == "table":
+        return model_if(len(dims) - 2)            # vocab dim (C, V, d) or (V, d)
+    if parent == "head" and name == "w":
+        return model_if(len(dims) - 1)            # (d, V) or (d, C, V)
+    if parent == "head" and name == "b":
+        return model_if(len(dims) - 1)
+
+    # ---- norms / scalars ---------------------------------------------------
+    if name in ("scale",) or parent in ("ln1", "ln2", "final_ln", "kv_norm",
+                                        "q_norm", "shared_ln"):
+        return spec(*([None] * len(dims)))
+
+    # ---- attention ----------------------------------------------------------
+    if gparent in ("attn", "shared_attn") or parent in ("attn", "shared_attn") \
+            or (stacked and len(p) >= 2 and p[1] == "attn") \
+            or path[0] == "shared_attn":
+        if parent in ("wq", "wk", "wv", "wq_b", "wk_b", "wv_b"):
+            if name == "w":                       # (d|r, H, hd)
+                sp = model_if(1)
+                if sp == spec(None, None, None) and len(dims) == 3:
+                    return model_if(2)            # odd head counts: shard hd
+                return sp
+            sp = model_if(0)                      # bias (H, hd)
+            if sp == spec(None, None) and len(dims) == 2:
+                return model_if(1)
+            return sp
+        if parent == "wo" and name == "w":        # (H*hd, d)
+            return model_if(0)
+        if parent in ("wq_a", "wkv_a"):
+            return spec(*([None] * len(dims)))    # low-rank stems replicated
+        return spec(*([None] * len(dims)))
+
+    # ---- MoE ------------------------------------------------------------------
+    if parent == "router":
+        return spec(*([None] * len(dims)))
+    if name in ("wi", "wg", "wo") and len(dims) == 3 and parent == "mlp":
+        return model_if(0)                        # (E, d, ff) expert dim -> EP
+    if gparent == "shared" or parent == "shared":
+        # shared experts: dense SwiGLU layout
+        if parent in ("wi", "wg") and name == "w":
+            return model_if(1)
+        if parent == "wo" and name == "w":
+            return model_if(0)
+        return spec(*([None] * len(dims)))
+
+    # ---- dense MLP ---------------------------------------------------------------
+    if gparent == "mlp" or parent == "mlp":
+        if parent in ("wi", "wg") and name == "w":    # (d, ff)
+            return model_if(1)
+        if parent == "wo" and name == "w":            # (ff, d)
+            return model_if(0)
+        return spec(*([None] * len(dims)))
+
+    # ---- mamba ------------------------------------------------------------------
+    if parent == "mixer" or gparent == "mixer":
+        if parent == "in_proj" and name == "w":       # (d, 2*di)
+            return model_if(1)
+        if parent == "out_proj" and name == "w":      # (di, d)
+            return model_if(0)
+        if parent == "x_proj" and name == "w":        # (di, k)
+            return model_if(0)
+        if parent == "dt_proj":
+            if name == "w":                            # (dt_rank, di)
+                return model_if(1)
+            return model_if(0)                         # bias (di,)
+        if name == "conv":                             # (di, W)
+            return model_if(0)
+        if name in ("conv_b", "D") and len(dims) == 1:
+            return model_if(0)
+        if name == "A_log":                            # (di, s) or (H,)
+            return model_if(0)
+        if name == "dt_bias":
+            return model_if(0)
+        if parent == "bc_proj":
+            return spec(*([None] * len(dims)))         # small (d, 2s+H)
+        return spec(*([None] * len(dims)))
+
+    return spec(*([None] * len(dims)))
+
+
+def _paths_and_shapes(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = tuple(getattr(k, "key", getattr(k, "idx", str(k))) for k in kp)
+        out.append((path, tuple(leaf.shape)))
+    return out, treedef
+
+
+def param_specs(params_shapes, mesh, serve: bool = False,
+                expert_2d: bool = False, layout: str = "tp"):
+    """PartitionSpec tree matching a params (shapes) tree.
+
+    ``serve=True`` / ``expert_2d=True``: expert tensors additionally shard
+    their d_model axis over the data axis (2D weight sharding; the MoE
+    einsum re-gathers per use) — what fits a 236B MoE on 256 x 16 GiB chips
+    (serving always; training as the FSDP-style §Perf lever).
+
+    ``layout="dp"``: replicate all weights; the model axis is given to the
+    batch instead (see batch_specs(include_model=True)) — the right layout
+    for small models where TP activation psums dominate (§Perf, qwen2).
+    """
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    flat, treedef = _paths_and_shapes(params_shapes)
+
+    def leaf(path, shape):
+        if layout == "dp":
+            return P(*([None] * len(shape)))
+        spec = _leaf_spec(path, shape, msize)
+        if (serve or expert_2d) and path[-1] in ("wi", "wg", "wo") \
+                and len(shape) == 4 and path[-2] == "mlp" \
+                and spec == P(None, "model", None, None):
+            # stacked expert weights (L, E, d, ff)/(L, E, ff, d): shard the
+            # wider inner axis over data
+            inner = 2 if shape[2] >= shape[3] else 3
+            if _div(shape[inner], dsize):
+                axes = [None, "model", None, None]
+                axes[inner] = "data"
+                return P(*axes)
+        if layout == "fsdp":
+            # ZeRO-3: every big param also shards a replicated dim over
+            # "data" (XLA re-gathers per use; grads reduce-scatter back)
+            n = 1
+            for s in shape:
+                n *= s
+            axes = list(spec) + [None] * (len(shape) - len(spec))
+            if n >= 1 << 20 and "data" not in axes:
+                for i in range(len(shape) - 1, -1, -1):
+                    if axes[i] is None and _div(shape[i], dsize) \
+                            and shape[i] >= dsize:
+                        axes[i] = "data"
+                        return P(*axes)
+        return spec
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf(p, s) for p, s in flat])
+
+
+def opt_specs(params_shapes, mesh, zero1: bool = True,
+              expert_2d: bool = False, layout: str = "tp"):
+    """Optimizer-state specs: master/m/v mirror the param layout; under
+    ZeRO-1 the first still-replicated divisible dim also shards over "data"
+    (and over "model" too in the pure-DP layout, where weights are
+    replicated and the optimizer is the only sharded copy)."""
+    dsize = _axis_size(mesh, "data")
+    msize = _axis_size(mesh, "model")
+    pspecs = param_specs(params_shapes, mesh, expert_2d=expert_2d,
+                         layout=layout)
+
+    def zero1_spec(spec: P, shape: tuple[int, ...]) -> P:
+        if not zero1:
+            return spec
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        pending = [a for a in (["data"] + (["model"] if layout == "dp" else []))
+                   if a not in axes]    # an axis may appear only once
+        sizes = {"data": dsize, "model": msize}
+        for i in range(len(shape)):
+            if not pending:
+                break
+            ax = pending[0]
+            if axes[i] is None and _div(shape[i], sizes[ax]) and shape[i] >= sizes[ax]:
+                axes[i] = ax       # ZeRO-1: slice replicated dims over DP
+                pending.pop(0)
+        return P(*axes)
+
+    flat, treedef = _paths_and_shapes(params_shapes)
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    state_leaf_specs = jax.tree_util.tree_unflatten(
+        treedef, [zero1_spec(sp, sh) for (path, sh), sp in zip(flat, flat_p)])
+    return {
+        "master": state_leaf_specs,
+        "m": state_leaf_specs,
+        "v": state_leaf_specs,
+        "step": P(),
+    }
+
+
+def batch_specs(batch_shapes, mesh, include_model: bool = False):
+    """Batch dims shard over the DP axes when divisible (long_500k's B=1
+    stays replicated).  ``include_model=True``: pure-DP layout — the model
+    axis joins the batch sharding (weights replicated)."""
+    dp = data_axes(mesh)
+    if include_model and "model" in mesh.axis_names:
+        dp = dp + ("model",)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        if _div(leaf.shape[0], dp_size):
+            return P(dp, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh):
+    """KV/SSM cache: batch dim -> DP axes; head/channel dims -> model when
+    divisible.  Cache layouts (leading L stack axis):
+      k/v    (L, B, Hkv, S, hd)   model on Hkv
+      c_kv   (L, B, S, r)          replicated feature dim (MLA latent)
+      conv   (L, B, W-1, di)       model on di
+      h      (L, B, di, s)         model on di
+      S      (L, B, H, s, P)       model on H
+      shared k/v (Ns, B, Hkv, S, hd)
+    """
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+    msize = _axis_size(mesh, "model")
+    flat, treedef = _paths_and_shapes(cache_shapes)
+
+    def one(path, shape):
+        name = path[-1]
+        if name == "pos" or not shape:
+            return P()
+        axes: list = [None] * len(shape)
+        # batch axis is dim 1 for stacked entries
+        bdim = 1 if len(shape) >= 2 else 0
+        if _div(shape[bdim], dp_size):
+            axes[bdim] = dp
+        if name in ("k", "v") and len(shape) == 5:
+            if _div(shape[2], msize):
+                axes[2] = "model"          # KV heads
+            elif _div(shape[4], msize):
+                axes[4] = "model"          # MQA/odd-head serving: shard hd
+        elif name == "c_kv" and _div(shape[-1], msize):
+            axes[-1] = "model"             # MLA latent dim (512/16 = 32)
+        elif name == "conv" and _div(shape[-1], msize):
+            axes[-1] = "model"
+        elif name == "h" and _div(shape[2], msize):
+            axes[2] = "model"
+        elif name == "S" and _div(shape[2], msize):
+            axes[2] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, s) for p, s in flat])

@@ -1,0 +1,87 @@
+"""AdamW (hand-rolled, pytree-native) with fp32 master weights.
+
+State layout per parameter: {master fp32, m fp32, v fp32} — 12 bytes/param
+on top of the bf16 params.  Under ZeRO-1 (sharding/rules.py) the state tree
+is additionally sharded over the data axis, dividing that cost by |data|.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_apply", "global_norm",
+           "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def adamw_init(params) -> dict:
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        # copy=True: f32 params would otherwise alias the master buffer and
+        # break double donation in train_step
+        "master": jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                               params),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def adamw_apply(ocfg: AdamWConfig, grads, opt_state, params):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cosine_lr(ocfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m_new = ocfg.beta1 * m + (1 - ocfg.beta1) * g
+        v_new = ocfg.beta2 * v + (1 - ocfg.beta2) * g * g
+        mhat = m_new / (1 - ocfg.beta1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - ocfg.beta2 ** step.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + ocfg.eps) + ocfg.weight_decay * master
+        master_new = master - lr * upd
+        return m_new, v_new, master_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_w = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [w.astype(p.dtype) for w, p in zip([o[2] for o in out], flat_p)])
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,109 @@
+"""Training step: CE (+z-loss, +MoE aux), remat'd scan backward, AdamW,
+optional microbatch gradient accumulation.
+
+The step is a single pjit program: the data-parallel gradient all-reduce is
+inserted by SPMD partitioning (and overlapped by XLA's latency-hiding
+scheduler); microbatching amortizes it via a lax.scan accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from .optimizer import AdamWConfig, adamw_apply
+
+__all__ = ["cross_entropy", "loss_fn", "make_train_step"]
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  z_coef: float = 0.0):
+    """logits: (..., V) (extra codebook dims fold into ...); targets ints.
+
+    The true-class logit is extracted with an iota-compare masked sum (not a
+    gather): under vocab sharding each shard reduces its local slice and the
+    cross-shard psum is a scalar tree — no logits all-gather.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    V = lf.shape[-1]
+    onehot = targets[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, targets.shape + (V,), targets.ndim)
+    true = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = (lse - true).mean()
+    if z_coef:
+        nll = nll + z_coef * jnp.square(lse).mean()
+    return nll
+
+
+def chunked_xent(cfg, head_p, hidden: jnp.ndarray, targets: jnp.ndarray,
+                 n_chunks: int = 8, unroll: bool = False):
+    """Fused CE: the unembedding matmul runs per sequence-chunk inside the
+    loop, so only (B, L/n_chunks, V_shard) logits are ever live."""
+    from repro.models.layers import linear
+    B, L = hidden.shape[0], hidden.shape[1]
+    while L % n_chunks:
+        n_chunks //= 2
+    n_chunks = max(n_chunks, 1)
+    hs = jnp.moveaxis(hidden.reshape(B, n_chunks, L // n_chunks, *hidden.shape[2:]), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n_chunks, L // n_chunks, *targets.shape[2:]), 1, 0)
+
+    def one(h, t):
+        return cross_entropy(linear(head_p, h), t, cfg.z_loss_coef)
+
+    if unroll:
+        losses = jnp.stack([one(hs[i], ts[i]) for i in range(n_chunks)])
+    else:
+        losses = jax.lax.map(lambda ht: one(*ht), (hs, ts))
+    return losses.mean()
+
+
+def loss_fn(cfg, params, batch: dict, attn_impl: str = "xla",
+            unroll: bool = False):
+    hidden, aux = forward(cfg, params, batch, attn_impl=attn_impl,
+                          unroll=unroll, return_hidden=True)
+    loss = chunked_xent(cfg, params["head"], hidden, batch["targets"],
+                        unroll=unroll) + aux
+    return loss, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg, ocfg: AdamWConfig, attn_impl: str = "xla",
+                    num_microbatches: int = 1, unroll: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, attn_impl, unroll), has_aux=True)
+
+    def compute_grads(params, batch):
+        if num_microbatches <= 1:
+            (loss, met), grads = grad_fn(params, batch)
+            return loss, grads, met
+        # split batch leading dim into microbatches and accumulate
+        def split(x):
+            B = x.shape[0]
+            return x.reshape(num_microbatches, B // num_microbatches, *x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def acc_step(carry, mbatch):
+            loss_acc, grads_acc = carry
+            (loss, met), grads = grad_fn(params, mbatch)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, grads_acc, grads)), met
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads_sum), mets = jax.lax.scan(
+            acc_step, (jnp.zeros(()), zeros), mb)
+        inv = 1.0 / num_microbatches
+        return (loss_sum * inv,
+                jax.tree.map(lambda g: g * inv, grads_sum),
+                jax.tree.map(lambda m: m[-1], mets))
+
+    def train_step(params, opt_state, batch):
+        loss, grads, met = compute_grads(params, batch)
+        params, opt_state, opt_met = adamw_apply(ocfg, grads, opt_state, params)
+        metrics = {"loss": loss, **met, **opt_met}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,7 @@
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single device; only launch/dryrun.py forces 512 host devices.

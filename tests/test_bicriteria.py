@@ -1,0 +1,64 @@
+"""Lemma 5/10: the bi-criteria sigma must lower-bound opt_k(D)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bicriteria, optimal_tree_dp, segment_1d_dp
+
+
+@st.composite
+def tiny_signal(draw):
+    n = draw(st.integers(3, 7))
+    m = draw(st.integers(3, 7))
+    seed = draw(st.integers(0, 100_000))
+    rng = np.random.default_rng(seed)
+    kind = draw(st.sampled_from(["noise", "blocks", "smooth"]))
+    if kind == "noise":
+        return rng.normal(size=(n, m))
+    if kind == "smooth":
+        return np.add.outer(np.linspace(0, 1, n), np.linspace(0, 2, m))
+    y = np.zeros((n, m))
+    y[: n // 2] = rng.normal()
+    y[n // 2:] = rng.normal()
+    return y + 0.05 * rng.normal(size=(n, m))
+
+
+@settings(max_examples=25, deadline=None)
+@given(tiny_signal(), st.integers(1, 3))
+def test_sigma_lower_bounds_optimal_tree(y, k):
+    """opt over k-TREES >= opt over k-segmentations >= sigma.
+
+    (The DP oracle optimizes over trees; every tree is a segmentation, so
+    opt_tree >= opt_seg >= sigma must hold for certified sigma.)"""
+    res = bicriteria(y, k)
+    opt_tree, _ = optimal_tree_dp(y, k)
+    assert res.sigma <= opt_tree + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_sigma_lower_bounds_1d_dp(seed, k):
+    """Single-row signals: exact 1D k-segmentation DP as the oracle."""
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=(1, 24))
+    res = bicriteria(y, k)
+    opt, _ = segment_1d_dp(y[0], k)
+    assert res.sigma <= opt + 1e-6
+
+
+def test_paper_fidelity_mode_runs_to_completion():
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=(24, 18))
+    res = bicriteria(y, 2, fidelity="paper")
+    assert res.sigma >= 0.0
+    assert res.n_iterations >= 1
+
+
+def test_weighted_moments_path_matches_dense():
+    rng = np.random.default_rng(3)
+    y = rng.normal(size=(16, 12))
+    dense = bicriteria(y, 2)
+    mom = (np.ones_like(y), y, y * y)
+    viamom = bicriteria(None, 2, moments=mom)
+    assert np.isclose(dense.sigma, viamom.sigma)
+    assert dense.n_iterations == viamom.n_iterations

@@ -1,0 +1,61 @@
+"""Corollary 17: exact <=4-point moment representations."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import block_representatives, caratheodory_reduce
+
+
+@st.composite
+def blocks(draw):
+    n_blocks = draw(st.integers(1, 5))
+    sizes = [draw(st.integers(1, 40)) for _ in range(n_blocks)]
+    seed = draw(st.integers(0, 100_000))
+    rng = np.random.default_rng(seed)
+    style = draw(st.sampled_from(["normal", "constant", "two-valued", "heavy"]))
+    ys, bids = [], []
+    for b, sz in enumerate(sizes):
+        if style == "constant":
+            v = np.full(sz, rng.normal())
+        elif style == "two-valued":
+            v = rng.choice(rng.normal(size=2), size=sz)
+        elif style == "heavy":
+            v = rng.standard_cauchy(size=sz)
+        else:
+            v = rng.normal(size=sz)
+        ys.append(v)
+        bids.append(np.full(sz, b))
+    return np.concatenate(ys), np.concatenate(bids).astype(np.int64), n_blocks
+
+
+@settings(max_examples=80, deadline=None)
+@given(blocks())
+def test_exact_moments_nonneg_weights_support_in_block(case):
+    y, bid, nb = case
+    labels, weights, moments = block_representatives(y, bid, nb)
+    assert (weights >= 0).all()
+    assert labels.shape == (nb, 4) and weights.shape == (nb, 4)
+    for b in range(nb):
+        blk = y[bid == b]
+        scale = max(np.abs(blk).max(), 1.0)
+        # exact (M0, M1, M2) matching
+        assert np.isclose(weights[b].sum(), blk.size, rtol=1e-9)
+        assert np.isclose((weights[b] * labels[b]).sum(), blk.sum(),
+                          rtol=1e-7, atol=1e-7 * scale)
+        assert np.isclose((weights[b] * labels[b] ** 2).sum(), (blk ** 2).sum(),
+                          rtol=1e-6, atol=1e-6 * scale ** 2)
+        # support labels are labels of the block (C_B subset of B)
+        for lab in labels[b]:
+            assert np.isclose(np.abs(blk - lab).min(), 0.0, atol=1e-9 * scale)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(5, 30))
+def test_caratheodory_reduce_oracle(seed, n):
+    """The classic iterative elimination keeps weighted sums exactly."""
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=n)
+    P = np.stack([y, y * y, np.ones(n)], axis=1)
+    w = rng.uniform(0.1, 2.0, size=n)
+    keep, w2 = caratheodory_reduce(P, w)
+    assert keep.size <= 4
+    assert np.allclose(P[keep].T @ w2, P.T @ w, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,101 @@
+"""Theorem 8 / Definition 3: the (k, eps) guarantee, end to end.
+
+Three layers of evidence:
+  * piecewise-constant signals: sigma = 0 -> the coreset is EXACT for every
+    segmentation (zero-tolerance blocks);
+  * random/noisy signals: |loss_C(s) - loss_D(s)| <= eps * loss_D(s) for
+    random k-trees AND for near-optimal greedy trees (the adversarial case);
+  * mass/moment conservation invariants.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PrefixStats, fitting_loss, greedy_tree,
+                        random_tree_segmentation, signal_coreset, true_loss)
+from repro.data import piecewise_signal
+
+
+def rel_err(cs, y, seg, ps=None):
+    tl = true_loss(y, seg.rects, seg.labels, ps=ps)
+    cl = fitting_loss(cs, seg.rects, seg.labels)
+    return abs(cl - tl) / max(tl, 1e-12), tl
+
+
+def test_piecewise_constant_coreset_is_exact():
+    """opt_k(D) = 0 -> certified sigma = 0 -> zero-tolerance blocks -> the
+    coreset reproduces every segmentation loss exactly.  (The default
+    sigma_mode="auto" adds a heuristic floor from the greedy tree and is
+    near-exact only; certified mode has the hard guarantee.)"""
+    rng = np.random.default_rng(0)
+    y = piecewise_signal(48, 64, 6, noise=0.0, seed=1)
+    cs = signal_coreset(y, 6, 0.3, sigma_mode="certified")
+    ps = PrefixStats.build(y)
+    for t in range(10):
+        q = random_tree_segmentation(48, 64, 6, rng)
+        tl = true_loss(y, q.rects, q.labels, ps=ps)
+        cl = fitting_loss(cs, q.rects, q.labels)
+        assert np.isclose(cl, tl, rtol=1e-9, atol=1e-6), (cl, tl)
+
+
+@pytest.mark.parametrize("eps", [0.4, 0.2, 0.1])
+@pytest.mark.parametrize("k,n,m,noise", [(10, 120, 150, 0.1),
+                                         (40, 150, 120, 0.25)])
+def test_eps_guarantee_random_and_greedy_trees(eps, k, n, m, noise):
+    rng = np.random.default_rng(7)
+    y = piecewise_signal(n, m, k, noise=noise, seed=5)
+    cs = signal_coreset(y, k, eps)
+    ps = PrefixStats.build(y)
+    errs = []
+    for _ in range(12):
+        q = random_tree_segmentation(n, m, k, rng)
+        e, _ = rel_err(cs, y, q, ps)
+        errs.append(e)
+    g = greedy_tree(ps, k)
+    ge, _ = rel_err(cs, y, g, ps)
+    assert max(errs) <= eps, f"random-tree err {max(errs)} > eps {eps}"
+    assert ge <= eps, f"greedy-tree err {ge} > eps {eps}"
+
+
+def test_mass_and_moment_conservation():
+    y = piecewise_signal(60, 60, 8, noise=0.2, seed=2)
+    cs = signal_coreset(y, 8, 0.25)
+    assert np.isclose(cs.total_mass(), 3600)
+    assert np.allclose(cs.weights.sum(1), cs.moments[:, 0])
+    assert np.allclose((cs.weights * cs.labels).sum(1), cs.moments[:, 1],
+                       atol=1e-6)
+    assert np.allclose((cs.weights * cs.labels ** 2).sum(1), cs.moments[:, 2],
+                       atol=1e-5)
+    # the constant-fit loss of the whole signal is reproduced exactly
+    whole = np.array([[0, 60, 0, 60]])
+    mu = np.array([y.mean()])
+    assert np.isclose(fitting_loss(cs, whole, mu),
+                      true_loss(y, whole, mu), rtol=1e-9)
+
+
+def test_size_shrinks_with_eps():
+    y = piecewise_signal(150, 150, 12, noise=0.15, seed=3)
+    sizes = [signal_coreset(y, 12, e).size for e in (0.1, 0.2, 0.4)]
+    assert sizes[0] >= sizes[1] >= sizes[2]
+
+
+def test_masked_construction_only_counts_observed_cells():
+    rng = np.random.default_rng(4)
+    y = piecewise_signal(40, 50, 5, noise=0.1, seed=6)
+    mask = rng.uniform(size=y.shape) < 0.7
+    cs = signal_coreset(y, 5, 0.3, mask=mask)
+    assert np.isclose(cs.total_mass(), mask.sum())
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1000))
+def test_guarantee_property_random_signals(seed):
+    """Pure-noise signals (no structure at all), eps = 0.3."""
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=(64, 80))
+    k, eps = 6, 0.3
+    cs = signal_coreset(y, k, eps)
+    ps = PrefixStats.build(y)
+    q = random_tree_segmentation(64, 80, k, rng)
+    e, _ = rel_err(cs, y, q, ps)
+    assert e <= eps

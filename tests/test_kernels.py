@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret=True) vs pure-jnp refs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fitting_loss import ops as fl_ops, ref as fl_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.histsplit import ops as h_ops, ref as h_ref
+from repro.kernels.sat2d import ops as sat_ops, ref as sat_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (130, 70), (256, 256), (1, 300),
+                                   (257, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_sat2d_shapes_dtypes(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    got = sat_ops.sat(x)
+    want = sat_ref.sat2d_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-3)
+
+
+def test_sat_moments_channels():
+    y = jnp.asarray(RNG.normal(size=(90, 40)), jnp.float32)
+    got = sat_ops.sat_moments(y)
+    want = sat_ref.sat_moments_ref(y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-3)
+
+
+@pytest.mark.parametrize("P,F,B", [(64, 1, 16), (700, 5, 32), (1030, 3, 256)])
+def test_histsplit_sweep(P, F, B):
+    codes = RNG.integers(0, B, size=(P, F)).astype(np.uint8)
+    w = RNG.uniform(0.1, 2, P)
+    y = RNG.normal(size=P)
+    got = np.asarray(h_ops.histograms(codes, w, w * y, w * y * y, B))
+    want = np.asarray(h_ref.histograms_ref(
+        jnp.asarray(codes.astype(np.int32)), jnp.asarray(w, jnp.float32),
+        jnp.asarray(w * y, jnp.float32), jnp.asarray(w * y * y, jnp.float32), B))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # histogram totals preserve mass
+    np.testing.assert_allclose(got[:, :, 0].sum(axis=1), w.sum(), rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Lq,Lk,D", [
+    (2, 4, 4, 64, 64, 32),     # MHA
+    (2, 4, 2, 100, 100, 32),   # GQA
+    (1, 8, 1, 96, 96, 64),     # MQA
+    (2, 4, 2, 1, 64, 32),      # decode
+    (1, 2, 2, 300, 300, 16),   # padded tiles
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, Hq, Hkv, Lq, Lk, D, causal):
+    if Lq == 1 and not causal:
+        pytest.skip("non-causal decode not used")
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Lq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Lk, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Lk, D)), jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, causal=causal)
+    want = fa_ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 64, 32)), jnp.bfloat16)
+    got = np.asarray(fa_ops.flash_attention(q, k, v).astype(jnp.float32))
+    want = np.asarray(fa_ref.attention_ref(q, k, v).astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_fitting_loss_kernel_matches_core_and_ref():
+    from repro.core import fitting_loss, random_tree_segmentation, signal_coreset
+    from repro.data import piecewise_signal
+    y = piecewise_signal(60, 70, 6, noise=0.2, seed=0)
+    cs = signal_coreset(y, 6, 0.3)
+    rng = np.random.default_rng(1)
+    for k in (3, 9):
+        q = random_tree_segmentation(60, 70, k, rng)
+        core = fitting_loss(cs, q.rects, q.labels)
+        kern = float(fl_ops.coreset_loss(cs, q.rects, q.labels))
+        ref = float(fl_ref.fitting_loss_ref(
+            jnp.asarray(cs.rects, jnp.float32), jnp.asarray(cs.labels, jnp.float32),
+            jnp.asarray(cs.weights, jnp.float32),
+            jnp.asarray(q.rects, jnp.float32), jnp.asarray(q.labels, jnp.float32)))
+        assert abs(kern - core) / core < 1e-3
+        assert abs(ref - core) / core < 1e-3
+
+
+def test_model_chunked_attention_matches_pallas_kernel():
+    """The XLA chunked-flash path (dry-run) == the Pallas kernel (TPU path)."""
+    from repro.models.attention import chunked_attention
+    q = jnp.asarray(RNG.normal(size=(2, 4, 128, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)), jnp.float32)
+    xla = chunked_attention(q, k, v, causal=True, q_chunk=64, k_chunk=32)
+    pal = chunked_attention(q, k, v, causal=True, impl="pallas")
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                               rtol=2e-3, atol=2e-3)

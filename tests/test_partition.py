@@ -1,0 +1,70 @@
+"""Algorithms 1-2: slice partition and balanced partition invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PrefixStats, balanced_partition, slice_partition
+
+
+def naive_slice_partition(ps, r0, r1, sigma):
+    """The paper's linear greedy scan (reference for the binary search)."""
+    m = ps.shape[1]
+    out = []
+    c0 = 0
+    while c0 < m:
+        if ps.opt1(r0, r1, c0, c0 + 1) > sigma:
+            rr = r0
+            while rr < r1:
+                re = rr + 1
+                while re < r1 and ps.opt1(rr, re + 1, c0, c0 + 1) <= sigma:
+                    re += 1
+                out.append((rr, re, c0, c0 + 1))
+                rr = re
+            c0 += 1
+        else:
+            ce = c0 + 1
+            while ce < m and ps.opt1(r0, r1, c0, ce + 1) <= sigma:
+                ce += 1
+            out.append((r0, r1, c0, ce))
+            c0 = ce
+    return out
+
+
+@st.composite
+def small_signal(draw):
+    n = draw(st.integers(2, 10))
+    m = draw(st.integers(2, 14))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.sampled_from([0.1, 1.0, 5.0]))
+    return rng.normal(size=(n, m)) * scale
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_signal(), st.sampled_from([0.0, 0.05, 0.5, 5.0, 100.0]))
+def test_slice_partition_matches_naive_greedy(y, sigma):
+    ps = PrefixStats.build(y)
+    n = y.shape[0]
+    got = slice_partition(ps, 0, n, sigma)
+    ref = naive_slice_partition(ps, 0, n, sigma)
+    assert got == ref
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_signal(), st.sampled_from([0.0, 0.1, 1.0, 20.0]),
+       st.integers(1, 8))
+def test_balanced_partition_tiles_and_respects_tolerance(y, tol, max_slices):
+    ps = PrefixStats.build(y)
+    part = balanced_partition(ps, tol, max_slices)
+    n, m = y.shape
+    raster = part.block_id_raster(n, m)        # raises if not a tiling
+    assert raster.min() >= 0
+    r = part.rects
+    opt1s = ps.opt1(r[:, 0], r[:, 1], r[:, 2], r[:, 3])
+    assert (opt1s <= tol + 1e-9).all()
+
+
+def test_balanced_partition_constant_signal_is_one_block():
+    y = np.full((20, 30), 3.25)
+    ps = PrefixStats.build(y)
+    part = balanced_partition(ps, 0.0, 16)
+    assert part.num_blocks == 1

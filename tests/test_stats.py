@@ -1,0 +1,88 @@
+"""PrefixStats: O(1) rectangle moments vs brute force; monotone opt1."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PrefixStats, opt1_from_sums
+
+
+def brute_opt1(y, r0, r1, c0, c1, mask=None):
+    blk = y[r0:r1, c0:c1]
+    if mask is not None:
+        sel = mask[r0:r1, c0:c1]
+        blk = blk[sel]
+    blk = np.asarray(blk, float).ravel()
+    if blk.size == 0:
+        return 0.0
+    return float(((blk - blk.mean()) ** 2).sum())
+
+
+@st.composite
+def signal_and_rect(draw):
+    n = draw(st.integers(2, 12))
+    m = draw(st.integers(2, 12))
+    y = draw(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                      min_size=n * m, max_size=n * m))
+    y = np.asarray(y, np.float64).reshape(n, m)
+    r0 = draw(st.integers(0, n - 1)); r1 = draw(st.integers(r0 + 1, n))
+    c0 = draw(st.integers(0, m - 1)); c1 = draw(st.integers(c0 + 1, m))
+    return y, (r0, r1, c0, c1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(signal_and_rect())
+def test_opt1_matches_bruteforce(case):
+    y, (r0, r1, c0, c1) = case
+    ps = PrefixStats.build(y)
+    assert np.isclose(ps.opt1(r0, r1, c0, c1), brute_opt1(y, r0, r1, c0, c1),
+                      rtol=1e-8, atol=1e-6)
+    assert np.isclose(ps.opt1_scalar(r0, r1, c0, c1),
+                      brute_opt1(y, r0, r1, c0, c1), rtol=1e-8, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(signal_and_rect())
+def test_opt1_monotone_in_extension(case):
+    """The property the binary-search greedy relies on."""
+    y, (r0, r1, c0, c1) = case
+    ps = PrefixStats.build(y)
+    m = y.shape[1]
+    vals = [float(ps.opt1(r0, r1, c0, c)) for c in range(c0 + 1, m + 1)]
+    assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+def test_masked_and_weighted_moments():
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=(9, 7))
+    mask = rng.uniform(size=(9, 7)) < 0.6
+    ps = PrefixStats.build(y, mask=mask)
+    assert np.isclose(ps.opt1(0, 9, 0, 7), brute_opt1(y, 0, 9, 0, 7, mask))
+    s0, s1, s2 = ps.sums(2, 8, 1, 6)
+    sel = mask[2:8, 1:6]
+    assert np.isclose(s0, sel.sum())
+    assert np.isclose(s1, y[2:8, 1:6][sel].sum())
+
+
+def test_transpose_consistency():
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=(6, 11))
+    ps = PrefixStats.build(y)
+    pt = ps.transpose()
+    assert np.isclose(ps.opt1(1, 5, 2, 9), pt.opt1(2, 9, 1, 5))
+
+
+def test_max_col_extent_matches_linear_scan():
+    rng = np.random.default_rng(2)
+    y = rng.normal(size=(5, 40)) * np.linspace(0.1, 3, 40)[None, :]
+    ps = PrefixStats.build(y)
+    for sigma in (0.1, 1.0, 10.0, 100.0):
+        for c0 in (0, 7, 33):
+            got = ps.max_col_extent(0, 5, c0, sigma)
+            # linear reference
+            ref = c0
+            for c in range(c0 + 1, 41):
+                if ps.opt1(0, 5, c0, c) <= sigma:
+                    ref = c
+                else:
+                    break
+            assert got == ref

@@ -1,0 +1,51 @@
+"""Merge-reduce: compose / recompress / streaming / sharded construction."""
+import numpy as np
+
+from repro.core import (StreamingBuilder, fitting_loss, random_tree_segmentation,
+                        recompress, sharded_coreset, signal_coreset, true_loss)
+from repro.data import piecewise_signal
+
+
+def _err(cs, y, seg):
+    tl = true_loss(y, seg.rects, seg.labels)
+    return abs(fitting_loss(cs, seg.rects, seg.labels) - tl) / max(tl, 1e-12)
+
+
+def test_compose_equals_union_semantics():
+    rng = np.random.default_rng(0)
+    y = piecewise_signal(80, 60, 6, noise=0.15, seed=0)
+    cs = sharded_coreset(y, 6, 0.3, num_bands=4)
+    assert np.isclose(cs.total_mass(), y.size)
+    for _ in range(6):
+        q = random_tree_segmentation(80, 60, 6, rng)
+        assert _err(cs, y, q) <= 0.3
+
+
+def test_recompress_shrinks_and_keeps_guarantee():
+    rng = np.random.default_rng(1)
+    y = piecewise_signal(90, 70, 8, noise=0.2, seed=1)
+    cs = sharded_coreset(y, 8, 0.3, num_bands=6, share_tolerance=False)
+    rc = recompress(cs)
+    assert rc.size <= cs.size
+    assert np.isclose(rc.total_mass(), y.size)
+    q = random_tree_segmentation(90, 70, 8, rng)
+    assert _err(rc, y, q) <= 0.6   # two eps layers of merge-reduce
+
+
+def test_streaming_builder_bounded_and_accurate():
+    rng = np.random.default_rng(2)
+    y = piecewise_signal(120, 50, 6, noise=0.15, seed=2)
+    sb = StreamingBuilder(m=50, k=6, eps=0.3)
+    for i in range(0, 120, 20):
+        sb.insert_band(y[i:i + 20])
+    cs = sb.result()
+    assert np.isclose(cs.total_mass(), y.size)
+    q = random_tree_segmentation(120, 50, 6, rng)
+    assert _err(cs, y, q) <= 0.6
+
+
+def test_shared_tolerance_matches_single_build_size():
+    y = piecewise_signal(100, 80, 10, noise=0.2, seed=3)
+    full = signal_coreset(y, 10, 0.3)
+    sh = sharded_coreset(y, 10, 0.3, num_bands=4)   # share_tolerance=True
+    assert sh.size <= 3 * full.size

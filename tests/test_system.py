@@ -1,0 +1,52 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline contract, exercised through the public API exactly as a user
+would: compress once -> train/tune/evaluate many times -> results match the
+full data within eps.
+"""
+import numpy as np
+
+from repro.core import (fitting_loss, random_tree_segmentation, signal_coreset,
+                        signal_coreset_to_size, true_loss)
+from repro.data import patch_mask, piecewise_signal, sensor_matrix
+from repro.trees import RandomForestRegressor, tune_k
+
+
+def test_end_to_end_compress_train_evaluate():
+    """quickstart flow: coreset -> Algorithm-5 queries -> forest training."""
+    y = piecewise_signal(150, 200, k=15, noise=0.15, seed=0)
+    cs = signal_coreset(y, k=15, eps=0.4)
+    assert cs.compression_ratio() < 0.15
+
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        q = random_tree_segmentation(150, 200, 15, rng)
+        tl = true_loss(y, q.rects, q.labels)
+        assert abs(fitting_loss(cs, q.rects, q.labels) - tl) <= 0.4 * tl
+
+    Xc, yc, wc = cs.as_points()
+    f = RandomForestRegressor(n_estimators=3, max_leaves=32).fit(
+        Xc, yc, sample_weight=wc)
+    # forest trained on the summary predicts the signal
+    from repro.trees import signal_to_points
+    Xf, yf = signal_to_points(y)
+    mse = float(((f.predict(Xf) - yf) ** 2).mean())
+    assert mse < float(np.var(yf)) * 0.5
+
+
+def test_end_to_end_automl_pipeline():
+    """§5 flow: missing-value protocol + tune k on the compression."""
+    y = sensor_matrix(800, 15, seed=1)
+    train, test = patch_mask(*y.shape, 0.3, 5, seed=2)
+    res = tune_k(y, train, test, ks=[8, 64], coreset_k=32, target_frac=0.05,
+                 n_estimators=3)
+    # curves ordered the same way on full data and on the coreset
+    full = res.losses["full"]
+    core = res.losses["coreset"]
+    assert (full[0] > full[1]) == (core[0] > core[1])
+
+
+def test_size_targeting():
+    y = piecewise_signal(200, 200, k=20, noise=0.2, seed=3)
+    cs = signal_coreset_to_size(y, 20, 0.02)
+    assert cs.compression_ratio() <= 0.02 * 1.05

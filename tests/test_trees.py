@@ -1,0 +1,78 @@
+"""Weighted CART / forest / GBDT solvers."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.trees import (DecisionTreeRegressor, GradientBoostingRegressor,
+                         RandomForestRegressor)
+
+
+def test_cart_fits_axis_separable_data_exactly():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(size=(500, 2))
+    y = np.where(X[:, 0] > 0.5, np.where(X[:, 1] > 0.3, 3.0, -1.0), 0.5)
+    t = DecisionTreeRegressor(max_leaves=8).fit(X, y)
+    assert np.abs(t.predict(X) - y).max() < 1e-9
+    assert t.n_leaves <= 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_weighted_equals_duplicated(seed):
+    """Integer sample weights == literal row duplication (CART invariance)."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(size=(60, 2))
+    y = rng.normal(size=60)
+    w = rng.integers(1, 4, size=60)
+    from repro.trees import apply_bins, quantile_bins
+    edges = quantile_bins(X, 64)          # shared binning (duplication would
+    codes = apply_bins(X, edges)          # otherwise shift the quantiles)
+    t_w = DecisionTreeRegressor(max_leaves=6, max_bins=64).fit(
+        X, y, sample_weight=w.astype(float), bins=(edges, codes))
+    Xd = np.repeat(X, w, axis=0)
+    yd = np.repeat(y, w)
+    t_d = DecisionTreeRegressor(max_leaves=6, max_bins=64).fit(
+        Xd, yd, bins=(edges, np.repeat(codes, w, axis=0)))
+    q = rng.uniform(size=(40, 2))
+    assert np.allclose(t_w.predict(q), t_d.predict(q), atol=1e-9)
+
+
+def test_max_leaves_budget_respected():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(size=(400, 3))
+    y = rng.normal(size=400)
+    for k in (2, 5, 17):
+        t = DecisionTreeRegressor(max_leaves=k).fit(X, y)
+        assert t.n_leaves <= k
+
+
+def test_leaf_rectangles_tile_the_domain():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 10, size=(300, 2))
+    y = np.sin(X[:, 0]) + X[:, 1]
+    t = DecisionTreeRegressor(max_leaves=9).fit(X, y)
+    rects, vals = t.leaf_rectangles(np.zeros(2), np.full(2, 10.0))
+    area = sum((r[2] - r[0]) * (r[3] - r[1]) for r in rects)
+    assert np.isclose(area, 100.0)
+    assert len(vals) == t.n_leaves
+
+
+def test_forest_and_gbdt_reduce_loss():
+    rng = np.random.default_rng(3)
+    X = rng.uniform(size=(800, 2))
+    y = np.sin(5 * X[:, 0]) * np.cos(3 * X[:, 1]) + 0.05 * rng.normal(size=800)
+    base = ((y - y.mean()) ** 2).mean()
+    f = RandomForestRegressor(n_estimators=8, max_leaves=32, random_state=0).fit(X, y)
+    g = GradientBoostingRegressor(n_estimators=20, max_leaves=8).fit(X, y)
+    assert ((f.predict(X) - y) ** 2).mean() < 0.3 * base
+    assert ((g.predict(X) - y) ** 2).mean() < 0.3 * base
+
+
+def test_histogram_jax_backend_matches_numpy():
+    rng = np.random.default_rng(4)
+    X = rng.uniform(size=(300, 2))
+    y = np.where(X[:, 0] > 0.4, 1.0, -2.0) + 0.01 * rng.normal(size=300)
+    t_np = DecisionTreeRegressor(max_leaves=5, max_bins=32).fit(X, y)
+    t_jx = DecisionTreeRegressor(max_leaves=5, max_bins=32,
+                                 hist_backend="jax").fit(X, y)
+    q = rng.uniform(size=(50, 2))
+    assert np.allclose(t_np.predict(q), t_jx.predict(q), atol=1e-4)

@@ -1,0 +1,27 @@
+"""§5 protocol integration: tuning on coreset vs uniform vs full (small)."""
+import numpy as np
+
+from repro.data import patch_mask, piecewise_signal, sensor_matrix
+from repro.trees import signal_to_points, tune_k
+
+
+def test_tune_k_end_to_end_quality_parity():
+    y = sensor_matrix(600, 15, seed=0)
+    train, test = patch_mask(*y.shape, 0.3, 5, seed=1)
+    res = tune_k(y, train, test, ks=[8, 32], eps=0.4, coreset_k=64,
+                 n_estimators=3)
+    assert set(res.losses) == {"full", "coreset", "uniform"}
+    assert res.sizes["coreset"] < res.sizes["full"]
+    assert res.sizes["uniform"] == res.sizes["coreset"]
+    # coreset-trained quality within 2x of full-data quality (tiny forests;
+    # the benchmark suite measures the real curves)
+    assert min(res.losses["coreset"]) <= 2.0 * min(res.losses["full"])
+
+
+def test_signal_to_points_masks():
+    y = piecewise_signal(10, 12, 3, seed=0)
+    mask = np.zeros((10, 12), bool)
+    mask[2, 3] = True
+    X, yy = signal_to_points(y, mask)
+    assert X.shape == (1, 2) and yy[0] == y[2, 3]
+    assert (X[0] == [2, 3]).all()
