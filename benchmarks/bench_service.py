@@ -1,0 +1,225 @@
+"""Closed-loop load generator for the coreset serving engine.
+
+Each client thread runs a closed loop (next request issued when the last
+one returns) against an in-process ``CoresetEngine`` by default, or against
+a live HTTP server with ``--http URL`` (then the measured path includes the
+stdlib server + JSON codec).  Traffic mix mirrors the §5 tuning workload:
+
+  * 70% tree-loss queries for random <=k-leaf trees at mixed eps — after
+    warm-up these are pure dominance/exact cache hits;
+  * 20% builds at randomly drawn (k, eps) — exercises coalescing + LRU;
+  * 10% forest fits on the cached coreset points;
+  * one background ingest thread appends row bands to a streamed signal
+    and rebuilds it (StreamingBuilder path + cache invalidation).
+
+  python benchmarks/bench_service.py                # 10 s, 8 clients
+  python benchmarks/bench_service.py --smoke        # 2 s, 4 clients (CI)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import threading
+import time
+import urllib.request
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+
+try:
+    from .common import emit, save_json  # python -m benchmarks.bench_service
+except ImportError:
+    sys.path.insert(0, str(_ROOT / "benchmarks"))
+    from common import emit, save_json  # python benchmarks/bench_service.py
+
+from repro.core.segmentation import random_tree_segmentation  # noqa: E402
+from repro.data.signals import piecewise_signal  # noqa: E402
+from repro.service import CoresetEngine, ServiceMetrics  # noqa: E402
+
+
+class _LocalClient:
+    def __init__(self, engine: CoresetEngine):
+        self.engine = engine
+
+    def loss(self, name, rects, labels, eps):
+        return self.engine.tree_loss(name, rects, labels, eps=eps)
+
+    def build(self, name, k, eps):
+        self.engine.get_coreset(name, k, eps)
+
+    def fit(self, name, k, eps):
+        self.engine.fit_forest(name, k=k, eps=eps, n_estimators=3)
+
+    def ingest(self, name, band):
+        self.engine.ingest_band(name, band)
+
+    def register(self, name, values):
+        self.engine.register_signal(name, values, replace=True)
+
+
+class _HttpClient:
+    def __init__(self, base: str):
+        self.base = base.rstrip("/")
+
+    def _post(self, path, payload):
+        req = urllib.request.Request(
+            self.base + path, data=json.dumps(payload).encode(),
+            headers={"Content-Type": "application/json"}, method="POST")
+        with urllib.request.urlopen(req, timeout=120) as r:
+            return json.loads(r.read())
+
+    def loss(self, name, rects, labels, eps):
+        return self._post("/query/loss", {"name": name, "rects": rects.tolist(),
+                                          "labels": labels.tolist(), "eps": eps})
+
+    def build(self, name, k, eps):
+        self._post("/build", {"name": name, "k": k, "eps": eps})
+
+    def fit(self, name, k, eps):
+        self._post("/query/fit", {"name": name, "k": k, "eps": eps,
+                                  "n_estimators": 3})
+
+    def ingest(self, name, band):
+        self._post("/ingest", {"name": name, "band": band.tolist()})
+
+    def register(self, name, values):
+        # replace: rerunning the loadgen against a long-lived server must not
+        # trip the duplicate-registration guard
+        self._post("/signals", {"name": name, "values": values.tolist(),
+                                "replace": True})
+
+
+def run(duration: float, clients: int, n: int, m: int, k_max: int,
+        http: str | None) -> dict:
+    metrics = ServiceMetrics()
+    engine = None
+    if http:
+        client_fac = lambda: _HttpClient(http)  # noqa: E731
+    else:
+        engine = CoresetEngine(workers=4, metrics=metrics)
+        client_fac = lambda: _LocalClient(engine)  # noqa: E731
+
+    y = piecewise_signal(n, m, k_max, noise=0.15, seed=0)
+    setup = client_fac()
+    setup.register("bench", y)
+    setup.build("bench", k_max, 0.2)  # warm anchor coreset
+
+    stop = threading.Event()
+    counts = {"loss": 0, "build": 0, "fit": 0, "ingest": 0, "errors": 0}
+    lat: dict[str, list[float]] = {op: [] for op in counts}
+    lock = threading.Lock()
+
+    def record(op, dt):
+        with lock:
+            counts[op] += 1
+            lat[op].append(dt)
+
+    def worker(cid: int):
+        rng = np.random.default_rng(cid)
+        cl = client_fac()
+        while not stop.is_set():
+            u = rng.uniform()
+            t0 = time.perf_counter()
+            try:
+                if u < 0.7:
+                    kq = int(rng.integers(3, k_max + 1))
+                    q = random_tree_segmentation(n, m, kq, rng)
+                    cl.loss("bench", q.rects, q.labels,
+                            float(rng.choice([0.25, 0.3, 0.4])))
+                    op = "loss"
+                elif u < 0.9:
+                    cl.build("bench", int(rng.integers(2, k_max + 1)),
+                             float(rng.choice([0.2, 0.25, 0.3])))
+                    op = "build"
+                else:
+                    cl.fit("bench", k_max, 0.2)
+                    op = "fit"
+                record(op, time.perf_counter() - t0)
+            except Exception:  # noqa: BLE001
+                with lock:
+                    counts["errors"] += 1
+
+    def ingester():
+        cl = client_fac()
+        rng = np.random.default_rng(999)
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                band = piecewise_signal(8, m, 4, seed=int(rng.integers(1 << 30)))
+                cl.ingest("bench-stream", band)
+                cl.build("bench-stream", k_max, 0.3)
+                record("ingest", time.perf_counter() - t0)
+            except Exception:  # noqa: BLE001
+                with lock:
+                    counts["errors"] += 1
+            stop.wait(0.25)
+
+    threads = [threading.Thread(target=worker, args=(cid,), daemon=True)
+               for cid in range(clients)]
+    threads.append(threading.Thread(target=ingester, daemon=True))
+    t_start = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(duration)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    wall = time.perf_counter() - t_start
+
+    total = sum(counts[op] for op in ("loss", "build", "fit", "ingest"))
+    out = {"duration_s": wall, "clients": clients, "ops": dict(counts),
+           "rps": total / wall, "http": bool(http)}
+    for op, xs in lat.items():
+        if xs:
+            xs = np.sort(xs)
+            out[op] = {"p50_ms": 1e3 * float(xs[len(xs) // 2]),
+                       "p99_ms": 1e3 * float(xs[min(len(xs) - 1, int(0.99 * len(xs)))]),
+                       "count": len(xs)}
+    if engine is not None:
+        snap = metrics.snapshot()["counters"]
+        hits = snap.get("cache_hit_exact", 0) + snap.get("cache_hit_dominated", 0)
+        lookups = hits + snap.get("cache_miss", 0)
+        out["cache"] = {"hit_rate": hits / max(lookups, 1),
+                        "dominance_hits": snap.get("cache_hit_dominated", 0),
+                        "builds": snap.get("coreset_builds", 0),
+                        "coalesced": snap.get("builds_coalesced", 0)}
+        engine.close()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--n", type=int, default=192)
+    ap.add_argument("--m", type=int, default=96)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--http", default=None,
+                    help="target a live server (e.g. http://127.0.0.1:8787) "
+                         "instead of the in-process engine")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-second CI run: 4 clients, small signal")
+    args = ap.parse_args()
+    if args.smoke:
+        args.duration, args.clients, args.n, args.m = 2.0, 4, 96, 64
+
+    res = run(args.duration, args.clients, args.n, args.m, args.k, args.http)
+    emit("service_rps", 1e6 / max(res["rps"], 1e-9), f"rps={res['rps']:.1f}")
+    if "loss" in res:
+        emit("service_loss_p50", 1e3 * res["loss"]["p50_ms"],
+             f"p99_ms={res['loss']['p99_ms']:.2f}")
+    p = save_json("bench_service", res)
+    print(f"[bench_service] {res['rps']:.1f} req/s over {res['duration_s']:.1f}s "
+          f"({res['ops']}) -> {p}")
+    if res["ops"]["errors"]:
+        sys.exit(f"[bench_service] {res['ops']['errors']} request errors")
+    if res["ops"]["loss"] == 0 or res["ops"]["ingest"] == 0:
+        sys.exit("[bench_service] degenerate run: no loss or ingest traffic")
+
+
+if __name__ == "__main__":
+    main()

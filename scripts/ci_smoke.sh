@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 suite + a 2-second closed-loop run against the coreset
+# serving engine, so serving-path regressions fail fast.
+#
+#   scripts/ci_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -q
+
+echo "== serve_coresets smoke (concurrent HTTP clients) =="
+python -m repro.launch.serve_coresets --smoke
+
+echo "== bench_service loadgen smoke (2s) =="
+python benchmarks/bench_service.py --smoke
+
+echo "== ci_smoke PASS =="

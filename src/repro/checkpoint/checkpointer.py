@@ -1,7 +1,9 @@
 """Sharded, asynchronous, atomic checkpointing with elastic restore.
 
-Layout per step:  <dir>/step_<k>/host_<i>.npz.zst  +  <dir>/step_<k>/DONE
+Layout per step:  <dir>/step_<k>/host_<i>.npz.<codec>  +  <dir>/step_<k>/DONE
                   <dir>/latest   (text pointer, written after DONE)
+where <codec> is zst (zstandard, when installed) or zlib (stdlib fallback);
+the DONE metadata records which codec committed the step.
 
 Design points for the 1000-node posture:
   * each host serializes only its addressable shard values (here: the whole
@@ -22,12 +24,31 @@ import json
 import pathlib
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ModuleNotFoundError:  # bare containers: stdlib zlib fallback
+    zstandard = None
 
 __all__ = ["CheckpointManager"]
+
+# codec name -> (file extension, compress, decompress); the writer records
+# its codec in the DONE metadata and the reader dispatches on the extension,
+# so checkpoints stay readable across environments with/without zstandard
+# (zstd payloads still need the module to restore — the error says so).
+_CODECS = {
+    "zstd": (".npz.zst",
+             lambda b: zstandard.ZstdCompressor(level=3).compress(b),
+             lambda b: zstandard.ZstdDecompressor().decompress(b)),
+    "zlib": (".npz.zlib",
+             lambda b: zlib.compress(b, 3),
+             zlib.decompress),
+}
+_DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
 
 
 def _flatten(tree):
@@ -39,7 +60,13 @@ def _flatten(tree):
 
 class CheckpointManager:
     def __init__(self, directory: str, max_to_keep: int = 3,
-                 host_id: int = 0, num_hosts: int = 1, async_save: bool = True):
+                 host_id: int = 0, num_hosts: int = 1, async_save: bool = True,
+                 codec: str = _DEFAULT_CODEC):
+        if codec not in _CODECS:
+            raise ValueError(f"unknown codec {codec!r}; have {sorted(_CODECS)}")
+        if codec == "zstd" and zstandard is None:
+            raise ValueError("codec 'zstd' requires the zstandard module")
+        self.codec = codec
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.max_to_keep = max_to_keep
@@ -50,24 +77,33 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree) -> None:
-        self.wait()
+        step = int(step)   # np.int64 from a restored state must not poison
+        self.wait()        # the f-string paths / DONE json
         keys, leaves, _ = _flatten(tree)
         arrays = [np.asarray(v) for v in leaves]   # host copy before async
+        # npz silently degrades extension dtypes (bfloat16/fp8 have kind 'V')
+        # to raw void — unrestorable.  Widen them to float32 for storage;
+        # restore casts back to the template dtype, and float32 is exact for
+        # every sub-32-bit float, so the roundtrip is lossless.
+        arrays = [a.astype(np.float32) if a.dtype.kind == "V" else a
+                  for a in arrays]
 
         def _write():
             step_dir = self.dir / f"step_{step:08d}"
             step_dir.mkdir(parents=True, exist_ok=True)
             buf = io.BytesIO()
             np.savez(buf, **{k: a for k, a in zip(keys, arrays)})
-            payload = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
-            tmp = step_dir / f"host_{self.host_id}.npz.zst.tmp"
-            final = step_dir / f"host_{self.host_id}.npz.zst"
+            ext, compress, _ = _CODECS[self.codec]
+            payload = compress(buf.getvalue())
+            tmp = step_dir / f"host_{self.host_id}{ext}.tmp"
+            final = step_dir / f"host_{self.host_id}{ext}"
             tmp.write_bytes(payload)
             tmp.rename(final)
             # single-host container: host 0 commits
             if self.host_id == 0:
                 (step_dir / "DONE").write_text(json.dumps(
-                    {"step": step, "num_hosts": self.num_hosts}))
+                    {"step": step, "num_hosts": self.num_hosts,
+                     "codec": self.codec}))
                 (self.dir / "latest.tmp").write_text(str(step))
                 (self.dir / "latest.tmp").rename(self.dir / "latest")
                 self._gc()
@@ -109,8 +145,16 @@ class CheckpointManager:
         """Load into the template tree structure; device_put against
         ``shardings`` (a matching tree) if given — the elastic-remesh path."""
         step_dir = self.dir / f"step_{step:08d}"
-        payload = (step_dir / f"host_{self.host_id}.npz.zst").read_bytes()
-        raw = zstandard.ZstdDecompressor().decompress(payload)
+        for name, (ext, _, decompress) in _CODECS.items():
+            shard = step_dir / f"host_{self.host_id}{ext}"
+            if shard.exists():
+                if name == "zstd" and zstandard is None:
+                    raise RuntimeError(f"{shard} is zstd-compressed but the "
+                                       "zstandard module is not installed")
+                break
+        else:
+            raise FileNotFoundError(f"no host_{self.host_id} shard in {step_dir}")
+        raw = decompress(shard.read_bytes())
         npz = np.load(io.BytesIO(raw))
         keys, leaves, treedef = _flatten(template)
         out = []

@@ -18,6 +18,7 @@ Two gamma regimes:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 
 import numpy as np
@@ -101,6 +102,34 @@ class SignalCoreset:
 
     def total_mass(self) -> float:
         return float(self.weights.sum())
+
+    @property
+    def nbytes(self) -> int:
+        """Payload bytes of the stored arrays (cache-accounting size)."""
+        return int(self.rects.nbytes + self.labels.nbytes
+                   + self.weights.nbytes + self.moments.nbytes)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the block geometry + exact moments.
+
+        Two coresets with equal fingerprints answer every Algorithm-5 query
+        identically (the loss only reads rects/labels/weights/moments), so
+        this is a well-defined cache/ETag identity for the serving layer.
+        """
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.int64([self.n, self.m, self.k, self.num_blocks]).tobytes())
+        h.update(np.float64([self.eps]).tobytes())
+        h.update(np.ascontiguousarray(self.rects, np.int64).tobytes())
+        h.update(np.ascontiguousarray(self.moments, np.float64).tobytes())
+        h.update(np.ascontiguousarray(self.labels, np.float64).tobytes())
+        h.update(np.ascontiguousarray(self.weights, np.float64).tobytes())
+        return h.hexdigest()
+
+    def __repr__(self) -> str:
+        return (f"SignalCoreset(n={self.n}, m={self.m}, k={self.k}, "
+                f"eps={self.eps:g}, size={self.size}, "
+                f"ratio={self.compression_ratio():.3g}, "
+                f"certified={self.certified}, fp={self.fingerprint()[:10]})")
 
 
 def resolve_partition_params(sigma: float, k: int, eps: float, fidelity: str,

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sharding import compat_set_mesh
+
 from .coreset import SignalCoreset, signal_coreset
 from .streaming import compose, recompress
 
@@ -79,7 +81,7 @@ def sat_pjit(values, mesh=None, data_axis: str = "data"):
         return _sat_kernel(y)
     from jax.sharding import NamedSharding, PartitionSpec as P
     yd = jax.device_put(y, NamedSharding(mesh, P(data_axis, None)))
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         out = jax.jit(_sat_kernel,
                       out_shardings=NamedSharding(mesh, P(None, data_axis, None)))(yd)
     return out
@@ -134,7 +136,7 @@ def fitting_loss_batched(cs: SignalCoreset, seg_rects: np.ndarray,
         lab4 = jnp.pad(lab4, ((0, pad), (0, 0)))
         w4 = jnp.pad(w4, ((0, pad), (0, 0)))
     sharding = NamedSharding(mesh, P(data_axis, None))
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         f = jax.jit(score_all,
                     in_shardings=(sharding, sharding, sharding, None, None),
                     out_shardings=NamedSharding(mesh, P()))

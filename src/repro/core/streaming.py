@@ -160,6 +160,16 @@ class StreamingBuilder:
             level += 1
         self._buckets[level] = item
 
+    @property
+    def max_level(self) -> int:
+        """Deepest occupied bucket = number of recompress layers any band may
+        have passed through (eps composes as (1+eps)^(max_level+1) - 1)."""
+        return max(self._buckets, default=0)
+
+    @property
+    def rows_seen(self) -> int:
+        return self._next_row
+
     def result(self) -> SignalCoreset:
         items = sorted(self._buckets.values(), key=lambda t: t[1])
         if not items:

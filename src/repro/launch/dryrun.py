@@ -127,7 +127,8 @@ def build_cell(arch: str, shape: str, *, n_layers_override=None,
 
 
 def shardings_for(mesh, args, kind, expert_2d=False, layout="tp"):
-    from repro.sharding import batch_specs, cache_specs, named, opt_specs, param_specs
+    from repro.sharding import (batch_specs, cache_specs, named, opt_specs,
+                                param_specs)
     if kind == "train":
         params_s, opt_s, batch_s = args
         return (named(mesh, param_specs(params_s, mesh, expert_2d=expert_2d,
@@ -157,6 +158,7 @@ def lower_cell(mesh, arch, shape, *, n_layers_override=None, unroll=False,
     # scan-counting problem would otherwise hide mb-1 of the accumulation)
     if unroll and microbatches is None:
         microbatches = 1
+    from repro.sharding import compat_set_mesh
     cfg, step, args, kind = build_cell(arch, shape,
                                        n_layers_override=n_layers_override,
                                        unroll=unroll, remat=remat,
@@ -165,7 +167,7 @@ def lower_cell(mesh, arch, shape, *, n_layers_override=None, unroll=False,
     # production aliasing: train updates (params, opt) in place; decode
     # updates the cache in place
     donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
         lowered = jitted.lower(*args)
         compiled = lowered.compile()

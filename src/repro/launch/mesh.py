@@ -8,7 +8,18 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "compat_make_mesh"]
+
+
+def compat_make_mesh(shape, axes, devices):
+    """jax.make_mesh across jax versions: ``axis_types`` (and the AxisType
+    enum itself) only exist on newer jax; older versions get the default
+    (auto) axis semantics, which is what we ask for anyway."""
+    try:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,13 +35,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for {shape} mesh, have {len(devices)} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes, devices)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over whatever devices exist (tests / CPU runs)."""
     n = data * model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"),
+                            jax.devices()[:n])

@@ -1,0 +1,177 @@
+"""Coreset serving launcher: HTTP front over the CoresetEngine.
+
+  python -m repro.launch.serve_coresets --port 8787            # serve
+  python -m repro.launch.serve_coresets --smoke                # self-check
+
+``--smoke`` boots the server on an ephemeral port, drives it with >= 4
+concurrent HTTP client threads (register + build + tree-loss + forest-fit +
+streamed ingest), then asserts the acceptance properties:
+
+  * at least one *dominance* cache hit was served (a (k', eps') coreset
+    answered a (k <= k', eps >= eps') request without a rebuild);
+  * the streamed-ingest coreset's Algorithm-5 loss agrees with a one-shot
+    ``signal_coreset`` build within the composed eps bound
+    (|L_stream - L_oneshot| <= (eps_eff + eps) * true_loss).
+
+Exit code 0 iff all checks pass.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import urllib.request
+
+import numpy as np
+
+from repro.service import CoresetEngine, ServiceMetrics, make_server, serve_forever_in_thread
+
+__all__ = ["main", "run_smoke"]
+
+
+def _post(base: str, path: str, payload: dict) -> dict:
+    req = urllib.request.Request(
+        base + path, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    with urllib.request.urlopen(req, timeout=120) as resp:
+        return json.loads(resp.read())
+
+
+def _get(base: str, path: str):
+    with urllib.request.urlopen(base + path, timeout=30) as resp:
+        body = resp.read()
+    try:
+        return json.loads(body)
+    except json.JSONDecodeError:
+        return body.decode()
+
+
+def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int:
+    from repro.core import fitting_loss, random_tree_segmentation, signal_coreset, true_loss
+    from repro.core.segmentation import Segmentation  # noqa: F401  (rects shape doc)
+    from repro.data.signals import piecewise_signal
+
+    metrics = ServiceMetrics()
+    engine = CoresetEngine(workers=4, metrics=metrics)
+    srv = make_server(engine)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+
+    n, m, k_max, eps_tight = 96, 64, 8, 0.2
+    y = piecewise_signal(n, m, k_max, noise=0.15, seed=7)
+    _post(base, "/signals", {"name": "dense", "values": y.tolist()})
+    # anchor build: the (k_max, eps_tight) coreset every later query dominates
+    _post(base, "/build", {"name": "dense", "k": k_max, "eps": eps_tight})
+
+    errors: list[str] = []
+    rng_global = np.random.default_rng(123)
+    band_rows = 16
+    stream_eps = 0.25
+
+    def query_client(cid: int) -> None:
+        rng = np.random.default_rng(1000 + cid)
+        try:
+            for _ in range(rounds):
+                kq = int(rng.integers(3, k_max + 1))
+                q = random_tree_segmentation(n, m, kq, rng)
+                r = _post(base, "/query/loss", {
+                    "name": "dense", "rects": q.rects.tolist(),
+                    "labels": q.labels.tolist(), "eps": 0.3})
+                tl = true_loss(y, q.rects, q.labels)
+                if tl > 1e-9 and abs(r["loss"] - tl) / tl > 0.3 + 1e-6:
+                    errors.append(f"client {cid}: rel err "
+                                  f"{abs(r['loss'] - tl) / tl:.3f} > eps")
+            _post(base, "/query/fit", {"name": "dense", "k": k_max,
+                                       "eps": eps_tight, "n_estimators": 3,
+                                       "predict": [[1, 1], [n - 2, m - 2]]})
+        except Exception as exc:  # noqa: BLE001
+            errors.append(f"client {cid}: {type(exc).__name__}: {exc}")
+
+    def ingest_client() -> None:
+        try:
+            for i in range(0, n, band_rows):
+                _post(base, "/ingest", {"name": "stream",
+                                        "band": y[i:i + band_rows].tolist()})
+            _post(base, "/build", {"name": "stream", "k": k_max,
+                                   "eps": stream_eps})
+        except Exception as exc:  # noqa: BLE001
+            errors.append(f"ingest: {type(exc).__name__}: {exc}")
+
+    threads = [threading.Thread(target=query_client, args=(cid,))
+               for cid in range(max(clients - 1, 3))]
+    threads.append(threading.Thread(target=ingest_client))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    # ---- streamed-ingest consistency vs one-shot build (composed eps bound)
+    q = random_tree_segmentation(n, m, 6, rng_global)
+    r_stream = _post(base, "/query/loss", {
+        "name": "stream", "rects": q.rects.tolist(),
+        "labels": q.labels.tolist(), "eps": stream_eps, "k": k_max})
+    cs_one = signal_coreset(y, k_max, stream_eps)
+    l_one = fitting_loss(cs_one, q.rects, q.labels)
+    tl = true_loss(y, q.rects, q.labels)
+    composed = r_stream["eps_eff"] + stream_eps
+    gap = abs(r_stream["loss"] - l_one) / max(tl, 1e-12)
+    if gap > composed:
+        errors.append(f"streamed vs one-shot gap {gap:.3f} > composed "
+                      f"bound {composed:.3f}")
+
+    health = _get(base, "/healthz")
+    dominated = metrics.get("cache_hit_dominated")
+    if dominated < 1:
+        errors.append("no dominance cache hit was served")
+    if health.get("status") != "ok":
+        errors.append(f"healthz: {health}")
+
+    srv.shutdown()
+    engine.close()
+
+    if verbose:
+        snap = metrics.snapshot()
+        print(f"[smoke] clients={len(threads)} http_200="
+              f"{snap['counters'].get('http_200', 0)} "
+              f"builds={snap['counters'].get('builds_completed', 0)} "
+              f"exact_hits={snap['counters'].get('cache_hit_exact', 0)} "
+              f"dominance_hits={dominated} "
+              f"stream_gap={gap:.4f} (bound {composed:.3f})")
+        for e in errors:
+            print(f"[smoke] FAIL: {e}")
+        print(f"[smoke] {'PASS' if not errors else 'FAIL'}")
+    return 0 if not errors else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8787)
+    ap.add_argument("--cache-mb", type=int, default=256)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--num-bands", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-check with concurrent clients, then exit")
+    args = ap.parse_args()
+
+    if args.smoke:
+        sys.exit(run_smoke())
+
+    engine = CoresetEngine(cache_bytes=args.cache_mb << 20,
+                           workers=args.workers, num_bands=args.num_bands)
+    srv = make_server(engine, host=args.host, port=args.port)
+    print(f"[serve_coresets] listening on http://{args.host}:"
+          f"{srv.server_address[1]}  (POST /signals /ingest /build "
+          f"/query/loss /query/fit /query/compress; GET /healthz /stats /metrics)")
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.shutdown()
+        engine.close()
+
+
+if __name__ == "__main__":
+    main()

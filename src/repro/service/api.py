@@ -1,0 +1,191 @@
+"""Stdlib HTTP/JSON front for the CoresetEngine.
+
+``http.server.ThreadingHTTPServer`` — one OS thread per connection; the
+numpy-heavy work releases the GIL and builds are bounded by the scheduler's
+worker pool, so a plain threading server sustains the closed-loop loadgen
+without an async stack (and without any non-baked-in dependency).
+
+Routes (all request/response bodies are JSON):
+
+  POST /signals           {"name", "values": [[..]] | "synthetic": {...}}
+  POST /ingest            {"name", "band": [[..]] | "synthetic": {...}}
+  POST /build             {"name", "k", "eps"}
+  POST /query/loss        {"name", "rects": [[r0,r1,c0,c1]..], "labels": [..],
+                           "eps"?, "k"?}
+  POST /query/fit         {"name", "k", "eps"?, "n_estimators"?, "max_leaves"?,
+                           "predict"?: [[i,j]..], "seed"?}
+  POST /query/compress    {"name", "k", "eps"? | "target_frac"?, "style"?,
+                           "max_points"?}
+  GET  /healthz           liveness + basic gauges
+  GET  /stats             full JSON snapshot (signals, cache, latency)
+  GET  /metrics           Prometheus text exposition
+
+``synthetic`` payloads ({"kind": "piecewise"|"smooth", n, m, k?, noise?,
+seed?}) generate the signal server-side — the loadgen path, so benchmarks
+measure the serving engine rather than JSON array parsing.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from .engine import CoresetEngine
+
+__all__ = ["make_server", "serve_forever_in_thread"]
+
+_MAX_BODY = 64 << 20
+_ROUTES = frozenset({"/healthz", "/stats", "/metrics", "/signals", "/ingest",
+                     "/build", "/query/loss", "/query/fit", "/query/compress"})
+
+
+def _synthetic(spec: dict) -> np.ndarray:
+    from repro.data.signals import piecewise_signal, smooth_field
+    kind = spec.get("kind", "piecewise")
+    n, m = int(spec["n"]), int(spec["m"])
+    seed = int(spec.get("seed", 0))
+    if kind == "piecewise":
+        return piecewise_signal(n, m, int(spec.get("k", 8)),
+                                noise=float(spec.get("noise", 0.15)), seed=seed)
+    if kind == "smooth":
+        return smooth_field(n, m, noise=float(spec.get("noise", 0.1)), seed=seed)
+    raise ValueError(f"unknown synthetic kind {kind!r}")
+
+
+def _values_from(body: dict, field: str) -> np.ndarray:
+    if field in body:
+        return np.asarray(body[field], np.float64)
+    if "synthetic" in body:
+        return _synthetic(body["synthetic"])
+    raise ValueError(f"need {field!r} or 'synthetic'")
+
+
+class _Handler(BaseHTTPRequestHandler):
+    engine: CoresetEngine  # set by make_server on the subclass
+    protocol_version = "HTTP/1.1"
+
+    # silence per-request stderr logging; metrics carry the signal
+    def log_message(self, fmt, *args):  # noqa: D102
+        pass
+
+    # ------------------------------------------------------------- plumbing
+    def _reply(self, code: int, payload, content_type: str = "application/json"):
+        body = (payload if isinstance(payload, bytes)
+                else json.dumps(payload).encode())
+        if code >= 400:
+            # an error may leave the request body unread (oversized payload,
+            # JSON abort) — reusing the keep-alive connection would parse the
+            # leftover bytes as the next request line; close instead
+            self.close_connection = True
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _body(self) -> dict:
+        length = int(self.headers.get("Content-Length", 0))
+        if length > _MAX_BODY:
+            raise ValueError("request body too large")
+        raw = self.rfile.read(length) if length else b"{}"
+        return json.loads(raw or b"{}")
+
+    def _route(self, method: str) -> None:
+        eng = self.engine
+        path = self.path.split("?", 1)[0].rstrip("/") or "/"
+        t0 = time.perf_counter()
+        route = f"{method} {path}"
+        # latency metric label: client-supplied paths outside the route table
+        # collapse to one bucket, else a URL scanner grows a histogram per
+        # probed path and bloats every /metrics scrape
+        metric_route = route if path in _ROUTES else f"{method} <unmatched>"
+        try:
+            if method == "GET" and path == "/healthz":
+                snap = eng.metrics.snapshot()
+                self._reply(200, {"status": "ok", "uptime_s": snap["uptime_s"],
+                                  "signals": len(eng.list_signals()),
+                                  "cache_entries": len(eng.cache),
+                                  "cache_bytes": eng.cache.nbytes,
+                                  "builds_in_flight": eng.scheduler.in_flight()})
+            elif method == "GET" and path == "/stats":
+                self._reply(200, eng.stats())
+            elif method == "GET" and path == "/metrics":
+                self._reply(200, eng.metrics.render().encode(),
+                            content_type="text/plain; version=0.0.4")
+            elif method == "POST" and path == "/signals":
+                b = self._body()
+                info = eng.register_signal(b["name"], _values_from(b, "values"),
+                                           replace=bool(b.get("replace", False)))
+                self._reply(200, info)
+            elif method == "POST" and path == "/ingest":
+                b = self._body()
+                self._reply(200, eng.ingest_band(b["name"], _values_from(b, "band")))
+            elif method == "POST" and path == "/build":
+                b = self._body()
+                cs, eps_eff, how = eng.get_coreset(
+                    b["name"], int(b["k"]), float(b.get("eps", 0.2)))
+                self._reply(200, {"fingerprint": cs.fingerprint(),
+                                  "size": cs.size, "blocks": cs.num_blocks,
+                                  "nbytes": cs.nbytes, "eps_eff": eps_eff,
+                                  "compression_ratio": cs.compression_ratio(),
+                                  "certified": cs.certified, "cache": how,
+                                  "build_seconds": cs.build_seconds})
+            elif method == "POST" and path == "/query/loss":
+                b = self._body()
+                self._reply(200, eng.tree_loss(
+                    b["name"], b["rects"], b["labels"],
+                    eps=float(b.get("eps", 0.2)),
+                    k=int(b["k"]) if "k" in b else None))
+            elif method == "POST" and path == "/query/fit":
+                b = self._body()
+                self._reply(200, eng.fit_forest(
+                    b["name"], k=int(b["k"]), eps=float(b.get("eps", 0.2)),
+                    n_estimators=int(b.get("n_estimators", 10)),
+                    max_leaves=int(b["max_leaves"]) if "max_leaves" in b else None,
+                    predict=b.get("predict"), seed=int(b.get("seed", 0))))
+            elif method == "POST" and path == "/query/compress":
+                b = self._body()
+                self._reply(200, eng.compress(
+                    b["name"], k=int(b["k"]),
+                    eps=float(b["eps"]) if "eps" in b else None,
+                    target_frac=float(b["target_frac"]) if "target_frac" in b else None,
+                    style=b.get("style", "mean"),
+                    max_points=int(b.get("max_points", 4096))))
+            else:
+                eng.metrics.inc("http_404")
+                self._reply(404, {"error": f"no route {route}"})
+                return
+            eng.metrics.inc("http_200")
+        except (KeyError, ValueError, TypeError, json.JSONDecodeError) as exc:
+            eng.metrics.inc("http_400")
+            self._reply(400, {"error": f"{type(exc).__name__}: {exc}"})
+        except Exception as exc:  # pragma: no cover - defensive 500
+            eng.metrics.inc("http_500")
+            self._reply(500, {"error": f"{type(exc).__name__}: {exc}"})
+        finally:
+            eng.metrics.observe(f"http {metric_route}", time.perf_counter() - t0)
+
+    def do_GET(self):  # noqa: N802
+        self._route("GET")
+
+    def do_POST(self):  # noqa: N802
+        self._route("POST")
+
+
+def make_server(engine: CoresetEngine, host: str = "127.0.0.1",
+                port: int = 0) -> ThreadingHTTPServer:
+    """Bind a ThreadingHTTPServer to (host, port); port 0 = ephemeral."""
+    handler = type("CoresetHandler", (_Handler,), {"engine": engine})
+    srv = ThreadingHTTPServer((host, port), handler)
+    srv.daemon_threads = True
+    return srv
+
+
+def serve_forever_in_thread(srv: ThreadingHTTPServer) -> threading.Thread:
+    t = threading.Thread(target=srv.serve_forever, name="coreset-http",
+                         daemon=True)
+    t.start()
+    return t

@@ -1,0 +1,169 @@
+"""Byte-budgeted LRU coreset cache with dominance reuse.
+
+The paper's headline guarantee is *uniform over queries*: one (k, eps)-
+coreset answers ell(D, s) for EVERY tree s of at most k leaves within
+1 +/- eps.  Turned into a cache rule: a cached coreset built at (k', eps')
+with  k' >= k  and  eps'_effective <= eps  is a valid answer source for a
+(k, eps) request on the same signal version — no rebuild needed.  This is
+what makes a coreset server amortize: the first tuning sweep pays O(Nk),
+every later request (smaller trees, looser tolerances) is a cache hit.
+
+``eps_eff`` is the entry's honest guarantee: equal to the requested eps for
+one-shot and sharded-compose builds (composition is exact, streaming.py),
+and the composed (1+eps)^(levels+1) - 1 bound for merge-reduce streaming
+builds — dominance compares against eps_eff, never the nominal eps, so a
+recompressed streamed coreset is not claimed tighter than it is.
+
+Entries are keyed by (signal, version, k, eps); ``version`` is a content
+hash maintained by the engine (a new ingested band bumps it), so stale
+coresets can never serve a mutated signal.  Eviction is plain LRU over a
+byte budget (coresets are small — 88 bytes/block — but millions of signals
+are not).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+
+from repro.core.coreset import SignalCoreset
+
+from .metrics import ServiceMetrics
+
+__all__ = ["CacheEntry", "DominanceCache"]
+
+
+def _eps_key(eps: float) -> float:
+    return round(float(eps), 6)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    signal: str
+    version: str
+    k: int
+    eps: float            # requested eps (exact-match key component)
+    eps_eff: float        # honest guarantee after composition layers
+    coreset: SignalCoreset
+    nbytes: int
+    fingerprint: str
+    hits: int = 0
+
+    @property
+    def key(self) -> tuple:
+        return (self.signal, self.version, self.k, _eps_key(self.eps))
+
+
+class DominanceCache:
+    """LRU over bytes; lookup tries exact key, then the dominance rule."""
+
+    def __init__(self, byte_budget: int = 256 << 20,
+                 metrics: ServiceMetrics | None = None):
+        self.byte_budget = int(byte_budget)
+        self.metrics = metrics or ServiceMetrics()
+        self._lock = threading.Lock()
+        self._entries: collections.OrderedDict[tuple, CacheEntry] = collections.OrderedDict()
+        # signal -> version -> keys: dominance scans and invalidations touch
+        # one signal's entries, not the whole cache (which may span millions
+        # of signals)
+        self._by_signal: dict[str, dict[str, set[tuple]]] = {}
+        self._bytes = 0
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(self, signal: str, version: str, k: int, eps: float, *,
+               record: bool = True) -> tuple[CacheEntry | None, str | None]:
+        """Returns (entry, kind) with kind in {"exact", "dominated", None}.
+
+        ``record=False`` skips hit/miss counters (internal re-checks that
+        would otherwise double-count the client-facing hit rate).
+        """
+        key = (signal, version, int(k), _eps_key(eps))
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                self._entries.move_to_end(key)
+                e.hits += 1
+                if record:
+                    self.metrics.inc("cache_hit_exact")
+                return e, "exact"
+            # dominance scan: any (k', eps'_eff) with k' >= k, eps'_eff <= eps.
+            # Among dominating entries prefer the smallest coreset — queries
+            # against it are cheapest and the guarantee is already satisfied.
+            best = None
+            for ek in self._by_signal.get(signal, {}).get(version, ()):
+                e = self._entries[ek]
+                if e.k >= k and e.eps_eff <= eps + 1e-12:
+                    if best is None or e.nbytes < best.nbytes:
+                        best = e
+            if best is not None:
+                self._entries.move_to_end(best.key)
+                best.hits += 1
+                if record:
+                    self.metrics.inc("cache_hit_dominated")
+                return best, "dominated"
+            if record:
+                self.metrics.inc("cache_miss")
+            return None, None
+
+    # ------------------------------------------------------------------- put
+    def _drop(self, key: tuple) -> CacheEntry | None:
+        e = self._entries.pop(key, None)
+        if e is not None:
+            self._bytes -= e.nbytes
+            versions = self._by_signal.get(e.signal)
+            if versions is not None:
+                keys = versions.get(e.version)
+                if keys is not None:
+                    keys.discard(key)
+                    if not keys:
+                        del versions[e.version]
+                if not versions:
+                    del self._by_signal[e.signal]
+        return e
+
+    def put(self, entry: CacheEntry) -> None:
+        with self._lock:
+            self._drop(entry.key)
+            self._entries[entry.key] = entry
+            self._by_signal.setdefault(entry.signal, {}).setdefault(
+                entry.version, set()).add(entry.key)
+            self._bytes += entry.nbytes
+            self.metrics.inc("cache_insertions")
+            while self._bytes > self.byte_budget and len(self._entries) > 1:
+                victim_key = next(iter(self._entries))   # LRU head
+                self._drop(victim_key)
+                self.metrics.inc("cache_evictions")
+
+    def invalidate_signal(self, signal: str, keep_version: str | None = None) -> int:
+        """Drop entries of stale versions (the version key already prevents
+        wrong serving; this just frees the bytes eagerly)."""
+        with self._lock:
+            dead = [k for ver, keys in self._by_signal.get(signal, {}).items()
+                    if ver != keep_version for k in keys]
+            for k in dead:
+                self._drop(k)
+            if dead:
+                self.metrics.inc("cache_invalidations", len(dead))
+            return len(dead)
+
+    # ----------------------------------------------------------------- stats
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "bytes": self._bytes,
+                "byte_budget": self.byte_budget,
+                "keys": [{"signal": e.signal, "k": e.k, "eps": e.eps,
+                          "eps_eff": e.eps_eff, "blocks": e.coreset.num_blocks,
+                          "nbytes": e.nbytes, "hits": e.hits}
+                         for e in self._entries.values()],
+            }

@@ -1,0 +1,358 @@
+"""CoresetEngine — coreset-as-a-service over named signals.
+
+The serving model (ROADMAP north star, paper §5 use-case):
+
+  * clients **register** signals (dense matrices) or **ingest** row bands
+    into an append-only stream;
+  * (k, eps)-coresets are built **lazily** on first demand, through the
+    batching ``BuildScheduler`` — dense signals fan row bands out via the
+    ``core.sharded`` path, streamed signals route through the merge-reduce
+    ``StreamingBuilder``;
+  * **tree-loss / forest-fit / compression** queries are answered from the
+    ``DominanceCache``: any cached (k', eps') coreset with k' >= k and
+    eps'_eff <= eps serves the request without a rebuild (the paper's
+    "every tree" guarantee as a cache-hit rule).
+
+Every response carries the coreset fingerprint and its honest eps_eff so a
+client can tell exactly which guarantee it was served under.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import threading
+
+import numpy as np
+
+from repro.core.coreset import SignalCoreset, signal_coreset, signal_coreset_to_size
+from repro.core.fitting_loss import fitting_loss
+from repro.core.sharded import sharded_coreset
+from repro.core.streaming import StreamingBuilder
+from repro.trees.forest import RandomForestRegressor
+
+from .cache import CacheEntry, DominanceCache, _eps_key
+from .metrics import ServiceMetrics
+from .scheduler import BuildScheduler
+
+__all__ = ["CoresetEngine", "SignalState"]
+
+
+class _BuilderSlot:
+    """A per-(k, eps) StreamingBuilder plus how many of the signal's bands it
+    has consumed.  ``lock`` serializes feeding/result; band ranges are claimed
+    under the signal lock while holding it, so insertion order always matches
+    ingest order."""
+
+    __slots__ = ("builder", "consumed", "lock")
+
+    def __init__(self, builder: StreamingBuilder):
+        self.builder = builder
+        self.consumed = 0
+        self.lock = threading.Lock()
+
+
+class SignalState:
+    """One named signal: dense matrix and/or append-only band stream.
+
+    ``version`` is a running content hash (chained per band), so the cache
+    key is well-defined: the same bytes ingested in the same order always
+    map to the same version, and any mutation bumps it.
+
+    Ingest only appends to ``bands`` (O(1) under the lock); the per-(k, eps)
+    merge-reduce builders catch up lazily on the build path, outside this
+    lock, so /healthz, /stats and concurrent ingests never stall behind a
+    coreset build.
+    """
+
+    MAX_BUILDERS = 8   # LRU cap: (k, eps) come from client requests, so an
+                       # unbounded dict would leak one merge-reduce state per
+                       # distinct pair; evicted slots rebuild by band replay
+
+    def __init__(self, name: str):
+        self.name = name
+        self.lock = threading.RLock()
+        self.bands: list[np.ndarray] = []
+        self.m: int | None = None
+        self.n: int = 0
+        self.version = hashlib.blake2b(name.encode(), digest_size=12).hexdigest()
+        self.builders: "collections.OrderedDict[tuple[int, float], _BuilderSlot]" = \
+            collections.OrderedDict()
+        self.streamed = False
+
+    def append(self, band: np.ndarray, *, streamed: bool) -> None:
+        band = np.ascontiguousarray(band, np.float64)
+        if band.ndim != 2 or band.size == 0:
+            raise ValueError("band must be a non-empty 2D array")
+        with self.lock:
+            if self.m is None:
+                self.m = band.shape[1]
+            elif band.shape[1] != self.m:
+                raise ValueError(f"band has {band.shape[1]} columns, signal has {self.m}")
+            self.bands.append(band)
+            self.n += band.shape[0]
+            self.streamed = self.streamed or streamed or len(self.bands) > 1
+            h = hashlib.blake2b(digest_size=12)
+            h.update(self.version.encode())
+            h.update(band.tobytes())
+            self.version = h.hexdigest()
+
+    def dense(self) -> np.ndarray:
+        with self.lock:
+            if len(self.bands) == 1:
+                return self.bands[0]
+            return np.concatenate(self.bands, axis=0)
+
+    def info(self) -> dict:
+        with self.lock:
+            return {"name": self.name, "n": self.n, "m": self.m,
+                    "bands": len(self.bands), "streamed": self.streamed,
+                    "version": self.version,
+                    "builders": sorted(self.builders)}
+
+
+class CoresetEngine:
+    def __init__(self, *, cache_bytes: int = 256 << 20, workers: int = 4,
+                 num_bands: int = 4, batch_window: float = 0.004,
+                 metrics: ServiceMetrics | None = None):
+        self.metrics = metrics or ServiceMetrics()
+        self.cache = DominanceCache(cache_bytes, metrics=self.metrics)
+        self.scheduler = BuildScheduler(max_workers=workers,
+                                        batch_window=batch_window,
+                                        metrics=self.metrics)
+        self.num_bands = int(num_bands)
+        self._signals: dict[str, SignalState] = {}
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------- ingest
+    def register_signal(self, name: str, values: np.ndarray, *,
+                        replace: bool = False) -> dict:
+        """Register a dense signal under ``name`` (one-shot build path)."""
+        # build + validate the full state BEFORE publishing: a malformed
+        # payload must neither poison the name nor (with replace) destroy
+        # the existing signal
+        st = SignalState(name)
+        st.append(np.asarray(values, np.float64), streamed=False)
+        with self._lock:
+            if name in self._signals and not replace:
+                raise ValueError(f"signal {name!r} already registered")
+            self._signals[name] = st
+        # a replaced signal's old-version entries can never serve again
+        self.cache.invalidate_signal(name, keep_version=st.version)
+        self.metrics.inc("signals_registered")
+        return st.info()
+
+    def ingest_band(self, name: str, band: np.ndarray) -> dict:
+        """Append a row band to ``name`` (created on first ingest).  O(1):
+        the per-(k, eps) StreamingBuilders catch up on the new bands at the
+        next build/query, off the ingest path."""
+        band = np.asarray(band, np.float64)
+        with self._lock:
+            st = self._signals.get(name)
+            created = st is None
+            if created:
+                st = SignalState(name)
+        with self.metrics.timed("ingest"):
+            st.append(band, streamed=True)   # validates; raises before publish
+        with self._lock:
+            winner = self._signals.setdefault(name, st) if created \
+                else self._signals.get(name)
+        if winner is not st:
+            # lost a creation race, or register_signal(replace=True) swapped
+            # the state mid-append: replay into the live signal so the
+            # acknowledged write is never silently dropped
+            return self.ingest_band(name, band)
+        # stale-version entries can never serve again; free their bytes now
+        self.cache.invalidate_signal(name, keep_version=st.version)
+        self.metrics.inc("bands_ingested")
+        return st.info()
+
+    def signal(self, name: str) -> SignalState:
+        with self._lock:
+            st = self._signals.get(name)
+        if st is None:
+            raise KeyError(f"unknown signal {name!r}")
+        return st
+
+    def list_signals(self) -> list[dict]:
+        with self._lock:
+            states = list(self._signals.values())
+        return [st.info() for st in states]
+
+    # ----------------------------------------------------------------- build
+    def get_coreset(self, name: str, k: int, eps: float, *,
+                    timeout: float | None = None,
+                    ) -> tuple[SignalCoreset, float, str]:
+        """Cached-or-built (k, eps)-coreset of the signal's current version.
+
+        Returns (coreset, eps_eff, disposition) with disposition in
+        {"exact", "dominated", "built", "coalesced"}.
+        """
+        k = int(k)
+        eps = float(eps)
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        if not (0.0 < eps < 1.0):
+            raise ValueError("eps must be in (0,1)")
+        st = self.signal(name)
+        version = st.version
+        entry, kind = self.cache.lookup(name, version, k, eps)
+        if entry is not None:
+            return entry.coreset, entry.eps_eff, kind
+        key = (name, version, k, _eps_key(eps))
+        fut, created = self.scheduler.submit(
+            key, lambda: self._build_and_cache(st, version, k, eps))
+        entry = fut.result(timeout=timeout)
+        return entry.coreset, entry.eps_eff, "built" if created else "coalesced"
+
+    def _build_and_cache(self, st: SignalState, version: str, k: int,
+                         eps: float) -> CacheEntry:
+        # close the lookup->submit race: if an identical build finished and
+        # was cached after the caller's miss but before this worker ran, the
+        # snapshot-version entry is already here — serve it, don't rebuild
+        entry, _ = self.cache.lookup(st.name, version, k, eps, record=False)
+        if entry is not None:
+            return entry
+        # the O(Nk) work runs OUTSIDE st.lock (healthz/info/ingest must not
+        # stall behind a build); each builder snapshots state under the lock
+        # and returns the version its coreset actually corresponds to
+        with st.lock:
+            streamed = st.streamed
+        if streamed:
+            cs, eps_eff, version = self._build_streamed(st, k, eps)
+        else:
+            cs, eps_eff, version = self._build_dense(st, k, eps)
+        entry = CacheEntry(
+            signal=st.name, version=version, k=k, eps=eps, eps_eff=eps_eff,
+            coreset=cs, nbytes=cs.nbytes, fingerprint=cs.fingerprint())
+        self.cache.put(entry)
+        # actual coreset constructions (scheduler's builds_completed counts
+        # finished jobs, which include re-lookup short-circuits above)
+        self.metrics.inc("coreset_builds")
+        return entry
+
+    def _build_dense(self, st: SignalState, k: int, eps: float,
+                     ) -> tuple[SignalCoreset, float, str]:
+        with st.lock:
+            y = st.dense()
+            version = st.version
+        bands = min(self.num_bands, max(1, y.shape[0] // 32))
+        if bands > 1:
+            cs = sharded_coreset(y, k, eps, num_bands=bands)
+        else:
+            cs = signal_coreset(y, k, eps)
+        return cs, eps, version  # composition of disjoint bands is exact
+
+    @staticmethod
+    def _stream_eps_eff(b: StreamingBuilder, eps: float) -> float:
+        # each merge level recompresses once: (1+eps)^(L+1) - 1 composed
+        return float((1.0 + eps) ** (b.max_level + 1) - 1.0) \
+            if b.recompress_levels else eps
+
+    def _build_streamed(self, st: SignalState, k: int, eps: float,
+                        ) -> tuple[SignalCoreset, float, str]:
+        bk = (k, _eps_key(eps))
+        with st.lock:
+            slot = st.builders.get(bk)
+            if slot is None:
+                slot = st.builders[bk] = _BuilderSlot(
+                    StreamingBuilder(m=st.m, k=k, eps=eps))
+                while len(st.builders) > st.MAX_BUILDERS:
+                    st.builders.popitem(last=False)   # LRU slot; replayable
+            else:
+                st.builders.move_to_end(bk)
+        # slot.lock serializes feeders (so bands enter in ingest order) and
+        # is taken BEFORE st.lock — never the reverse — so the heavy
+        # insert_band cascades run with the signal lock free
+        with slot.lock:
+            with st.lock:
+                missing = list(st.bands[slot.consumed:])
+                slot.consumed = len(st.bands)
+                version = st.version
+            for band in missing:
+                slot.builder.insert_band(band)
+            cs = slot.builder.result()
+            eps_eff = self._stream_eps_eff(slot.builder, eps)
+        return cs, eps_eff, version
+
+    # --------------------------------------------------------------- queries
+    def tree_loss(self, name: str, seg_rects, seg_labels, *,
+                  eps: float = 0.2, k: int | None = None,
+                  timeout: float | None = None) -> dict:
+        """Algorithm-5 loss of a k-segmentation, served from cache.
+
+        ``k`` defaults to the query's leaf count — the smallest coreset
+        parameter whose guarantee covers this tree.
+        """
+        seg_rects = np.asarray(seg_rects, np.int64).reshape(-1, 4)
+        seg_labels = np.asarray(seg_labels, np.float64).ravel()
+        if seg_rects.shape[0] != seg_labels.shape[0]:
+            raise ValueError("rects/labels length mismatch")
+        k = int(k) if k is not None else int(seg_rects.shape[0])
+        with self.metrics.timed("query_loss"):
+            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
+            loss = fitting_loss(cs, seg_rects, seg_labels)
+        self.metrics.inc("queries_loss")
+        return {"loss": float(loss), "k": k, "eps": eps, "eps_eff": eps_eff,
+                "cache": how, "fingerprint": cs.fingerprint(),
+                "coreset_size": cs.size}
+
+    def fit_forest(self, name: str, *, k: int, eps: float = 0.2,
+                   n_estimators: int = 10, max_leaves: int | None = None,
+                   predict: np.ndarray | None = None, seed: int = 0,
+                   timeout: float | None = None) -> dict:
+        """Train a weighted random forest on the coreset points (§5 solver
+        stand-in); optionally evaluate it at ``predict`` (P, 2) grid points."""
+        with self.metrics.timed("query_fit"):
+            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
+            X, y, w = cs.as_points()
+            forest = RandomForestRegressor(
+                n_estimators=n_estimators, max_leaves=max_leaves or k,
+                random_state=seed)
+            forest.fit(X, y, sample_weight=w)
+            out = {"k": k, "eps": eps, "eps_eff": eps_eff, "cache": how,
+                   "train_size": int(len(y)), "n_estimators": n_estimators,
+                   "fingerprint": cs.fingerprint()}
+            if predict is not None:
+                pts = np.asarray(predict, np.float64).reshape(-1, 2)
+                out["predictions"] = forest.predict(pts).tolist()
+        self.metrics.inc("queries_fit")
+        return out
+
+    def compress(self, name: str, *, k: int, eps: float | None = None,
+                 target_frac: float | None = None, style: str = "mean",
+                 max_points: int = 4096, timeout: float | None = None) -> dict:
+        """Compression query: the weighted point set itself (paper Fig 4).
+
+        ``target_frac`` bisects the block tolerance to a size target (dense
+        signals only — it re-runs the partition, so it bypasses the cache);
+        otherwise the cached (k, eps)-coreset is served.
+        """
+        with self.metrics.timed("query_compress"):
+            if target_frac is not None:
+                st = self.signal(name)
+                with st.lock:
+                    y = st.dense()
+                cs = signal_coreset_to_size(y, k, float(target_frac))
+                eps_eff, how = cs.eps, "built"
+            else:
+                cs, eps_eff, how = self.get_coreset(name, k, eps or 0.2,
+                                                    timeout=timeout)
+            X, y, w = cs.as_points(style=style)
+            out = {"k": k, "eps_eff": eps_eff, "cache": how, "size": cs.size,
+                   "blocks": cs.num_blocks, "nbytes": cs.nbytes,
+                   "compression_ratio": cs.compression_ratio(),
+                   "fingerprint": cs.fingerprint(), "truncated": len(y) > max_points}
+            keep = slice(0, max_points)
+            out["points"] = {"X": X[keep].tolist(), "y": y[keep].tolist(),
+                             "w": w[keep].tolist()}
+        self.metrics.inc("queries_compress")
+        return out
+
+    # ------------------------------------------------------------- lifecycle
+    def stats(self) -> dict:
+        return {"signals": self.list_signals(), "cache": self.cache.stats(),
+                "builds_in_flight": self.scheduler.in_flight(),
+                "metrics": self.metrics.snapshot()}
+
+    def close(self) -> None:
+        self.scheduler.shutdown()

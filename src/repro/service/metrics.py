@@ -1,0 +1,138 @@
+"""Service telemetry: counters + log-bucketed latency histograms.
+
+Stdlib-only (the serving layer must run in a bare container), thread-safe,
+and renderable both as JSON (``snapshot`` — the /stats endpoint) and as
+Prometheus text exposition (``render`` — the /metrics endpoint), so the
+engine can sit behind a standard scrape without extra dependencies.
+"""
+from __future__ import annotations
+
+import re
+import threading
+import time
+
+__all__ = ["Histogram", "ServiceMetrics"]
+
+
+# Geometric bucket bounds: 100us .. ~100s, x2 per bucket (21 buckets + inf).
+_BOUNDS = tuple(1e-4 * 2.0 ** i for i in range(21))
+
+
+class Histogram:
+    """Latency histogram over fixed geometric buckets (seconds)."""
+
+    __slots__ = ("counts", "count", "sum", "max")
+
+    def __init__(self) -> None:
+        self.counts = [0] * (len(_BOUNDS) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.max = 0.0
+
+    def observe(self, seconds: float) -> None:
+        i = 0
+        while i < len(_BOUNDS) and seconds > _BOUNDS[i]:
+            i += 1
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += seconds
+        if seconds > self.max:
+            self.max = seconds
+
+    def quantile(self, q: float) -> float:
+        """Bucket-upper-bound estimate of the q-quantile."""
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return _BOUNDS[i] if i < len(_BOUNDS) else self.max
+        return self.max
+
+    def snapshot(self) -> dict:
+        mean = self.sum / self.count if self.count else 0.0
+        return {"count": self.count, "mean_s": mean, "p50_s": self.quantile(0.5),
+                "p90_s": self.quantile(0.9), "p99_s": self.quantile(0.99),
+                "max_s": self.max}
+
+
+class ServiceMetrics:
+    """Named counters and histograms behind one lock (contention is tiny
+    relative to the numpy work per request)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: dict[str, int] = {}
+        self._hists: dict[str, Histogram] = {}
+        self.started_at = time.time()
+
+    # --------------------------------------------------------------- writers
+    def inc(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + by
+
+    def observe(self, name: str, seconds: float) -> None:
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = Histogram()
+            h.observe(seconds)
+
+    def timed(self, name: str):
+        """Context manager: observe the elapsed wall time under ``name``."""
+        return _Timer(self, name)
+
+    def get(self, name: str) -> int:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    # --------------------------------------------------------------- readers
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "uptime_s": time.time() - self.started_at,
+                "counters": dict(self._counters),
+                "latency": {k: h.snapshot() for k, h in self._hists.items()},
+            }
+
+    def render(self) -> str:
+        """Prometheus text exposition format.  Metric names must match
+        [a-zA-Z_:][a-zA-Z0-9_:]* — route-derived names ("http GET /healthz")
+        are sanitized here so one bad name can't invalidate the whole scrape
+        body; snapshot() keeps the readable originals."""
+        san = lambda n: re.sub(r"[^a-zA-Z0-9_:]", "_", n)  # noqa: E731
+        lines = []
+        with self._lock:
+            for name, v in sorted(self._counters.items()):
+                name = san(name)
+                lines.append(f"# TYPE coreset_{name} counter")
+                lines.append(f"coreset_{name} {v}")
+            for name, h in sorted(self._hists.items()):
+                base = f"coreset_{san(name)}_seconds"
+                lines.append(f"# TYPE {base} histogram")
+                acc = 0
+                for bound, c in zip(_BOUNDS, h.counts):
+                    acc += c
+                    lines.append(f'{base}_bucket{{le="{bound:g}"}} {acc}')
+                lines.append(f'{base}_bucket{{le="+Inf"}} {h.count}')
+                lines.append(f"{base}_sum {h.sum:g}")
+                lines.append(f"{base}_count {h.count}")
+        return "\n".join(lines) + "\n"
+
+
+class _Timer:
+    __slots__ = ("_m", "_name", "_t0")
+
+    def __init__(self, metrics: ServiceMetrics, name: str):
+        self._m = metrics
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._m.observe(self._name, time.perf_counter() - self._t0)
+        return False

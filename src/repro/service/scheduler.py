@@ -1,0 +1,135 @@
+"""Continuous-batching build scheduler.
+
+Coreset builds are the expensive path (O(Nk) over the signal); concurrent
+clients routinely ask for the same (signal, k, eps) — a tuning sweep fans
+out dozens of identical build-then-query requests.  The scheduler gives the
+serving layer three things:
+
+  * **coalescing** — identical in-flight build keys share one future, so a
+    thundering herd pays for one build;
+  * **micro-batching** — requests are drained from the queue in small
+    windows (``batch_window`` seconds) and dispatched together, which keeps
+    the worker pool saturated without a lock per request;
+  * **bounded concurrency** — at most ``max_workers`` builds run at once;
+    each build itself fans row bands out via ``core.sharded`` (thread pool
+    over band builds; NumPy releases the GIL in the hot loops), so total
+    parallelism is workers x bands.
+
+The design follows the continuous-batching front of ``launch/serve.py`` but
+for *builds* instead of decode steps: arrivals during a window join the
+current batch instead of waiting for a full one.
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import queue
+import threading
+import time
+from typing import Callable
+
+from .metrics import ServiceMetrics
+
+__all__ = ["BuildScheduler"]
+
+_SHUTDOWN = object()
+
+
+class BuildScheduler:
+    def __init__(self, max_workers: int = 4, batch_window: float = 0.004,
+                 max_batch: int = 32, metrics: ServiceMetrics | None = None):
+        self.metrics = metrics or ServiceMetrics()
+        self.batch_window = float(batch_window)
+        self.max_batch = int(max_batch)
+        self._pool = _fut.ThreadPoolExecutor(max_workers=max_workers,
+                                             thread_name_prefix="coreset-build")
+        self._queue: queue.SimpleQueue = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._pending: dict[tuple, _fut.Future] = {}
+        self._closed = False
+        self._collector = threading.Thread(target=self._collect_loop,
+                                           name="coreset-batcher", daemon=True)
+        self._collector.start()
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, key: tuple, fn: Callable[[], object],
+               ) -> tuple[_fut.Future, bool]:
+        """Enqueue a build; returns (future, created).
+
+        ``created`` is False when an identical key was already in flight and
+        the caller was coalesced onto its future.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is shut down")
+            existing = self._pending.get(key)
+            if existing is not None:
+                self.metrics.inc("builds_coalesced")
+                return existing, False
+            fut: _fut.Future = _fut.Future()
+            self._pending[key] = fut
+            # enqueue under the lock: shutdown() also takes it before posting
+            # the sentinel, so an accepted item can never land behind
+            # _SHUTDOWN and leave its future forever unresolved
+            self._queue.put((key, fn, fut, time.perf_counter()))
+        self.metrics.inc("builds_enqueued")
+        return fut, True
+
+    # --------------------------------------------------------- batching loop
+    def _collect_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _SHUTDOWN:
+                return
+            batch = [item]
+            deadline = time.perf_counter() + self.batch_window
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if nxt is _SHUTDOWN:
+                    self._dispatch(batch)
+                    return
+                batch.append(nxt)
+            self._dispatch(batch)
+
+    def _dispatch(self, batch: list) -> None:
+        self.metrics.inc("build_batches")
+        self.metrics.inc("build_batch_items", len(batch))  # mean size = items/batches
+        for key, fn, fut, enq_t in batch:
+            self.metrics.observe("build_queue_wait", time.perf_counter() - enq_t)
+            self._pool.submit(self._run_one, key, fn, fut)
+
+    def _run_one(self, key: tuple, fn: Callable, fut: _fut.Future) -> None:
+        if not fut.set_running_or_notify_cancel():
+            return
+        try:
+            with self.metrics.timed("build"):
+                result = fn()
+        except BaseException as exc:  # propagate to every coalesced waiter
+            self.metrics.inc("builds_failed")
+            fut.set_exception(exc)
+        else:
+            self.metrics.inc("builds_completed")
+            fut.set_result(result)
+        finally:
+            with self._lock:
+                self._pending.pop(key, None)
+
+    # -------------------------------------------------------------- shutdown
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(_SHUTDOWN)
+        if wait:
+            self._collector.join(timeout=5.0)
+        self._pool.shutdown(wait=wait)

@@ -1,5 +1,39 @@
+import jax
+
 from .rules import (batch_specs, cache_specs, data_axes, named, opt_specs,
                     param_specs)
 
 __all__ = ["batch_specs", "cache_specs", "data_axes", "named", "opt_specs",
-           "param_specs"]
+           "param_specs", "compat_set_mesh", "compat_abstract_mesh",
+           "compat_get_abstract_mesh"]
+
+
+def compat_get_abstract_mesh():
+    """The mesh currently in scope (jax.sharding.get_abstract_mesh on newer
+    jax; the thread-resources physical mesh set by ``with mesh:`` on older).
+    Outside any mesh context both return an empty mesh (no axis names)."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax._src import mesh as _mesh_lib
+    return _mesh_lib.thread_resources.env.physical_mesh
+
+
+def compat_abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across jax versions: newer jax takes (sizes, names),
+    older takes a single ((name, size), ...) shape tuple."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def compat_set_mesh(mesh):
+    """``with compat_set_mesh(mesh):`` across jax versions — newer jax has
+    jax.set_mesh; older versions use the Mesh object's own context manager
+    (same effect for the Auto axis semantics this repo runs under)."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh

@@ -1,0 +1,247 @@
+"""Coreset serving engine: dominance cache, scheduler, streamed ingest, HTTP."""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+
+from repro.core import (fitting_loss, random_tree_segmentation, signal_coreset,
+                        true_loss)
+from repro.data import piecewise_signal
+from repro.service import (BuildScheduler, CoresetEngine, ServiceMetrics,
+                           make_server, serve_forever_in_thread)
+
+N, M, KMAX = 72, 48, 8
+
+
+def _engine(**kw):
+    kw.setdefault("workers", 2)
+    kw.setdefault("metrics", ServiceMetrics())
+    return CoresetEngine(**kw)
+
+
+def _signal(seed=0):
+    return piecewise_signal(N, M, KMAX, noise=0.15, seed=seed)
+
+
+# ------------------------------------------------------------------ dominance
+def test_dominance_hit_serves_weaker_requests_without_rebuild():
+    eng = _engine()
+    try:
+        eng.register_signal("s", _signal())
+        cs, eps_eff, how = eng.get_coreset("s", KMAX, 0.2)
+        assert how == "built" and eps_eff == 0.2
+        # weaker request (smaller k, looser eps): dominated, same build count
+        cs2, eps2, how2 = eng.get_coreset("s", 4, 0.35)
+        assert how2 == "dominated"
+        assert cs2.fingerprint() == cs.fingerprint()
+        assert eps2 <= 0.35
+        assert eng.metrics.get("coreset_builds") == 1
+        # stronger request (larger k) must NOT be served by dominance
+        _, _, how3 = eng.get_coreset("s", KMAX + 2, 0.2)
+        assert how3 == "built"
+        assert eng.metrics.get("coreset_builds") == 2
+    finally:
+        eng.close()
+
+
+def test_tree_loss_defaults_k_to_leaf_count_and_is_accurate():
+    eng = _engine()
+    try:
+        y = _signal(1)
+        eng.register_signal("s", y)
+        rng = np.random.default_rng(0)
+        eng.get_coreset("s", KMAX, 0.2)  # anchor
+        for _ in range(4):
+            q = random_tree_segmentation(N, M, 6, rng)
+            r = eng.tree_loss("s", q.rects, q.labels, eps=0.3)
+            assert r["cache"] in ("exact", "dominated")
+            tl = true_loss(y, q.rects, q.labels)
+            assert abs(r["loss"] - tl) <= 0.3 * max(tl, 1e-9)
+        assert eng.metrics.get("cache_hit_dominated") >= 1
+    finally:
+        eng.close()
+
+
+def test_cache_byte_budget_evicts_lru():
+    # budget fits ~one coreset: the second distinct signal evicts the first
+    eng = _engine(cache_bytes=1)  # any insert overflows; keeps newest entry
+    try:
+        eng.register_signal("a", _signal(0))
+        eng.register_signal("b", _signal(1))
+        eng.get_coreset("a", 4, 0.3)
+        eng.get_coreset("b", 4, 0.3)
+        assert len(eng.cache) == 1  # LRU evicted the older entry
+        assert eng.metrics.get("cache_evictions") >= 1
+        # evicted entry rebuilds correctly
+        _, _, how = eng.get_coreset("a", 4, 0.3)
+        assert how == "built"
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------------ streamed ingest
+def test_streamed_ingest_consistent_with_one_shot_build():
+    eng = _engine()
+    try:
+        y = _signal(2)
+        for i in range(0, N, 12):
+            info = eng.ingest_band("st", y[i:i + 12])
+        assert info["n"] == N and info["streamed"]
+        cs, eps_eff, _ = eng.get_coreset("st", KMAX, 0.25)
+        assert np.isclose(cs.total_mass(), y.size)
+        one = signal_coreset(y, KMAX, 0.25)
+        rng = np.random.default_rng(3)
+        for _ in range(5):
+            q = random_tree_segmentation(N, M, 6, rng)
+            tl = true_loss(y, q.rects, q.labels)
+            ls = fitting_loss(cs, q.rects, q.labels)
+            lo = fitting_loss(one, q.rects, q.labels)
+            # each side is within its eps of the true loss -> composed bound
+            assert abs(ls - lo) <= (eps_eff + 0.25) * max(tl, 1e-9)
+            assert abs(ls - tl) <= eps_eff * max(tl, 1e-9)
+    finally:
+        eng.close()
+
+
+def test_ingest_bumps_version_and_invalidates_cache():
+    eng = _engine()
+    try:
+        y = _signal(4)
+        eng.ingest_band("st", y[:24])
+        v1 = eng.signal("st").version
+        eng.get_coreset("st", 4, 0.3)
+        assert len(eng.cache) == 1
+        eng.ingest_band("st", y[24:48])
+        assert eng.signal("st").version != v1
+        assert len(eng.cache) == 0  # stale version freed eagerly
+        _, _, how = eng.get_coreset("st", 4, 0.3)
+        assert how == "built"
+    finally:
+        eng.close()
+
+
+# --------------------------------------------------------- concurrent clients
+def test_concurrent_clients_identical_answers_and_coalesced_builds():
+    eng = _engine(workers=4)
+    try:
+        y = _signal(5)
+        eng.register_signal("s", y)
+        q = random_tree_segmentation(N, M, 5, np.random.default_rng(1))
+        results, errors = [], []
+        barrier = threading.Barrier(6)
+
+        def client():
+            try:
+                barrier.wait()
+                for _ in range(3):
+                    r = eng.tree_loss("s", q.rects, q.labels, eps=0.25, k=KMAX)
+                    results.append(r["loss"])
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert len(set(results)) == 1  # deterministic: one coreset served all
+        # identical concurrent keys collapsed to a single actual construction
+        # (coreset_builds counts real builds; the scheduler may complete more
+        # jobs when a late submitter's worker short-circuits on the cache)
+        assert eng.metrics.get("coreset_builds") == 1
+    finally:
+        eng.close()
+
+
+def test_scheduler_coalesces_identical_keys():
+    sched = BuildScheduler(max_workers=2, batch_window=0.02)
+    try:
+        gate = threading.Event()
+        calls = []
+
+        def slow():
+            gate.wait(5.0)
+            calls.append(1)
+            return "done"
+
+        f1, created1 = sched.submit(("k",), slow)
+        f2, created2 = sched.submit(("k",), slow)
+        assert created1 and not created2 and f1 is f2
+        gate.set()
+        assert f1.result(timeout=10.0) == "done"
+        assert calls == [1]
+        # after completion the key is free again
+        f3, created3 = sched.submit(("k",), lambda: "again")
+        assert created3 and f3.result(timeout=10.0) == "again"
+    finally:
+        sched.shutdown()
+
+
+# ------------------------------------------------------------------- HTTP API
+def test_http_api_end_to_end():
+    eng = _engine()
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+
+    def post(path, payload):
+        req = urllib.request.Request(base + path, data=json.dumps(payload).encode(),
+                                     headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req, timeout=60) as r:
+            return json.loads(r.read())
+
+    def get(path):
+        with urllib.request.urlopen(base + path, timeout=30) as r:
+            return r.read()
+
+    try:
+        y = _signal(6)
+        post("/signals", {"name": "s", "values": y.tolist()})
+        b = post("/build", {"name": "s", "k": KMAX, "eps": 0.2})
+        assert b["cache"] == "built" and b["size"] > 0 and len(b["fingerprint"]) == 32
+        q = random_tree_segmentation(N, M, 4, np.random.default_rng(2))
+        r = post("/query/loss", {"name": "s", "rects": q.rects.tolist(),
+                                 "labels": q.labels.tolist(), "eps": 0.3})
+        assert r["cache"] in ("exact", "dominated")
+        tl = true_loss(y, q.rects, q.labels)
+        assert abs(r["loss"] - tl) <= 0.3 * max(tl, 1e-9)
+        fit = post("/query/fit", {"name": "s", "k": KMAX, "n_estimators": 2,
+                                  "predict": [[1, 1], [N - 2, M - 2]]})
+        assert len(fit["predictions"]) == 2
+        comp = post("/query/compress", {"name": "s", "k": KMAX, "eps": 0.2,
+                                        "max_points": 64})
+        assert len(comp["points"]["X"]) <= 64 and comp["cache"] == "exact"
+        post("/ingest", {"name": "st", "synthetic":
+                         {"kind": "piecewise", "n": 16, "m": M, "seed": 1}})
+        health = json.loads(get("/healthz"))
+        assert health["status"] == "ok" and health["signals"] == 2
+        metrics = get("/metrics").decode()
+        assert "coreset_cache_hit_dominated" in metrics
+        assert "coreset_build_seconds_bucket" in metrics
+        # malformed request -> 400, server stays up
+        try:
+            post("/query/loss", {"name": "nope", "rects": [], "labels": []})
+            raise AssertionError("expected HTTP error")
+        except urllib.error.HTTPError as exc:
+            assert exc.code == 400
+        assert json.loads(get("/healthz"))["status"] == "ok"
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+# ------------------------------------------------- satellite: fingerprint API
+def test_fingerprint_stable_and_repr_informative():
+    y = _signal(7)
+    a = signal_coreset(y, 4, 0.3)
+    b = signal_coreset(y, 4, 0.3)
+    c = signal_coreset(y, 4, 0.2)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != c.fingerprint()
+    assert a.nbytes == a.rects.nbytes + a.labels.nbytes + a.weights.nbytes + a.moments.nbytes
+    r = repr(a)
+    assert f"k={a.k}" in r and "eps=0.3" in r and f"size={a.size}" in r
+    assert a.fingerprint()[:10] in r

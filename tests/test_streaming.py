@@ -44,6 +44,75 @@ def test_streaming_builder_bounded_and_accurate():
     assert _err(cs, y, q) <= 0.6
 
 
+def test_compose_is_order_invariant_under_row_offsets():
+    """compose() is exact concatenation: feeding the per-band coresets in a
+    shuffled order (with matching offsets) must give identical losses and
+    identical (sorted) block geometry."""
+    from repro.core import compose
+    y = piecewise_signal(64, 40, 5, noise=0.15, seed=4)
+    bounds = [(0, 16), (16, 40), (40, 64)]
+    parts = [signal_coreset(y[a:b], 5, 0.3) for a, b in bounds]
+    offs = [a for a, _ in bounds]
+    cs_sorted = compose(parts, offs, n_total=64)
+    order = [2, 0, 1]
+    cs_shuf = compose([parts[i] for i in order], [offs[i] for i in order],
+                      n_total=64)
+    key = lambda cs: np.lexsort(cs.rects.T[::-1])  # noqa: E731
+    np.testing.assert_array_equal(cs_sorted.rects[key(cs_sorted)],
+                                  cs_shuf.rects[key(cs_shuf)])
+    rng = np.random.default_rng(4)
+    q = random_tree_segmentation(64, 40, 5, rng)
+    assert np.isclose(fitting_loss(cs_sorted, q.rects, q.labels),
+                      fitting_loss(cs_shuf, q.rects, q.labels))
+    # offsets must keep every block inside the stacked domain
+    for cs in (cs_sorted, cs_shuf):
+        assert cs.rects[:, 0].min() == 0 and cs.rects[:, 1].max() == 64
+
+
+def test_streaming_cascade_offsets_tile_the_domain():
+    """Uneven bands force multi-level bucket cascades; without recompression
+    the merged rects must tile [0,n) x [0,m) exactly (area and mass checks
+    catch any mis-anchored row offset) and moments must match the signal."""
+    n, m = 110, 30
+    y = piecewise_signal(n, m, 5, noise=0.1, seed=5)
+    sb = StreamingBuilder(m=m, k=5, eps=0.3, recompress_levels=False)
+    sizes = [10, 30, 15, 25, 20, 10]   # 6 bands -> buckets at levels 1 and 2
+    r = 0
+    for s in sizes:
+        sb.insert_band(y[r:r + s])
+        r += s
+    assert sb.rows_seen == n and sb.max_level >= 1
+    cs = sb.result()
+    areas = ((cs.rects[:, 1] - cs.rects[:, 0])
+             * (cs.rects[:, 3] - cs.rects[:, 2]))
+    assert int(areas.sum()) == n * m               # tiling: no gap/overlap
+    assert np.isclose(cs.total_mass(), n * m)
+    assert np.isclose(cs.moments[:, 0].sum(), n * m)
+    assert np.isclose(cs.moments[:, 1].sum(), y.sum())
+    assert np.isclose(cs.moments[:, 2].sum(), (y * y).sum())
+    # per-row-band mass: every original band contributes exactly rows*m
+    for (a, b) in [(0, 10), (40, 55), (90, 110)]:
+        covered = ((np.minimum(cs.rects[:, 1], b) - np.maximum(cs.rects[:, 0], a)).clip(0)
+                   * (cs.rects[:, 3] - cs.rects[:, 2]))
+        assert int(covered.sum()) == (b - a) * m
+
+
+def test_recompress_after_out_of_order_compose_keeps_moments():
+    """recompress over a shuffled-compose union: the weighted re-raster must
+    preserve global mass/M1 and stay within the two-layer eps bound."""
+    from repro.core import compose
+    rng = np.random.default_rng(6)
+    y = piecewise_signal(96, 32, 6, noise=0.15, seed=6)
+    bounds = [(48, 96), (0, 48)]                    # deliberately unsorted
+    parts = [signal_coreset(y[a:b], 6, 0.3) for a, b in bounds]
+    cs = compose(parts, [a for a, _ in bounds], n_total=96)
+    rc = recompress(cs)
+    assert np.isclose(rc.total_mass(), y.size)
+    assert np.isclose(rc.moments[:, 1].sum(), cs.moments[:, 1].sum())
+    q = random_tree_segmentation(96, 32, 6, rng)
+    assert _err(rc, y, q) <= 0.6
+
+
 def test_shared_tolerance_matches_single_build_size():
     y = piecewise_signal(100, 80, 10, noise=0.2, seed=3)
     full = signal_coreset(y, 10, 0.3)
