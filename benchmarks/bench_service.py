@@ -1,19 +1,33 @@
-"""Closed-loop load generator for the coreset serving engine.
+"""Closed-loop load generator for the coreset serving engine (v1 SDK).
 
 Each client thread runs a closed loop (next request issued when the last
-one returns) against an in-process ``CoresetEngine`` by default, or against
-a live HTTP server with ``--http URL`` (then the measured path includes the
-stdlib server + JSON codec).  Traffic mix mirrors the §5 tuning workload:
+one returns).  By default the bench boots an in-process HTTP server and
+drives it through the typed SDK (``repro.client.CoresetClient``) in the
+encoding chosen with ``--encoding`` — so the measured path includes the
+stdlib server plus the negotiated wire codec.  ``--http URL`` targets a
+live server instead; ``--engine`` bypasses HTTP and calls the
+``CoresetEngine`` directly (the PR-1 baseline mode).  Traffic mix mirrors
+the §5 tuning workload:
 
-  * 70% tree-loss queries for random <=k-leaf trees at mixed eps — after
+  * 60% tree-loss queries for random <=k-leaf trees at mixed eps — after
     warm-up these are pure dominance/exact cache hits;
+  * 10% fused loss:batch queries (8 segmentations per request) — the
+    tuning-sweep inner loop as ONE engine scoring call;
   * 20% builds at randomly drawn (k, eps) — exercises coalescing + LRU;
-  * 10% forest fits on the cached coreset points;
+  * 10% forest fits on the cached coreset points (model-cache path);
   * one background ingest thread appends row bands to a streamed signal
     and rebuilds it (StreamingBuilder path + cache invalidation).
 
-  python benchmarks/bench_service.py                # 10 s, 8 clients
-  python benchmarks/bench_service.py --smoke        # 2 s, 4 clients (CI)
+Before the loop starts, registration of a 512x512 signal is timed per
+encoding (``register_seconds``) — the ROADMAP's "JSON array parsing
+dominates" metric.  Results merge into
+``benchmarks/results/bench_service.json`` keyed by mode, so consecutive
+runs with ``--encoding json`` and ``--encoding binary`` land side by side
+for CI to compare.
+
+  python benchmarks/bench_service.py                      # binary, 10 s
+  python benchmarks/bench_service.py --encoding json
+  python benchmarks/bench_service.py --smoke              # 2 s (CI)
 """
 from __future__ import annotations
 
@@ -23,7 +37,6 @@ import pathlib
 import sys
 import threading
 import time
-import urllib.request
 
 import numpy as np
 
@@ -31,22 +44,29 @@ _ROOT = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(_ROOT / "src"))
 
 try:
-    from .common import emit, save_json  # python -m benchmarks.bench_service
+    from .common import RESULTS, emit  # python -m benchmarks.bench_service
 except ImportError:
     sys.path.insert(0, str(_ROOT / "benchmarks"))
-    from common import emit, save_json  # python benchmarks/bench_service.py
+    from common import RESULTS, emit  # python benchmarks/bench_service.py
 
+from repro.client import CoresetClient  # noqa: E402
 from repro.core.segmentation import random_tree_segmentation  # noqa: E402
 from repro.data.signals import piecewise_signal  # noqa: E402
-from repro.service import CoresetEngine, ServiceMetrics  # noqa: E402
+from repro.service import (CoresetEngine, ServiceMetrics, make_server,  # noqa: E402
+                           serve_forever_in_thread)
 
 
-class _LocalClient:
+class _EngineClient:
+    """Direct in-process calls — the no-HTTP baseline."""
+
     def __init__(self, engine: CoresetEngine):
         self.engine = engine
 
     def loss(self, name, rects, labels, eps):
         return self.engine.tree_loss(name, rects, labels, eps=eps)
+
+    def loss_batch(self, name, rects, labels, eps):
+        return self.engine.tree_loss_batch(name, rects, labels, eps=eps)
 
     def build(self, name, k, eps):
         self.engine.get_coreset(name, k, eps)
@@ -61,55 +81,75 @@ class _LocalClient:
         self.engine.register_signal(name, values, replace=True)
 
 
-class _HttpClient:
-    def __init__(self, base: str):
-        self.base = base.rstrip("/")
+class _SdkClient:
+    """Typed v1 SDK over HTTP in the bench's chosen encoding."""
 
-    def _post(self, path, payload):
-        req = urllib.request.Request(
-            self.base + path, data=json.dumps(payload).encode(),
-            headers={"Content-Type": "application/json"}, method="POST")
-        with urllib.request.urlopen(req, timeout=120) as r:
-            return json.loads(r.read())
+    def __init__(self, base: str, encoding: str):
+        self.c = CoresetClient(base, encoding=encoding)
 
     def loss(self, name, rects, labels, eps):
-        return self._post("/query/loss", {"name": name, "rects": rects.tolist(),
-                                          "labels": labels.tolist(), "eps": eps})
+        return self.c.query_loss(name, rects, labels, eps=eps)
+
+    def loss_batch(self, name, rects, labels, eps):
+        return self.c.query_loss_batch(name, rects, labels, eps=eps)
 
     def build(self, name, k, eps):
-        self._post("/build", {"name": name, "k": k, "eps": eps})
+        self.c.build(name, k, eps)
 
     def fit(self, name, k, eps):
-        self._post("/query/fit", {"name": name, "k": k, "eps": eps,
-                                  "n_estimators": 3})
+        self.c.fit(name, k, eps, n_estimators=3)
 
     def ingest(self, name, band):
-        self._post("/ingest", {"name": name, "band": band.tolist()})
+        self.c.ingest(name, band=band)
 
     def register(self, name, values):
         # replace: rerunning the loadgen against a long-lived server must not
-        # trip the duplicate-registration guard
-        self._post("/signals", {"name": name, "values": values.tolist(),
-                                "replace": True})
+        # trip the duplicate-registration guard (409 conflict)
+        self.c.register_signal(name, values, replace=True)
+
+
+def _time_registration(client, n: int, m: int, repeats: int = 3) -> float:
+    """Best-of-``repeats`` wall-clock to register an (n, m) dense signal —
+    isolates the wire codec + server parse cost (no coreset build)."""
+    y = piecewise_signal(n, m, 8, noise=0.15, seed=42)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        client.register("bench-register-probe", y)
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run(duration: float, clients: int, n: int, m: int, k_max: int,
-        http: str | None) -> dict:
+        http: str | None, encoding: str, engine_mode: bool,
+        register_nm: tuple[int, int]) -> dict:
     metrics = ServiceMetrics()
     engine = None
-    if http:
-        client_fac = lambda: _HttpClient(http)  # noqa: E731
-    else:
+    srv = None
+    if engine_mode:
         engine = CoresetEngine(workers=4, metrics=metrics)
-        client_fac = lambda: _LocalClient(engine)  # noqa: E731
+        client_fac = lambda: _EngineClient(engine)  # noqa: E731
+        mode = "engine"
+    else:
+        if http:
+            base = http
+        else:
+            engine = CoresetEngine(workers=4, metrics=metrics)
+            srv = make_server(engine)
+            serve_forever_in_thread(srv)
+            base = f"http://127.0.0.1:{srv.server_address[1]}"
+        client_fac = lambda: _SdkClient(base, encoding)  # noqa: E731
+        mode = encoding
 
     y = piecewise_signal(n, m, k_max, noise=0.15, seed=0)
     setup = client_fac()
+    reg_s = _time_registration(setup, *register_nm)
     setup.register("bench", y)
     setup.build("bench", k_max, 0.2)  # warm anchor coreset
 
     stop = threading.Event()
-    counts = {"loss": 0, "build": 0, "fit": 0, "ingest": 0, "errors": 0}
+    counts = {"loss": 0, "loss_batch": 0, "build": 0, "fit": 0, "ingest": 0,
+              "errors": 0}
     lat: dict[str, list[float]] = {op: [] for op in counts}
     lock = threading.Lock()
 
@@ -125,12 +165,21 @@ def run(duration: float, clients: int, n: int, m: int, k_max: int,
             u = rng.uniform()
             t0 = time.perf_counter()
             try:
-                if u < 0.7:
+                if u < 0.6:
                     kq = int(rng.integers(3, k_max + 1))
                     q = random_tree_segmentation(n, m, kq, rng)
                     cl.loss("bench", q.rects, q.labels,
                             float(rng.choice([0.25, 0.3, 0.4])))
                     op = "loss"
+                elif u < 0.7:
+                    kq = int(rng.integers(3, k_max + 1))
+                    segs = [random_tree_segmentation(n, m, kq, rng)
+                            for _ in range(8)]
+                    cl.loss_batch("bench",
+                                  np.stack([s.rects for s in segs]),
+                                  np.stack([s.labels for s in segs]),
+                                  float(rng.choice([0.25, 0.3, 0.4])))
+                    op = "loss_batch"
                 elif u < 0.9:
                     cl.build("bench", int(rng.integers(2, k_max + 1)),
                              float(rng.choice([0.2, 0.25, 0.3])))
@@ -170,9 +219,11 @@ def run(duration: float, clients: int, n: int, m: int, k_max: int,
         t.join(timeout=30)
     wall = time.perf_counter() - t_start
 
-    total = sum(counts[op] for op in ("loss", "build", "fit", "ingest"))
-    out = {"duration_s": wall, "clients": clients, "ops": dict(counts),
-           "rps": total / wall, "http": bool(http)}
+    total = sum(counts[op] for op in counts if op != "errors")
+    out = {"mode": mode, "duration_s": wall, "clients": clients,
+           "ops": dict(counts), "rps": total / wall,
+           "register_seconds": reg_s,
+           "register_nm": list(register_nm)}
     for op, xs in lat.items():
         if xs:
             xs = np.sort(xs)
@@ -186,9 +237,34 @@ def run(duration: float, clients: int, n: int, m: int, k_max: int,
         out["cache"] = {"hit_rate": hits / max(lookups, 1),
                         "dominance_hits": snap.get("cache_hit_dominated", 0),
                         "builds": snap.get("coreset_builds", 0),
-                        "coalesced": snap.get("builds_coalesced", 0)}
+                        "coalesced": snap.get("builds_coalesced", 0),
+                        "forest_hits": snap.get("forest_cache_hit", 0)}
+        out["loss_scoring_calls"] = snap.get("loss_scoring_calls", 0)
+    if srv is not None:
+        srv.shutdown()
+    if engine is not None:
         engine.close()
     return out
+
+
+def _save_merged(res: dict) -> pathlib.Path:
+    """Merge this run under its mode key so JSON and binary runs land side
+    by side in one file for CI to compare."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / "bench_service.json"
+    merged = {}
+    if p.exists():
+        try:
+            old = json.loads(p.read_text())
+            # one-file-per-mode layout only; discard pre-v1 flat layouts
+            if isinstance(old, dict) and all(
+                    isinstance(v, dict) and "mode" in v for v in old.values()):
+                merged = old
+        except (json.JSONDecodeError, OSError):
+            pass
+    merged[res["mode"]] = res
+    p.write_text(json.dumps(merged, indent=1, default=float))
+    return p
 
 
 def main() -> None:
@@ -198,23 +274,37 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=192)
     ap.add_argument("--m", type=int, default=96)
     ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--encoding", choices=("json", "binary"), default="binary",
+                    help="wire encoding the SDK clients negotiate")
     ap.add_argument("--http", default=None,
                     help="target a live server (e.g. http://127.0.0.1:8787) "
-                         "instead of the in-process engine")
+                         "instead of booting one in-process")
+    ap.add_argument("--engine", action="store_true",
+                    help="bypass HTTP and drive the CoresetEngine directly")
+    ap.add_argument("--register-n", type=int, default=512,
+                    help="rows of the registration-latency probe signal")
+    ap.add_argument("--register-m", type=int, default=512,
+                    help="cols of the registration-latency probe signal")
     ap.add_argument("--smoke", action="store_true",
                     help="2-second CI run: 4 clients, small signal")
     args = ap.parse_args()
     if args.smoke:
         args.duration, args.clients, args.n, args.m = 2.0, 4, 96, 64
 
-    res = run(args.duration, args.clients, args.n, args.m, args.k, args.http)
+    res = run(args.duration, args.clients, args.n, args.m, args.k,
+              args.http, args.encoding, args.engine,
+              (args.register_n, args.register_m))
     emit("service_rps", 1e6 / max(res["rps"], 1e-9), f"rps={res['rps']:.1f}")
+    emit("service_register", 1e6 * res["register_seconds"],
+         f"mode={res['mode']} nm={res['register_nm']}")
     if "loss" in res:
         emit("service_loss_p50", 1e3 * res["loss"]["p50_ms"],
              f"p99_ms={res['loss']['p99_ms']:.2f}")
-    p = save_json("bench_service", res)
-    print(f"[bench_service] {res['rps']:.1f} req/s over {res['duration_s']:.1f}s "
-          f"({res['ops']}) -> {p}")
+    p = _save_merged(res)
+    print(f"[bench_service] mode={res['mode']} {res['rps']:.1f} req/s over "
+          f"{res['duration_s']:.1f}s ({res['ops']}) "
+          f"register({res['register_nm'][0]}x{res['register_nm'][1]})="
+          f"{1e3 * res['register_seconds']:.1f}ms -> {p}")
     if res["ops"]["errors"]:
         sys.exit(f"[bench_service] {res['ops']['errors']} request errors")
     if res["ops"]["loss"] == 0 or res["ops"]["ingest"] == 0:

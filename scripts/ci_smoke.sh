@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 suite + a 2-second closed-loop run against the coreset
-# serving engine, so serving-path regressions fail fast.
+# CI smoke: tier-1 suite + the serve_coresets self-check + a 2-second
+# closed-loop loadgen per wire encoding, so serving-path regressions fail
+# fast.  The final gate asserts the v1 binary frame actually beats JSON on
+# 512x512 signal registration (the ROADMAP's "JSON array parsing dominates"
+# fix) using the per-mode results both runs merged into
+# benchmarks/results/bench_service.json.
 #
 #   scripts/ci_smoke.sh
 set -euo pipefail
@@ -10,10 +14,29 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -q
 
-echo "== serve_coresets smoke (concurrent HTTP clients) =="
+echo "== serve_coresets smoke (concurrent SDK clients, both encodings) =="
 python -m repro.launch.serve_coresets --smoke
 
-echo "== bench_service loadgen smoke (2s) =="
-python benchmarks/bench_service.py --smoke
+echo "== bench_service loadgen smoke (2s, json encoding) =="
+python benchmarks/bench_service.py --smoke --encoding json
+
+echo "== bench_service loadgen smoke (2s, binary encoding) =="
+python benchmarks/bench_service.py --smoke --encoding binary
+
+echo "== binary-vs-json registration gate =="
+python - <<'EOF'
+import json, pathlib, sys
+p = pathlib.Path("benchmarks/results/bench_service.json")
+res = json.loads(p.read_text())
+missing = [m for m in ("json", "binary") if m not in res]
+if missing:
+    sys.exit(f"[ci_smoke] bench_service.json missing mode(s): {missing}")
+j, b = res["json"]["register_seconds"], res["binary"]["register_seconds"]
+nm = res["binary"]["register_nm"]
+print(f"[ci_smoke] register {nm[0]}x{nm[1]}: json={1e3*j:.1f}ms "
+      f"binary={1e3*b:.1f}ms (speedup {j/max(b,1e-9):.2f}x)")
+if b >= j:
+    sys.exit("[ci_smoke] FAIL: binary registration is not faster than JSON")
+EOF
 
 echo "== ci_smoke PASS =="

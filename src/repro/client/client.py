@@ -1,0 +1,239 @@
+"""CoresetClient — typed v1 SDK over stdlib urllib.
+
+Every method takes/returns ``repro.service.protocol`` messages (or numpy
+arrays that are coerced into them) — callers never hand-roll dicts, and the
+wire encoding is invisible to them:
+
+  * ``encoding="binary"`` (default): requests ship as compressed npz frames
+    and responses are requested in the same format via ``Accept`` — large
+    signal registration skips ``tolist``/JSON entirely;
+  * ``encoding="json"``: readable bodies, same dataclasses;
+  * a server that rejects the binary media type (HTTP 415 — e.g. an older
+    deployment) downgrades the client to JSON for the rest of its life.
+
+Transient failures (connection errors, timeouts, HTTP 5xx) retry with
+exponential backoff up to ``retries`` times; structured API errors
+(status < 500 with the v1 envelope) raise ``CoresetAPIError(http, code,
+message)`` immediately and never retry.
+
+    from repro.client import CoresetClient
+    c = CoresetClient("http://127.0.0.1:8787")
+    c.register_signal("img", values=y)
+    r = c.query_loss("img", rects, labels, eps=0.3)
+    print(r.loss, r.eps_eff, r.served_from)
+"""
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+
+from repro.service import protocol as P
+
+__all__ = ["CoresetClient", "CoresetAPIError", "TransportError"]
+
+
+class CoresetAPIError(Exception):
+    """Structured error from the service's uniform v1 envelope."""
+
+    def __init__(self, http: int, code: str, message: str):
+        super().__init__(f"[{http} {code}] {message}")
+        self.http = http
+        self.code = code
+        self.message = message
+
+
+class TransportError(Exception):
+    """Connection-level failure after exhausting retries."""
+
+
+class CoresetClient:
+    def __init__(self, base_url: str, *, encoding: str = "binary",
+                 timeout: float = 120.0, retries: int = 2,
+                 backoff: float = 0.1):
+        if encoding not in ("binary", "json"):
+            raise ValueError(f"encoding must be 'binary' or 'json', "
+                             f"got {encoding!r}")
+        self.base_url = base_url.rstrip("/")
+        self.encoding = encoding
+        self.timeout = float(timeout)
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        # request-frame codec: None = best this host encodes; negotiated
+        # down to "zlib" if the server 415s a zstd frame
+        self._codec: str | None = None
+
+    # ------------------------------------------------------------ transport
+    def _request(self, method: str, path: str, body: bytes | None,
+                 content_type: str | None):
+        if self.encoding == "binary":
+            # advertise the strongest codec THIS host can decode; the
+            # server encodes its response accordingly (zlib unless zstd is
+            # explicitly offered), so a 200 is always decodable here
+            codec = "zstd" if P.zstandard is not None else "zlib"
+            accept = f"{P.CONTENT_TYPE_BINARY};codec={codec}"
+        else:
+            accept = P.CONTENT_TYPE_JSON
+        headers = {"Accept": accept}
+        if content_type is not None:
+            headers["Content-Type"] = content_type
+        req = urllib.request.Request(self.base_url + path, data=body,
+                                     headers=headers, method=method)
+        with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+            return resp.status, resp.headers.get("Content-Type", ""), resp.read()
+
+    def _raise_api_error(self, http: int, ctype: str, raw: bytes):
+        try:
+            env = P.decode(ctype, raw, expect=P.ErrorResponse)
+            raise CoresetAPIError(http, env.error.code, env.error.message)
+        except P.ProtocolError:
+            raise CoresetAPIError(http, "unknown",
+                                  raw[:512].decode("utf-8", "replace")) from None
+
+    def _call(self, path: str, msg: P._Wire, expect: type,
+              retryable: bool = True):
+        retries = self.retries if retryable else 0
+        attempt = 0
+        downgraded = False
+        while True:
+            ctype, body = msg.to_wire(self.encoding,
+                                      binary_codec=self._codec)
+            try:
+                status, rtype, raw = self._request("POST", path, body, ctype)
+            except urllib.error.HTTPError as exc:
+                raw = exc.read()
+                if exc.code == 415 and self.encoding == "binary":
+                    # format mismatches are not transient failures, so the
+                    # renegotiation retries spend no budget slots: first
+                    # drop the frame codec to stdlib zlib, then give up on
+                    # binary entirely and speak JSON
+                    if self._codec != "zlib":
+                        self._codec = "zlib"
+                        continue
+                    if not downgraded:
+                        self.encoding = "json"
+                        downgraded = True
+                        continue
+                if exc.code >= 500:
+                    last = TransportError(f"HTTP {exc.code} from {path}: "
+                                          f"{raw[:256]!r}")
+                else:
+                    self._raise_api_error(
+                        exc.code, exc.headers.get("Content-Type", ""), raw)
+            except (urllib.error.URLError, TimeoutError, ConnectionError,
+                    OSError) as exc:
+                last = TransportError(f"{type(exc).__name__}: {exc}")
+            else:
+                if status >= 400:  # non-raising urlopen implementations
+                    self._raise_api_error(status, rtype, raw)
+                return P.decode(rtype, raw, expect=expect)
+            if attempt >= retries:
+                raise last
+            time.sleep(self.backoff * (2 ** attempt))
+            attempt += 1
+
+    @staticmethod
+    def _spec(k: int | None, eps: float | None,
+              k_default: int | None = None) -> P.CoresetSpec | None:
+        if k is None and eps is None:
+            return None
+        kk = k if k is not None else k_default
+        if kk is None:
+            raise ValueError("eps given without k and no default k available")
+        return P.CoresetSpec(k=int(kk), eps=float(eps if eps is not None else 0.2))
+
+    # ------------------------------------------------------------- registry
+    def register_signal(self, name: str, values=None, *, synthetic=None,
+                        replace: bool = False) -> P.SignalInfo:
+        msg = P.RegisterRequest(
+            signal=P.SignalRef(name=name),
+            values=(np.ascontiguousarray(values, np.float64)
+                    if values is not None else None),
+            synthetic=synthetic, replace=replace)
+        # replace=True is idempotent; replace=False is not — retrying it
+        # after a lost response would 409 a registration that succeeded
+        return self._call("/v1/signals", msg, P.SignalInfo,
+                          retryable=replace)
+
+    def ingest(self, name: str, band=None, *, synthetic=None) -> P.SignalInfo:
+        msg = P.IngestRequest(
+            signal=P.SignalRef(name=name),
+            band=(np.ascontiguousarray(band, np.float64)
+                  if band is not None else None),
+            synthetic=synthetic)
+        # append-only state mutation with no dedup token: a retry after a
+        # lost response would ingest the band twice and silently corrupt
+        # the signal, so transport failures surface to the caller instead
+        return self._call("/v1/ingest", msg, P.SignalInfo, retryable=False)
+
+    # -------------------------------------------------------------- queries
+    def build(self, name: str, k: int, eps: float = 0.2) -> P.BuildResponse:
+        msg = P.BuildRequest(signal=P.SignalRef(name=name),
+                             spec=P.CoresetSpec(k=k, eps=eps))
+        return self._call("/v1/build", msg, P.BuildResponse)
+
+    def query_loss(self, name: str, rects, labels, *, k: int | None = None,
+                   eps: float | None = None) -> P.LossResponse:
+        rects = np.asarray(rects, np.int64).reshape(-1, 4)
+        msg = P.LossQuery(
+            signal=P.SignalRef(name=name), rects=rects,
+            labels=np.asarray(labels, np.float64).ravel(),
+            spec=self._spec(k, eps, k_default=max(rects.shape[0], 1)))
+        return self._call("/v1/query/loss", msg, P.LossResponse)
+
+    def query_loss_batch(self, name: str, rects, labels, *,
+                         k: int | None = None, eps: float | None = None,
+                         ) -> P.BatchLossResponse:
+        """Score T same-signal segmentations in ONE fused request:
+        ``rects`` (T, K, 4), ``labels`` (T, K)."""
+        rects = np.asarray(rects, np.int64)
+        labels = np.asarray(labels, np.float64)
+        if rects.ndim != 3:
+            raise ValueError("batch rects must have shape (T, K, 4)")
+        msg = P.BatchLossQuery(
+            signal=P.SignalRef(name=name), rects=rects, labels=labels,
+            spec=self._spec(k, eps, k_default=max(rects.shape[1], 1)))
+        return self._call("/v1/query/loss:batch", msg, P.BatchLossResponse)
+
+    def fit(self, name: str, k: int, eps: float = 0.2, *,
+            n_estimators: int = 10, max_leaves: int | None = None,
+            predict=None, seed: int = 0) -> P.FitResponse:
+        msg = P.FitRequest(
+            signal=P.SignalRef(name=name), spec=P.CoresetSpec(k=k, eps=eps),
+            n_estimators=n_estimators, max_leaves=max_leaves,
+            predict=(np.asarray(predict, np.float64).reshape(-1, 2)
+                     if predict is not None else None),
+            seed=seed)
+        return self._call("/v1/query/fit", msg, P.FitResponse)
+
+    def compress(self, name: str, k: int, eps: float = 0.2, *,
+                 target_frac: float | None = None, style: str = "mean",
+                 max_points: int = 4096) -> P.CompressResponse:
+        msg = P.CompressRequest(
+            signal=P.SignalRef(name=name), spec=P.CoresetSpec(k=k, eps=eps),
+            target_frac=target_frac, style=style, max_points=max_points)
+        return self._call("/v1/query/compress", msg, P.CompressResponse)
+
+    # ------------------------------------------------------------ telemetry
+    def _get_json(self, path: str) -> dict:
+        try:
+            status, _, raw = self._request("GET", path, None, None)
+        except urllib.error.HTTPError as exc:
+            self._raise_api_error(exc.code, exc.headers.get("Content-Type", ""),
+                                  exc.read())
+        if status >= 400:
+            self._raise_api_error(status, "application/json", raw)
+        return json.loads(raw)
+
+    def healthz(self) -> dict:
+        return self._get_json("/v1/healthz")
+
+    def stats(self) -> dict:
+        return self._get_json("/v1/stats")
+
+    def metrics_text(self) -> str:
+        _, _, raw = self._request("GET", "/v1/metrics", None, None)
+        return raw.decode()

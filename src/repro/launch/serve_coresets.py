@@ -1,17 +1,23 @@
-"""Coreset serving launcher: HTTP front over the CoresetEngine.
+"""Coreset serving launcher: v1 HTTP front over the CoresetEngine.
 
   python -m repro.launch.serve_coresets --port 8787            # serve
   python -m repro.launch.serve_coresets --smoke                # self-check
 
-``--smoke`` boots the server on an ephemeral port, drives it with >= 4
-concurrent HTTP client threads (register + build + tree-loss + forest-fit +
-streamed ingest), then asserts the acceptance properties:
+``--smoke`` boots the server on an ephemeral port and drives it exclusively
+through the typed SDK (``repro.client.CoresetClient`` — both the binary and
+JSON encodings) with >= 4 concurrent client threads (register + build +
+tree-loss + forest-fit + streamed ingest), then asserts:
 
   * at least one *dominance* cache hit was served (a (k', eps') coreset
     answered a (k <= k', eps >= eps') request without a rebuild);
   * the streamed-ingest coreset's Algorithm-5 loss agrees with a one-shot
     ``signal_coreset`` build within the composed eps bound
-    (|L_stream - L_oneshot| <= (eps_eff + eps) * true_loss).
+    (|L_stream - L_oneshot| <= (eps_eff + eps) * true_loss);
+  * a fused ``/v1/query/loss:batch`` of T segmentations matches T
+    sequential ``/v1/query/loss`` answers while consuming ONE engine
+    scoring call instead of T;
+  * legacy unversioned routes still answer, with the ``Deprecation``
+    header and a ``Link: </v1/...>; rel="successor-version"`` pointer.
 
 Exit code 0 iff all checks pass.
 """
@@ -25,31 +31,14 @@ import urllib.request
 
 import numpy as np
 
+from repro.client import CoresetClient
 from repro.service import CoresetEngine, ServiceMetrics, make_server, serve_forever_in_thread
 
 __all__ = ["main", "run_smoke"]
 
 
-def _post(base: str, path: str, payload: dict) -> dict:
-    req = urllib.request.Request(
-        base + path, data=json.dumps(payload).encode(),
-        headers={"Content-Type": "application/json"}, method="POST")
-    with urllib.request.urlopen(req, timeout=120) as resp:
-        return json.loads(resp.read())
-
-
-def _get(base: str, path: str):
-    with urllib.request.urlopen(base + path, timeout=30) as resp:
-        body = resp.read()
-    try:
-        return json.loads(body)
-    except json.JSONDecodeError:
-        return body.decode()
-
-
 def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int:
     from repro.core import fitting_loss, random_tree_segmentation, signal_coreset, true_loss
-    from repro.core.segmentation import Segmentation  # noqa: F401  (rects shape doc)
     from repro.data.signals import piecewise_signal
 
     metrics = ServiceMetrics()
@@ -60,9 +49,10 @@ def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int
 
     n, m, k_max, eps_tight = 96, 64, 8, 0.2
     y = piecewise_signal(n, m, k_max, noise=0.15, seed=7)
-    _post(base, "/signals", {"name": "dense", "values": y.tolist()})
+    setup = CoresetClient(base, encoding="binary")
+    setup.register_signal("dense", values=y)
     # anchor build: the (k_max, eps_tight) coreset every later query dominates
-    _post(base, "/build", {"name": "dense", "k": k_max, "eps": eps_tight})
+    setup.build("dense", k_max, eps_tight)
 
     errors: list[str] = []
     rng_global = np.random.default_rng(123)
@@ -70,31 +60,30 @@ def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int
     stream_eps = 0.25
 
     def query_client(cid: int) -> None:
+        # odd clients speak JSON, even speak binary: both negotiated paths
+        # are exercised under concurrency
+        cl = CoresetClient(base, encoding="json" if cid % 2 else "binary")
         rng = np.random.default_rng(1000 + cid)
         try:
             for _ in range(rounds):
                 kq = int(rng.integers(3, k_max + 1))
                 q = random_tree_segmentation(n, m, kq, rng)
-                r = _post(base, "/query/loss", {
-                    "name": "dense", "rects": q.rects.tolist(),
-                    "labels": q.labels.tolist(), "eps": 0.3})
+                r = cl.query_loss("dense", q.rects, q.labels, eps=0.3)
                 tl = true_loss(y, q.rects, q.labels)
-                if tl > 1e-9 and abs(r["loss"] - tl) / tl > 0.3 + 1e-6:
+                if tl > 1e-9 and abs(r.loss - tl) / tl > 0.3 + 1e-6:
                     errors.append(f"client {cid}: rel err "
-                                  f"{abs(r['loss'] - tl) / tl:.3f} > eps")
-            _post(base, "/query/fit", {"name": "dense", "k": k_max,
-                                       "eps": eps_tight, "n_estimators": 3,
-                                       "predict": [[1, 1], [n - 2, m - 2]]})
+                                  f"{abs(r.loss - tl) / tl:.3f} > eps")
+            cl.fit("dense", k_max, eps_tight, n_estimators=3,
+                   predict=[[1, 1], [n - 2, m - 2]])
         except Exception as exc:  # noqa: BLE001
             errors.append(f"client {cid}: {type(exc).__name__}: {exc}")
 
     def ingest_client() -> None:
+        cl = CoresetClient(base, encoding="binary")
         try:
             for i in range(0, n, band_rows):
-                _post(base, "/ingest", {"name": "stream",
-                                        "band": y[i:i + band_rows].tolist()})
-            _post(base, "/build", {"name": "stream", "k": k_max,
-                                   "eps": stream_eps})
+                cl.ingest("stream", band=y[i:i + band_rows])
+            cl.build("stream", k_max, stream_eps)
         except Exception as exc:  # noqa: BLE001
             errors.append(f"ingest: {type(exc).__name__}: {exc}")
 
@@ -108,24 +97,49 @@ def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int
 
     # ---- streamed-ingest consistency vs one-shot build (composed eps bound)
     q = random_tree_segmentation(n, m, 6, rng_global)
-    r_stream = _post(base, "/query/loss", {
-        "name": "stream", "rects": q.rects.tolist(),
-        "labels": q.labels.tolist(), "eps": stream_eps, "k": k_max})
+    r_stream = setup.query_loss("stream", q.rects, q.labels,
+                                eps=stream_eps, k=k_max)
     cs_one = signal_coreset(y, k_max, stream_eps)
     l_one = fitting_loss(cs_one, q.rects, q.labels)
     tl = true_loss(y, q.rects, q.labels)
-    composed = r_stream["eps_eff"] + stream_eps
-    gap = abs(r_stream["loss"] - l_one) / max(tl, 1e-12)
+    composed = r_stream.eps_eff + stream_eps
+    gap = abs(r_stream.loss - l_one) / max(tl, 1e-12)
     if gap > composed:
         errors.append(f"streamed vs one-shot gap {gap:.3f} > composed "
                       f"bound {composed:.3f}")
 
-    health = _get(base, "/healthz")
+    # ---- fused batch query: one scoring call, answers match sequential
+    T = 8
+    segs = [random_tree_segmentation(n, m, 5, rng_global) for _ in range(T)]
+    batch_rects = np.stack([s.rects for s in segs])
+    batch_labels = np.stack([s.labels for s in segs])
+    calls_before = metrics.get("loss_scoring_calls")
+    rb = setup.query_loss_batch("dense", batch_rects, batch_labels, eps=0.3)
+    fused_calls = metrics.get("loss_scoring_calls") - calls_before
+    if fused_calls != 1:
+        errors.append(f"batch query consumed {fused_calls} scoring calls, "
+                      "expected 1")
+    seq = [setup.query_loss("dense", s.rects, s.labels, eps=0.3).loss
+           for s in segs]
+    if not np.allclose(rb.losses, seq, rtol=1e-4):
+        errors.append("batch losses diverge from sequential /v1/query/loss")
+
+    # ---- legacy shim still answers, with the Deprecation header
+    req = urllib.request.Request(
+        base + "/healthz")
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        legacy_health = json.loads(resp.read())
+        if resp.headers.get("Deprecation") != "true":
+            errors.append("legacy /healthz missing Deprecation header")
+        if "/v1/healthz" not in (resp.headers.get("Link") or ""):
+            errors.append("legacy /healthz missing successor-version Link")
+
+    health = setup.healthz()
     dominated = metrics.get("cache_hit_dominated")
     if dominated < 1:
         errors.append("no dominance cache hit was served")
-    if health.get("status") != "ok":
-        errors.append(f"healthz: {health}")
+    if health.get("status") != "ok" or legacy_health.get("status") != "ok":
+        errors.append(f"healthz: {health} / legacy {legacy_health}")
 
     srv.shutdown()
     engine.close()
@@ -137,6 +151,7 @@ def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int
               f"builds={snap['counters'].get('builds_completed', 0)} "
               f"exact_hits={snap['counters'].get('cache_hit_exact', 0)} "
               f"dominance_hits={dominated} "
+              f"batch_scoring_calls={fused_calls} "
               f"stream_gap={gap:.4f} (bound {composed:.3f})")
         for e in errors:
             print(f"[smoke] FAIL: {e}")
@@ -152,7 +167,7 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--num-bands", type=int, default=4)
     ap.add_argument("--smoke", action="store_true",
-                    help="self-check with concurrent clients, then exit")
+                    help="self-check with concurrent SDK clients, then exit")
     args = ap.parse_args()
 
     if args.smoke:
@@ -162,8 +177,10 @@ def main() -> None:
                            workers=args.workers, num_bands=args.num_bands)
     srv = make_server(engine, host=args.host, port=args.port)
     print(f"[serve_coresets] listening on http://{args.host}:"
-          f"{srv.server_address[1]}  (POST /signals /ingest /build "
-          f"/query/loss /query/fit /query/compress; GET /healthz /stats /metrics)")
+          f"{srv.server_address[1]}  (v1: POST /v1/signals /v1/ingest "
+          f"/v1/build /v1/query/loss /v1/query/loss:batch /v1/query/fit "
+          f"/v1/query/compress; GET /v1/healthz /v1/stats /v1/metrics; "
+          f"legacy unversioned routes deprecated)")
     try:
         srv.serve_forever()
     except KeyboardInterrupt:

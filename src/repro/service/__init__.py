@@ -1,15 +1,17 @@
 # Coreset-as-a-service layer: the paper's reuse guarantee (one (k, eps)-
 # coreset answers EVERY <=k-leaf tree query) turned into a serving system —
 # dominance-aware cache, continuous-batching build scheduler, streamed
-# ingest via merge-reduce, and a stdlib HTTP/JSON front.  See DESIGN.md.
+# ingest via merge-reduce, a typed v1 wire protocol (JSON + binary npz
+# frames) and a stdlib HTTP front.  See DESIGN.md.
 from .cache import CacheEntry, DominanceCache
-from .engine import CoresetEngine, SignalState
+from .engine import CoresetEngine, SignalState, UnknownSignalError
 from .metrics import Histogram, ServiceMetrics
 from .scheduler import BuildScheduler
-from .api import make_server, serve_forever_in_thread
+from . import protocol
+from .api import ApiError, make_server, serve_forever_in_thread
 
 __all__ = [
     "CacheEntry", "DominanceCache", "CoresetEngine", "SignalState",
-    "Histogram", "ServiceMetrics", "BuildScheduler", "make_server",
-    "serve_forever_in_thread",
+    "UnknownSignalError", "Histogram", "ServiceMetrics", "BuildScheduler",
+    "protocol", "ApiError", "make_server", "serve_forever_in_thread",
 ]

@@ -1,28 +1,39 @@
-"""Stdlib HTTP/JSON front for the CoresetEngine.
+"""Versioned HTTP front for the CoresetEngine (v1 typed protocol).
 
 ``http.server.ThreadingHTTPServer`` — one OS thread per connection; the
 numpy-heavy work releases the GIL and builds are bounded by the scheduler's
 worker pool, so a plain threading server sustains the closed-loop loadgen
 without an async stack (and without any non-baked-in dependency).
 
-Routes (all request/response bodies are JSON):
+v1 routes (bodies are ``service.protocol`` messages, negotiated between
+JSON and the binary npz frame via ``Content-Type`` / ``Accept``):
 
-  POST /signals           {"name", "values": [[..]] | "synthetic": {...}}
-  POST /ingest            {"name", "band": [[..]] | "synthetic": {...}}
-  POST /build             {"name", "k", "eps"}
-  POST /query/loss        {"name", "rects": [[r0,r1,c0,c1]..], "labels": [..],
-                           "eps"?, "k"?}
-  POST /query/fit         {"name", "k", "eps"?, "n_estimators"?, "max_leaves"?,
-                           "predict"?: [[i,j]..], "seed"?}
-  POST /query/compress    {"name", "k", "eps"? | "target_frac"?, "style"?,
-                           "max_points"?}
-  GET  /healthz           liveness + basic gauges
-  GET  /stats             full JSON snapshot (signals, cache, latency)
-  GET  /metrics           Prometheus text exposition
+  POST /v1/signals            RegisterRequest   -> SignalInfo
+  POST /v1/ingest             IngestRequest     -> SignalInfo
+  POST /v1/build              BuildRequest      -> BuildResponse
+  POST /v1/query/loss         LossQuery         -> LossResponse
+  POST /v1/query/loss:batch   BatchLossQuery    -> BatchLossResponse
+  POST /v1/query/fit          FitRequest        -> FitResponse
+  POST /v1/query/compress     CompressRequest   -> CompressResponse
+  GET  /v1/healthz            liveness + basic gauges (JSON)
+  GET  /v1/stats              full JSON snapshot (signals, cache, latency)
+  GET  /v1/metrics            Prometheus text exposition
+
+Every status >= 400 carries the uniform envelope
+``{"type": "error", "error": {"code", "message"}}`` with code in
+{bad_request, not_found, conflict, payload_too_large, unsupported_media,
+internal}.
+
+The pre-v1 unversioned routes (``/signals``, ``/ingest``, ``/build``,
+``/query/*``, ``/healthz``, ``/stats``, ``/metrics``) remain as thin
+deprecated shims: their flat-dict request schema is translated to the typed
+messages, they delegate to the same handlers, and every response carries
+``Deprecation: true`` plus a ``Link: </v1/...>; rel="successor-version"``
+header.  New clients should use ``repro.client.CoresetClient``.
 
 ``synthetic`` payloads ({"kind": "piecewise"|"smooth", n, m, k?, noise?,
 seed?}) generate the signal server-side — the loadgen path, so benchmarks
-measure the serving engine rather than JSON array parsing.
+can measure the serving engine rather than the wire codec.
 """
 from __future__ import annotations
 
@@ -33,34 +44,241 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
 
-from .engine import CoresetEngine
+from . import protocol as P
+from .engine import CoresetEngine, UnknownSignalError
+from .protocol import ProtocolError, UnsupportedCodec
 
-__all__ = ["make_server", "serve_forever_in_thread"]
+__all__ = ["make_server", "serve_forever_in_thread", "ApiError"]
 
-_MAX_BODY = 64 << 20
-_ROUTES = frozenset({"/healthz", "/stats", "/metrics", "/signals", "/ingest",
-                     "/build", "/query/loss", "/query/fit", "/query/compress"})
+_MAX_BODY = 256 << 20
+
+
+class ApiError(Exception):
+    """Handler-raised error with a definite HTTP status + envelope code."""
+
+    def __init__(self, http: int, code: str, message: str):
+        super().__init__(message)
+        self.http = http
+        self.code = code
 
 
 def _synthetic(spec: dict) -> np.ndarray:
     from repro.data.signals import piecewise_signal, smooth_field
+    if not isinstance(spec, dict):
+        raise ProtocolError("'synthetic' must be an object")
     kind = spec.get("kind", "piecewise")
-    n, m = int(spec["n"]), int(spec["m"])
+    try:
+        n, m = int(spec["n"]), int(spec["m"])
+    except (KeyError, TypeError, ValueError):
+        raise ProtocolError("synthetic spec needs integer 'n' and 'm'") from None
     seed = int(spec.get("seed", 0))
     if kind == "piecewise":
         return piecewise_signal(n, m, int(spec.get("k", 8)),
                                 noise=float(spec.get("noise", 0.15)), seed=seed)
     if kind == "smooth":
         return smooth_field(n, m, noise=float(spec.get("noise", 0.1)), seed=seed)
-    raise ValueError(f"unknown synthetic kind {kind!r}")
+    raise ProtocolError(f"unknown synthetic kind {kind!r}")
 
 
-def _values_from(body: dict, field: str) -> np.ndarray:
-    if field in body:
-        return np.asarray(body[field], np.float64)
-    if "synthetic" in body:
-        return _synthetic(body["synthetic"])
-    raise ValueError(f"need {field!r} or 'synthetic'")
+def _values_from(values: np.ndarray | None, synthetic: dict | None,
+                 field: str) -> np.ndarray:
+    """Resolve a dense payload: the typed array field (already dtype/ndim
+    validated by the protocol coercers — ragged or non-numeric input fails
+    decode with a 400 envelope, never a 500) or a server-side generator."""
+    if values is not None:
+        if values.ndim != 2 or values.size == 0:
+            raise ProtocolError(f"{field!r} must be a non-empty 2-D array")
+        if not np.isfinite(values).all():
+            raise ProtocolError(f"{field!r} must be finite (NaN/inf found)")
+        return np.asarray(values, np.float64)
+    if synthetic is not None:
+        return _synthetic(synthetic)
+    raise ProtocolError(f"need {field!r} or 'synthetic'")
+
+
+# ------------------------------------------------------------- v1 handlers
+def _h_register(eng: CoresetEngine, msg: P.RegisterRequest) -> P.SignalInfo:
+    values = _values_from(msg.values, msg.synthetic, "values")
+    try:
+        info = eng.register_signal(msg.signal.name, values, replace=msg.replace)
+    except ValueError as exc:
+        if "already registered" in str(exc):
+            raise ApiError(409, "conflict", str(exc)) from None
+        raise
+    return _signal_info(info)
+
+
+def _h_ingest(eng: CoresetEngine, msg: P.IngestRequest) -> P.SignalInfo:
+    band = _values_from(msg.band, msg.synthetic, "band")
+    return _signal_info(eng.ingest_band(msg.signal.name, band))
+
+
+def _signal_info(info: dict) -> P.SignalInfo:
+    return P.SignalInfo(
+        name=info["name"], n=int(info["n"]),
+        m=int(info["m"]) if info["m"] is not None else None,
+        bands=int(info["bands"]), streamed=bool(info["streamed"]),
+        version=info["version"],
+        builders=[list(b) for b in info["builders"]])
+
+
+def _h_build(eng: CoresetEngine, msg: P.BuildRequest) -> P.BuildResponse:
+    cs, eps_eff, how = eng.get_coreset(msg.signal.name, msg.spec.k,
+                                       msg.spec.eps)
+    return P.BuildResponse(
+        fingerprint=cs.fingerprint(), eps_eff=float(eps_eff), served_from=how,
+        size=int(cs.size), blocks=int(cs.num_blocks), nbytes=int(cs.nbytes),
+        compression_ratio=float(cs.compression_ratio()),
+        certified=bool(cs.certified), build_seconds=float(cs.build_seconds))
+
+
+def _h_loss(eng: CoresetEngine, msg: P.LossQuery) -> P.LossResponse:
+    eps = msg.spec.eps if msg.spec is not None else 0.2
+    k = msg.spec.k if msg.spec is not None else None
+    r = eng.tree_loss(msg.signal.name, msg.rects, msg.labels, eps=eps, k=k)
+    return P.LossResponse(
+        loss=r["loss"], k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
+        served_from=r["served_from"], fingerprint=r["fingerprint"],
+        coreset_size=r["coreset_size"])
+
+
+def _h_loss_batch(eng: CoresetEngine, msg: P.BatchLossQuery,
+                  ) -> P.BatchLossResponse:
+    eps = msg.spec.eps if msg.spec is not None else 0.2
+    k = msg.spec.k if msg.spec is not None else None
+    r = eng.tree_loss_batch(msg.signal.name, msg.rects, msg.labels,
+                            eps=eps, k=k)
+    return P.BatchLossResponse(
+        losses=r["losses"], k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
+        served_from=r["served_from"], fingerprint=r["fingerprint"],
+        coreset_size=r["coreset_size"], scoring_calls=r["scoring_calls"])
+
+
+def _h_fit(eng: CoresetEngine, msg: P.FitRequest) -> P.FitResponse:
+    r = eng.fit_forest(
+        msg.signal.name, k=msg.spec.k, eps=msg.spec.eps,
+        n_estimators=int(msg.n_estimators),
+        max_leaves=int(msg.max_leaves) if msg.max_leaves is not None else None,
+        predict=msg.predict, seed=int(msg.seed))
+    return P.FitResponse(
+        k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
+        served_from=r["served_from"], fingerprint=r["fingerprint"],
+        train_size=r["train_size"], n_estimators=r["n_estimators"],
+        model_cache=r["model_cache"],
+        predictions=(np.asarray(r["predictions"], np.float64)
+                     if "predictions" in r else None))
+
+
+def _h_compress(eng: CoresetEngine, msg: P.CompressRequest,
+                ) -> P.CompressResponse:
+    r = eng.compress(
+        msg.signal.name, k=msg.spec.k,
+        eps=None if msg.target_frac is not None else msg.spec.eps,
+        target_frac=(float(msg.target_frac)
+                     if msg.target_frac is not None else None),
+        style=msg.style, max_points=int(msg.max_points))
+    pts = r["points"]
+    return P.CompressResponse(
+        k=r["k"], eps_eff=r["eps_eff"], served_from=r["served_from"],
+        fingerprint=r["fingerprint"], size=r["size"], blocks=r["blocks"],
+        nbytes=r["nbytes"], compression_ratio=r["compression_ratio"],
+        truncated=r["truncated"],
+        X=np.asarray(pts["X"], np.float64).reshape(-1, 2),
+        y=np.asarray(pts["y"], np.float64),
+        w=np.asarray(pts["w"], np.float64))
+
+
+# (request message class, handler) per v1 POST route
+_V1_POST = {
+    "/v1/signals": (P.RegisterRequest, _h_register),
+    "/v1/ingest": (P.IngestRequest, _h_ingest),
+    "/v1/build": (P.BuildRequest, _h_build),
+    "/v1/query/loss": (P.LossQuery, _h_loss),
+    "/v1/query/loss:batch": (P.BatchLossQuery, _h_loss_batch),
+    "/v1/query/fit": (P.FitRequest, _h_fit),
+    "/v1/query/compress": (P.CompressRequest, _h_compress),
+}
+_V1_GET = frozenset({"/v1/healthz", "/v1/stats", "/v1/metrics"})
+
+# deprecated unversioned path -> v1 successor
+_LEGACY = {p[len("/v1"):]: p for p in (*_V1_POST, *_V1_GET)
+           if p != "/v1/query/loss:batch"}   # batch is v1-only
+
+_ROUTES = frozenset((*_V1_POST, *_V1_GET, *_LEGACY))
+
+
+# --------------------------------------------- legacy flat-dict translation
+def _req(body: dict, field: str):
+    try:
+        return body[field]
+    except KeyError:
+        raise ProtocolError(f"missing field {field!r}") from None
+
+
+def _legacy_spec(body: dict, *, k_default: int | None = None) -> P.CoresetSpec:
+    k = body.get("k", k_default)
+    if k is None:
+        raise ProtocolError("missing field 'k'")
+    return P.CoresetSpec(k=int(k), eps=float(body.get("eps", 0.2)))
+
+
+def _legacy_to_msg(path: str, body: dict) -> P._Wire:
+    if not isinstance(body, dict):
+        raise ProtocolError("body must be a JSON object")
+    ref = P.SignalRef(name=str(_req(body, "name")))
+    arr2 = P._arr(np.float64, ndim=2, allow_none=True)
+    if path == "/signals":
+        return P.RegisterRequest(
+            signal=ref, values=arr2(body.get("values")),
+            synthetic=body.get("synthetic"),
+            replace=bool(body.get("replace", False)))
+    if path == "/ingest":
+        return P.IngestRequest(signal=ref, band=arr2(body.get("band")),
+                               synthetic=body.get("synthetic"))
+    if path == "/build":
+        return P.BuildRequest(signal=ref, spec=_legacy_spec(body))
+    if path == "/query/loss":
+        rects = P._arr(np.int64, ndim=2)(_req(body, "rects"))
+        spec = None
+        if "k" in body or "eps" in body:
+            spec = _legacy_spec(body, k_default=max(rects.shape[0], 1))
+        return P.LossQuery(signal=ref, rects=rects,
+                           labels=P._arr(np.float64, ndim=1)(_req(body, "labels")),
+                           spec=spec)
+    if path == "/query/fit":
+        return P.FitRequest(
+            signal=ref, spec=_legacy_spec(body),
+            n_estimators=int(body.get("n_estimators", 10)),
+            max_leaves=(int(body["max_leaves"])
+                        if "max_leaves" in body else None),
+            predict=arr2(body.get("predict")),
+            seed=int(body.get("seed", 0)))
+    if path == "/query/compress":
+        return P.CompressRequest(
+            signal=ref, spec=_legacy_spec(body),
+            target_frac=(float(body["target_frac"])
+                         if "target_frac" in body else None),
+            style=str(body.get("style", "mean")),
+            max_points=int(body.get("max_points", 4096)))
+    raise ProtocolError(f"no legacy translation for {path}")
+
+
+def _legacy_payload(resp: P._Wire) -> dict:
+    """Shape a typed response like the pre-v1 flat JSON bodies: no "type"
+    tag, ``served_from`` also published under its old name ``cache``, and
+    compress points re-nested under "points" — so a legacy client's
+    ``r["cache"]`` / ``r["points"]["X"]`` keep working behind the shim."""
+    # drop nulls: pre-v1 bodies omitted absent keys (e.g. fit responses
+    # only carried "predictions" when predict points were sent)
+    payload = {k: v.tolist() if isinstance(v, np.ndarray) else v
+               for k, v in resp.to_payload().items() if v is not None}
+    payload.pop("type", None)
+    if "served_from" in payload:
+        payload["cache"] = payload["served_from"]
+    if isinstance(resp, P.CompressResponse):
+        payload["points"] = {"X": payload.pop("X"), "y": payload.pop("y"),
+                             "w": payload.pop("w")}
+    return payload
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -72,9 +290,8 @@ class _Handler(BaseHTTPRequestHandler):
         pass
 
     # ------------------------------------------------------------- plumbing
-    def _reply(self, code: int, payload, content_type: str = "application/json"):
-        body = (payload if isinstance(payload, bytes)
-                else json.dumps(payload).encode())
+    def _reply(self, code: int, body: bytes, content_type: str,
+               deprecated_for: str | None = None):
         if code >= 400:
             # an error may leave the request body unread (oversized payload,
             # JSON abort) — reusing the keep-alive connection would parse the
@@ -83,90 +300,139 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_response(code)
         self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
+        if deprecated_for is not None:
+            self.send_header("Deprecation", "true")
+            self.send_header("Link",
+                             f'<{deprecated_for}>; rel="successor-version"')
         self.end_headers()
         self.wfile.write(body)
 
-    def _body(self) -> dict:
+    def _reply_msg(self, code: int, msg: P._Wire, encoding: str,
+                   deprecated_for: str | None = None):
+        # binary responses use the codec the client's Accept advertised
+        # ("zlib" unless it explicitly said codec=zstd), so a zlib-only
+        # client never receives a frame it cannot decode.  The advertised
+        # codec is an upper bound, never a demand: a zstd-less server
+        # degrades to zlib silently — the handler already ran, so raising
+        # here would 415 a request whose state change was committed
+        codec = None
+        if encoding == "binary":
+            codec = P._Wire.accept_codec(self.headers.get("Accept", ""))
+            if codec == "zstd" and P.zstandard is None:
+                codec = "zlib"
+        ctype, body = msg.to_wire(encoding, binary_codec=codec)
+        self._reply(code, body, ctype, deprecated_for)
+
+    def _reply_json(self, code: int, payload,
+                    content_type: str = "application/json",
+                    deprecated_for: str | None = None):
+        body = (payload if isinstance(payload, bytes)
+                else json.dumps(payload).encode())
+        self._reply(code, body, content_type, deprecated_for)
+
+    def _error(self, http: int, code: str, message: str,
+               deprecated_for: str | None = None):
+        # errors are always JSON: the envelope must stay readable even when
+        # the request's binary frame was the thing that failed to parse
+        env = P.ErrorResponse(error=P.ErrorInfo(code=code, message=message))
+        self._reply_msg(http, env, "json", deprecated_for)
+
+    def _body(self) -> bytes:
         length = int(self.headers.get("Content-Length", 0))
         if length > _MAX_BODY:
-            raise ValueError("request body too large")
-        raw = self.rfile.read(length) if length else b"{}"
-        return json.loads(raw or b"{}")
+            raise ApiError(413, "payload_too_large",
+                           f"body of {length} bytes exceeds {_MAX_BODY}")
+        return self.rfile.read(length) if length else b""
 
+    def _accept_encoding(self) -> str:
+        accept = self.headers.get("Accept", "")
+        return "binary" if P.CONTENT_TYPE_BINARY in accept else "json"
+
+    # -------------------------------------------------------------- routing
     def _route(self, method: str) -> None:
         eng = self.engine
         path = self.path.split("?", 1)[0].rstrip("/") or "/"
         t0 = time.perf_counter()
-        route = f"{method} {path}"
         # latency metric label: client-supplied paths outside the route table
         # collapse to one bucket, else a URL scanner grows a histogram per
         # probed path and bloats every /metrics scrape
-        metric_route = route if path in _ROUTES else f"{method} <unmatched>"
+        metric_route = (f"{method} {path}" if path in _ROUTES
+                        else f"{method} <unmatched>")
+        successor = _LEGACY.get(path)      # non-None => deprecated shim
+        v1_path = successor or path
+        out_enc = self._accept_encoding()
         try:
-            if method == "GET" and path == "/healthz":
-                snap = eng.metrics.snapshot()
-                self._reply(200, {"status": "ok", "uptime_s": snap["uptime_s"],
-                                  "signals": len(eng.list_signals()),
-                                  "cache_entries": len(eng.cache),
-                                  "cache_bytes": eng.cache.nbytes,
-                                  "builds_in_flight": eng.scheduler.in_flight()})
-            elif method == "GET" and path == "/stats":
-                self._reply(200, eng.stats())
-            elif method == "GET" and path == "/metrics":
-                self._reply(200, eng.metrics.render().encode(),
-                            content_type="text/plain; version=0.0.4")
-            elif method == "POST" and path == "/signals":
-                b = self._body()
-                info = eng.register_signal(b["name"], _values_from(b, "values"),
-                                           replace=bool(b.get("replace", False)))
-                self._reply(200, info)
-            elif method == "POST" and path == "/ingest":
-                b = self._body()
-                self._reply(200, eng.ingest_band(b["name"], _values_from(b, "band")))
-            elif method == "POST" and path == "/build":
-                b = self._body()
-                cs, eps_eff, how = eng.get_coreset(
-                    b["name"], int(b["k"]), float(b.get("eps", 0.2)))
-                self._reply(200, {"fingerprint": cs.fingerprint(),
-                                  "size": cs.size, "blocks": cs.num_blocks,
-                                  "nbytes": cs.nbytes, "eps_eff": eps_eff,
-                                  "compression_ratio": cs.compression_ratio(),
-                                  "certified": cs.certified, "cache": how,
-                                  "build_seconds": cs.build_seconds})
-            elif method == "POST" and path == "/query/loss":
-                b = self._body()
-                self._reply(200, eng.tree_loss(
-                    b["name"], b["rects"], b["labels"],
-                    eps=float(b.get("eps", 0.2)),
-                    k=int(b["k"]) if "k" in b else None))
-            elif method == "POST" and path == "/query/fit":
-                b = self._body()
-                self._reply(200, eng.fit_forest(
-                    b["name"], k=int(b["k"]), eps=float(b.get("eps", 0.2)),
-                    n_estimators=int(b.get("n_estimators", 10)),
-                    max_leaves=int(b["max_leaves"]) if "max_leaves" in b else None,
-                    predict=b.get("predict"), seed=int(b.get("seed", 0))))
-            elif method == "POST" and path == "/query/compress":
-                b = self._body()
-                self._reply(200, eng.compress(
-                    b["name"], k=int(b["k"]),
-                    eps=float(b["eps"]) if "eps" in b else None,
-                    target_frac=float(b["target_frac"]) if "target_frac" in b else None,
-                    style=b.get("style", "mean"),
-                    max_points=int(b.get("max_points", 4096))))
+            if method == "GET" and v1_path in _V1_GET:
+                self._get(eng, v1_path, successor)
+            elif method == "POST" and v1_path in _V1_POST:
+                msg_cls, handler = _V1_POST[v1_path]
+                raw = self._body()
+                if successor is not None:
+                    # legacy flat-dict schema; JSON only, like the old API
+                    msg = _legacy_to_msg(path, json.loads(raw or b"{}"))
+                    resp = handler(eng, msg)
+                    self._reply_json(200, _legacy_payload(resp),
+                                     deprecated_for=successor)
+                else:
+                    ctype = self.headers.get("Content-Type", "")
+                    if (ctype.split(";")[0].strip().lower() not in
+                            ("", P.CONTENT_TYPE_JSON, P.CONTENT_TYPE_BINARY)):
+                        raise ApiError(415, "unsupported_media",
+                                       f"unsupported Content-Type {ctype!r}")
+                    msg = P.decode(ctype, raw, expect=msg_cls)
+                    self._reply_msg(200, handler(eng, msg), out_enc)
             else:
                 eng.metrics.inc("http_404")
-                self._reply(404, {"error": f"no route {route}"})
+                self._error(404, "not_found", f"no route {method} {path}")
                 return
             eng.metrics.inc("http_200")
-        except (KeyError, ValueError, TypeError, json.JSONDecodeError) as exc:
+            if successor is not None:
+                eng.metrics.inc("http_deprecated")
+        except ApiError as exc:
+            eng.metrics.inc(f"http_{exc.http}")
+            self._error(exc.http, exc.code, str(exc), successor)
+        except UnknownSignalError as exc:
+            # the one *intentional* KeyError (engine signal lookup); stray
+            # KeyErrors from handler bugs still surface as 500 internal
+            eng.metrics.inc("http_404")
+            self._error(404, "not_found", str(exc.args[0] if exc.args else exc),
+                        successor)
+        except UnsupportedCodec as exc:
+            # zstd frame on a zlib-only host: 415 tells the SDK to
+            # renegotiate down to JSON, unlike a 400 which means bad request
+            eng.metrics.inc("http_415")
+            self._error(415, "unsupported_media", str(exc), successor)
+        except (ProtocolError, ValueError, TypeError,
+                json.JSONDecodeError) as exc:
             eng.metrics.inc("http_400")
-            self._reply(400, {"error": f"{type(exc).__name__}: {exc}"})
+            self._error(400, "bad_request", f"{type(exc).__name__}: {exc}",
+                        successor)
         except Exception as exc:  # pragma: no cover - defensive 500
             eng.metrics.inc("http_500")
-            self._reply(500, {"error": f"{type(exc).__name__}: {exc}"})
+            self._error(500, "internal", f"{type(exc).__name__}: {exc}",
+                        successor)
         finally:
-            eng.metrics.observe(f"http {metric_route}", time.perf_counter() - t0)
+            eng.metrics.observe(f"http {metric_route}",
+                                time.perf_counter() - t0)
+
+    def _get(self, eng: CoresetEngine, v1_path: str,
+             successor: str | None) -> None:
+        if v1_path == "/v1/healthz":
+            snap = eng.metrics.snapshot()
+            self._reply_json(200, {
+                "status": "ok", "protocol": P.PROTOCOL_VERSION,
+                "uptime_s": snap["uptime_s"],
+                "signals": len(eng.list_signals()),
+                "cache_entries": len(eng.cache),
+                "cache_bytes": eng.cache.nbytes,
+                "builds_in_flight": eng.scheduler.in_flight()},
+                deprecated_for=successor)
+        elif v1_path == "/v1/stats":
+            self._reply_json(200, eng.stats(), deprecated_for=successor)
+        else:  # /v1/metrics
+            self._reply_json(200, eng.metrics.render().encode(),
+                             content_type="text/plain; version=0.0.4",
+                             deprecated_for=successor)
 
     def do_GET(self):  # noqa: N802
         self._route("GET")

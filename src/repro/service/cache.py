@@ -48,6 +48,9 @@ class CacheEntry:
     nbytes: int
     fingerprint: str
     hits: int = 0
+    build_seconds: float = 0.0   # construction cost, recorded at insert —
+                                 # the signal cost-aware eviction will weigh
+                                 # against bytes/recency (ROADMAP)
 
     @property
     def key(self) -> tuple:
@@ -164,6 +167,7 @@ class DominanceCache:
                 "byte_budget": self.byte_budget,
                 "keys": [{"signal": e.signal, "k": e.k, "eps": e.eps,
                           "eps_eff": e.eps_eff, "blocks": e.coreset.num_blocks,
-                          "nbytes": e.nbytes, "hits": e.hits}
+                          "nbytes": e.nbytes, "hits": e.hits,
+                          "build_seconds": e.build_seconds}
                          for e in self._entries.values()],
             }

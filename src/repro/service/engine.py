@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.core.coreset import SignalCoreset, signal_coreset, signal_coreset_to_size
 from repro.core.fitting_loss import fitting_loss
-from repro.core.sharded import sharded_coreset
+from repro.core.sharded import fitting_loss_batched, sharded_coreset
 from repro.core.streaming import StreamingBuilder
 from repro.trees.forest import RandomForestRegressor
 
@@ -34,7 +34,13 @@ from .cache import CacheEntry, DominanceCache, _eps_key
 from .metrics import ServiceMetrics
 from .scheduler import BuildScheduler
 
-__all__ = ["CoresetEngine", "SignalState"]
+__all__ = ["CoresetEngine", "SignalState", "UnknownSignalError"]
+
+
+class UnknownSignalError(KeyError):
+    """Lookup of a signal name nobody registered — the HTTP layer maps this
+    (and only this) KeyError to 404, so stray KeyErrors from bugs still
+    surface as 500s instead of masquerading as not_found."""
 
 
 class _BuilderSlot:
@@ -111,17 +117,26 @@ class SignalState:
 
 
 class CoresetEngine:
+    MAX_FOREST_CACHE = 32   # fitted forests are MB-scale; keep a small LRU
+
     def __init__(self, *, cache_bytes: int = 256 << 20, workers: int = 4,
                  num_bands: int = 4, batch_window: float = 0.004,
-                 metrics: ServiceMetrics | None = None):
+                 metrics: ServiceMetrics | None = None, mesh=None):
         self.metrics = metrics or ServiceMetrics()
         self.cache = DominanceCache(cache_bytes, metrics=self.metrics)
         self.scheduler = BuildScheduler(max_workers=workers,
                                         batch_window=batch_window,
                                         metrics=self.metrics)
         self.num_bands = int(num_bands)
+        self.mesh = mesh   # optional jax mesh for fused batch scoring
         self._signals: dict[str, SignalState] = {}
         self._lock = threading.Lock()
+        # fit results are deterministic given (coreset fingerprint,
+        # hyperparams, seed): identical re-fits are pure cache hits.
+        # value: (fitted forest, train_size)
+        self._forests: "collections.OrderedDict[tuple, tuple]" = \
+            collections.OrderedDict()
+        self._forests_lock = threading.Lock()
 
     # ---------------------------------------------------------------- ingest
     def register_signal(self, name: str, values: np.ndarray, *,
@@ -170,7 +185,7 @@ class CoresetEngine:
         with self._lock:
             st = self._signals.get(name)
         if st is None:
-            raise KeyError(f"unknown signal {name!r}")
+            raise UnknownSignalError(f"unknown signal {name!r}")
         return st
 
     def list_signals(self) -> list[dict]:
@@ -223,7 +238,8 @@ class CoresetEngine:
             cs, eps_eff, version = self._build_dense(st, k, eps)
         entry = CacheEntry(
             signal=st.name, version=version, k=k, eps=eps, eps_eff=eps_eff,
-            coreset=cs, nbytes=cs.nbytes, fingerprint=cs.fingerprint())
+            coreset=cs, nbytes=cs.nbytes, fingerprint=cs.fingerprint(),
+            build_seconds=float(cs.build_seconds))
         self.cache.put(entry)
         # actual coreset constructions (scheduler's builds_completed counts
         # finished jobs, which include re-lookup short-circuits above)
@@ -292,9 +308,42 @@ class CoresetEngine:
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
             loss = fitting_loss(cs, seg_rects, seg_labels)
         self.metrics.inc("queries_loss")
+        self.metrics.inc("loss_scoring_calls")
         return {"loss": float(loss), "k": k, "eps": eps, "eps_eff": eps_eff,
-                "cache": how, "fingerprint": cs.fingerprint(),
+                "served_from": how, "fingerprint": cs.fingerprint(),
                 "coreset_size": cs.size}
+
+    def tree_loss_batch(self, name: str, seg_rects, seg_labels, *,
+                        eps: float = 0.2, k: int | None = None,
+                        timeout: float | None = None) -> dict:
+        """Fused Algorithm-5 loss for T same-signal segmentations.
+
+        ``seg_rects`` (T, K, 4) / ``seg_labels`` (T, K) score against ONE
+        cached coreset through ``core.sharded.fitting_loss_batched`` (blocks
+        sharded over ``self.mesh`` when one is configured): a single engine
+        scoring call replaces T sequential ``tree_loss`` evaluations — the
+        tuning-sweep inner loop served as one request.
+        """
+        seg_rects = np.asarray(seg_rects, np.int64)
+        seg_labels = np.asarray(seg_labels, np.float64)
+        if seg_rects.ndim != 3 or seg_rects.shape[-1] != 4:
+            raise ValueError("batch rects must have shape (T, K, 4)")
+        if seg_labels.shape != seg_rects.shape[:2]:
+            raise ValueError("batch labels must have shape (T, K)")
+        if seg_rects.shape[0] < 1:
+            raise ValueError("batch must contain at least one segmentation")
+        k = int(k) if k is not None else int(seg_rects.shape[1])
+        with self.metrics.timed("query_loss_batch"):
+            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
+            losses = fitting_loss_batched(cs, seg_rects, seg_labels,
+                                          mesh=self.mesh)
+        self.metrics.inc("queries_loss_batch")
+        self.metrics.inc("queries_loss_batch_items", seg_rects.shape[0])
+        self.metrics.inc("loss_scoring_calls")   # ONE fused evaluation
+        return {"losses": np.asarray(losses, np.float64),
+                "k": k, "eps": eps, "eps_eff": eps_eff, "served_from": how,
+                "fingerprint": cs.fingerprint(), "coreset_size": cs.size,
+                "scoring_calls": 1}
 
     def fit_forest(self, name: str, *, k: int, eps: float = 0.2,
                    n_estimators: int = 10, max_leaves: int | None = None,
@@ -304,14 +353,34 @@ class CoresetEngine:
         stand-in); optionally evaluate it at ``predict`` (P, 2) grid points."""
         with self.metrics.timed("query_fit"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
-            X, y, w = cs.as_points()
-            forest = RandomForestRegressor(
-                n_estimators=n_estimators, max_leaves=max_leaves or k,
-                random_state=seed)
-            forest.fit(X, y, sample_weight=w)
-            out = {"k": k, "eps": eps, "eps_eff": eps_eff, "cache": how,
-                   "train_size": int(len(y)), "n_estimators": n_estimators,
-                   "fingerprint": cs.fingerprint()}
+            fkey = (cs.fingerprint(), int(n_estimators),
+                    int(max_leaves or k), int(seed))
+            with self._forests_lock:
+                cached = self._forests.get(fkey)
+                if cached is not None:
+                    self._forests.move_to_end(fkey)
+            model_cache = "hit"
+            if cached is None:
+                # materialize the point set only on a miss — a cache hit
+                # must not pay the O(|C|) as_points() build
+                model_cache = "fit"
+                X, y, w = cs.as_points()
+                forest = RandomForestRegressor(
+                    n_estimators=n_estimators, max_leaves=max_leaves or k,
+                    random_state=seed)
+                forest.fit(X, y, sample_weight=w)
+                cached = (forest, int(len(y)))
+                with self._forests_lock:
+                    # a racing fit of the same key produced an identical
+                    # forest (deterministic given fkey); last writer wins
+                    self._forests[fkey] = cached
+                    while len(self._forests) > self.MAX_FOREST_CACHE:
+                        self._forests.popitem(last=False)
+            forest, train_size = cached
+            self.metrics.inc(f"forest_cache_{model_cache}")
+            out = {"k": k, "eps": eps, "eps_eff": eps_eff, "served_from": how,
+                   "train_size": train_size, "n_estimators": n_estimators,
+                   "fingerprint": cs.fingerprint(), "model_cache": model_cache}
             if predict is not None:
                 pts = np.asarray(predict, np.float64).reshape(-1, 2)
                 out["predictions"] = forest.predict(pts).tolist()
@@ -338,7 +407,7 @@ class CoresetEngine:
                 cs, eps_eff, how = self.get_coreset(name, k, eps or 0.2,
                                                     timeout=timeout)
             X, y, w = cs.as_points(style=style)
-            out = {"k": k, "eps_eff": eps_eff, "cache": how, "size": cs.size,
+            out = {"k": k, "eps_eff": eps_eff, "served_from": how, "size": cs.size,
                    "blocks": cs.num_blocks, "nbytes": cs.nbytes,
                    "compression_ratio": cs.compression_ratio(),
                    "fingerprint": cs.fingerprint(), "truncated": len(y) > max_points}

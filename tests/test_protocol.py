@@ -1,0 +1,210 @@
+"""v1 wire protocol: dataclass round-trips through JSON and binary frames."""
+import numpy as np
+import pytest
+
+from repro.service import protocol as P
+
+ENCODINGS = ("json", "binary")
+
+
+def _ref(name="sig"):
+    return P.SignalRef(name=name, version="abc123")
+
+
+def _spec(k=4, eps=0.25):
+    return P.CoresetSpec(k=k, eps=eps)
+
+
+def _messages():
+    rng = np.random.default_rng(0)
+    rects1 = rng.integers(0, 16, size=(3, 4)).astype(np.int64)
+    rects3 = rng.integers(0, 16, size=(5, 3, 4)).astype(np.int64)
+    # NaN/inf labels MUST survive both encodings: real query labels are
+    # finite, but the protocol layer may not silently corrupt payloads
+    labels_nan = np.array([1.0, np.nan, -np.inf])
+    return [
+        _spec(),
+        _ref(),
+        P.RegisterRequest(signal=_ref(), values=rng.normal(size=(6, 5)),
+                          replace=True),
+        P.RegisterRequest(signal=_ref(), synthetic={"kind": "piecewise",
+                                                    "n": 8, "m": 8}),
+        P.IngestRequest(signal=_ref(), band=rng.normal(size=(2, 5))),
+        P.BuildRequest(signal=_ref(), spec=_spec()),
+        P.LossQuery(signal=_ref(), rects=rects1, labels=labels_nan,
+                    spec=_spec()),
+        P.LossQuery(signal=_ref(), rects=rects1,
+                    labels=np.array([1.0, 2.0, 3.0])),   # spec omitted
+        P.BatchLossQuery(signal=_ref(), rects=rects3,
+                         labels=rng.normal(size=(5, 3)), spec=_spec()),
+        P.FitRequest(signal=_ref(), spec=_spec(), n_estimators=3,
+                     max_leaves=7, predict=rng.normal(size=(2, 2)), seed=9),
+        P.CompressRequest(signal=_ref(), spec=_spec(), target_frac=0.05,
+                          style="caratheodory", max_points=128),
+        P.SignalInfo(name="s", n=8, m=5, bands=2, streamed=True,
+                     version="deadbeef", builders=[[4, 0.25]]),
+        P.BuildResponse(fingerprint="f" * 32, eps_eff=0.2,
+                        served_from="built", size=16, blocks=4, nbytes=352,
+                        compression_ratio=0.1, certified=True,
+                        build_seconds=0.5),
+        P.LossResponse(loss=float("inf"), k=3, eps=0.2, eps_eff=0.2,
+                       served_from="exact", fingerprint="f" * 32,
+                       coreset_size=16),
+        P.BatchLossResponse(losses=np.array([1.0, np.nan, 3.0]), k=3,
+                            eps=0.2, eps_eff=0.25, served_from="dominated",
+                            fingerprint="f" * 32, coreset_size=16,
+                            scoring_calls=1),
+        P.FitResponse(k=3, eps=0.2, eps_eff=0.2, served_from="exact",
+                      fingerprint="f" * 32, train_size=16, n_estimators=3,
+                      model_cache="hit", predictions=np.array([0.5, -1.0])),
+        P.CompressResponse(k=3, eps_eff=0.2, served_from="built",
+                           fingerprint="f" * 32, size=16, blocks=4,
+                           nbytes=352, compression_ratio=0.1, truncated=False,
+                           X=rng.normal(size=(4, 2)),
+                           y=np.array([1.0, np.nan, 3.0, np.inf]),
+                           w=rng.random(4)),
+        P.ErrorResponse(error=P.ErrorInfo(code="bad_request", message="boom")),
+    ]
+
+
+@pytest.mark.parametrize("encoding", ENCODINGS)
+@pytest.mark.parametrize("msg", _messages(), ids=lambda m: type(m).__name__)
+def test_round_trip_every_message(msg, encoding):
+    ctype, body = msg.to_wire(encoding)
+    expected = (P.CONTENT_TYPE_JSON if encoding == "json"
+                else P.CONTENT_TYPE_BINARY)
+    assert ctype == expected
+    out = P.decode(ctype, body)
+    assert type(out) is type(msg)
+    assert out == msg   # NaN-tolerant field-wise equality (_Wire.__eq__)
+
+
+@pytest.mark.parametrize("encoding", ENCODINGS)
+def test_round_trip_preserves_array_dtype_and_shape(encoding):
+    msg = P.BatchLossQuery(signal=_ref(),
+                           rects=np.arange(24, dtype=np.int64).reshape(2, 3, 4),
+                           labels=np.zeros((2, 3)))
+    ctype, body = msg.to_wire(encoding)
+    out = P.decode(ctype, body, expect=P.BatchLossQuery)
+    assert out.rects.shape == (2, 3, 4) and out.rects.dtype == np.int64
+    assert out.labels.shape == (2, 3) and out.labels.dtype == np.float64
+
+
+def test_binary_widens_extension_dtypes_losslessly():
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    a = (np.arange(12).reshape(3, 4) / 4).astype(ml_dtypes.bfloat16)
+    assert a.dtype.kind == "V"   # the npz-hostile extension dtype
+    msg = P.RegisterRequest(signal=_ref(), values=a)
+    ctype, body = msg.to_wire("binary")
+    out = P.decode(ctype, body, expect=P.RegisterRequest)
+    # stored widened: float32 is exact for every bfloat16 value
+    assert out.values.dtype == np.float32
+    assert np.array_equal(out.values, a.astype(np.float32))
+
+
+def test_json_and_binary_decode_agree():
+    msg = P.LossQuery(signal=_ref(), rects=np.zeros((2, 4), np.int64),
+                      labels=np.array([np.nan, 2.0]), spec=_spec())
+    a = P.decode(*msg.to_wire("json"))
+    b = P.decode(*msg.to_wire("binary"))
+    assert a == b == msg
+
+
+def test_decode_rejects_malformed_input():
+    with pytest.raises(P.ProtocolError):
+        P.decode(P.CONTENT_TYPE_JSON, b"not json")
+    with pytest.raises(P.ProtocolError):
+        P.decode(P.CONTENT_TYPE_JSON, b"[1, 2]")          # not an object
+    with pytest.raises(P.ProtocolError):
+        P.decode(P.CONTENT_TYPE_JSON, b'{"type": "zzz"}')  # unknown tag
+    with pytest.raises(P.ProtocolError):
+        P.decode(P.CONTENT_TYPE_BINARY, b"XXXX\x00garbage")  # bad magic
+    with pytest.raises(P.ProtocolError):
+        P.decode(P.CONTENT_TYPE_BINARY, b"RPV1qjunk")      # unknown codec
+    with pytest.raises(P.ProtocolError):
+        P.decode("application/xml", b"<x/>")               # unknown media type
+    # expect pin: a valid message of the WRONG type is rejected
+    spec_wire = _spec().to_wire("json")
+    with pytest.raises(P.ProtocolError):
+        P.decode(*spec_wire, expect=P.LossQuery)
+
+
+def test_decompression_size_is_bounded(monkeypatch):
+    # a zlib/zstd bomb must die with a ProtocolError before the allocation,
+    # not in the OOM killer: shrink the ceiling and feed a legit oversized
+    # frame through the decoder
+    msg = P.RegisterRequest(signal=_ref(),
+                            values=np.zeros((64, 64)))   # compresses well
+    ctype, body = msg.to_wire("binary")
+    monkeypatch.setattr(P, "_MAX_DECODED", 1024)
+    with pytest.raises(P.ProtocolError):
+        P.decode(ctype, body)
+
+
+def test_zstd_frame_without_zstandard_is_unsupported_codec():
+    if P.zstandard is not None:
+        pytest.skip("zstandard installed: the zlib-only path is unreachable")
+    frame = b"RPV1" + b"Z" + b"\x28\xb5\x2f\xfd" + b"\x00" * 8
+    with pytest.raises(P.UnsupportedCodec):
+        P.decode(P.CONTENT_TYPE_BINARY, frame)
+    # UnsupportedCodec is a ProtocolError, but the server maps it to 415
+    # (renegotiate) rather than 400 (bad request)
+    assert issubclass(P.UnsupportedCodec, P.ProtocolError)
+
+
+def test_field_validation():
+    with pytest.raises(P.ProtocolError):
+        P.CoresetSpec(k=0)
+    with pytest.raises(P.ProtocolError):
+        P.CoresetSpec(k=2, eps=1.5)
+    with pytest.raises(P.ProtocolError):
+        P.CoresetSpec(k=2, fidelity="wat")
+    with pytest.raises(P.ProtocolError):
+        P.SignalRef(name="")
+    # ragged arrays coerce to object arrays and are rejected, not 500s
+    with pytest.raises(P.ProtocolError):
+        P.LossQuery.from_payload({"signal": {"name": "s"},
+                                  "rects": [[0, 1], [0, 1, 2, 3]],
+                                  "labels": [1.0]})
+    with pytest.raises(P.ProtocolError):
+        P.LossQuery.from_payload({"signal": {"name": "s"},
+                                  "rects": [["a", "b", "c", "d"]],
+                                  "labels": [1.0]})
+    # missing required field
+    with pytest.raises(P.ProtocolError):
+        P.LossQuery.from_payload({"signal": {"name": "s"}, "labels": [1.0]})
+
+
+def test_unknown_payload_keys_are_ignored_for_forward_compat():
+    d = {"signal": {"name": "s"}, "rects": [[0, 1, 0, 1]], "labels": [1.0],
+         "some_future_field": 42}
+    msg = P.LossQuery.from_payload(d)
+    assert msg.signal.name == "s"
+    # unknown keys inside NESTED messages must also be ignored (a v1.1 peer
+    # adding an optional SignalRef/ErrorInfo field cannot break v1.0)
+    d = {"signal": {"name": "s", "future_ref_field": 1},
+         "rects": [[0, 1, 0, 1]], "labels": [1.0]}
+    assert P.LossQuery.from_payload(d).signal.name == "s"
+    env = P.ErrorResponse.from_payload(
+        {"error": {"code": "bad_request", "message": "m", "future": True}})
+    assert env.error.code == "bad_request"
+
+
+def test_binary_codec_negotiation():
+    # Accept parsing: zstd only when explicitly advertised
+    assert P._Wire.accept_codec("application/x-repro-npz-v1") == "zlib"
+    assert P._Wire.accept_codec(
+        "application/x-repro-npz-v1;codec=zstd") == "zstd"
+    assert P._Wire.accept_codec(
+        "application/x-repro-npz-v1; codec=zstd") == "zstd"
+    assert P._Wire.accept_codec(
+        "application/x-repro-npz-v1;codec=zlib") == "zlib"
+    # a pinned zlib frame is always stdlib-decodable
+    msg = _spec()
+    ctype, body = msg.to_wire("binary", binary_codec="zlib")
+    assert body[4:5] == b"z"
+    assert P.decode(ctype, body) == msg
+    if P.zstandard is None:
+        # asking for zstd on a zlib-only host is UnsupportedCodec (-> 415)
+        with pytest.raises(P.UnsupportedCodec):
+            msg.to_wire("binary", binary_codec="zstd")

@@ -6,11 +6,13 @@ import urllib.request
 
 import numpy as np
 
+from repro.client import CoresetAPIError, CoresetClient
 from repro.core import (fitting_loss, random_tree_segmentation, signal_coreset,
                         true_loss)
 from repro.data import piecewise_signal
-from repro.service import (BuildScheduler, CoresetEngine, ServiceMetrics,
-                           make_server, serve_forever_in_thread)
+from repro.service import (BuildScheduler, CacheEntry, CoresetEngine,
+                           DominanceCache, ServiceMetrics, make_server,
+                           serve_forever_in_thread)
 
 N, M, KMAX = 72, 48, 8
 
@@ -56,7 +58,7 @@ def test_tree_loss_defaults_k_to_leaf_count_and_is_accurate():
         for _ in range(4):
             q = random_tree_segmentation(N, M, 6, rng)
             r = eng.tree_loss("s", q.rects, q.labels, eps=0.3)
-            assert r["cache"] in ("exact", "dominated")
+            assert r["served_from"] in ("exact", "dominated")
             tl = true_loss(y, q.rects, q.labels)
             assert abs(r["loss"] - tl) <= 0.3 * max(tl, 1e-9)
         assert eng.metrics.get("cache_hit_dominated") >= 1
@@ -181,55 +183,288 @@ def test_scheduler_coalesces_identical_keys():
 
 
 # ------------------------------------------------------------------- HTTP API
-def test_http_api_end_to_end():
+def _server():
     eng = _engine()
     srv = make_server(eng)
     serve_forever_in_thread(srv)
-    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    return eng, srv, f"http://127.0.0.1:{srv.server_address[1]}"
+
+
+def test_http_v1_end_to_end_sdk():
+    eng, srv, base = _server()
+    try:
+        y = _signal(6)
+        for encoding in ("json", "binary"):
+            cl = CoresetClient(base, encoding=encoding)
+            cl.register_signal(f"s-{encoding}", values=y)
+            b = cl.build(f"s-{encoding}", KMAX, 0.2)
+            assert b.served_from == "built" and b.size > 0
+            assert len(b.fingerprint) == 32 and b.build_seconds > 0
+            q = random_tree_segmentation(N, M, 4, np.random.default_rng(2))
+            r = cl.query_loss(f"s-{encoding}", q.rects, q.labels, eps=0.3)
+            assert r.served_from in ("exact", "dominated")
+            tl = true_loss(y, q.rects, q.labels)
+            assert abs(r.loss - tl) <= 0.3 * max(tl, 1e-9)
+            fit = cl.fit(f"s-{encoding}", KMAX, n_estimators=2,
+                         predict=[[1, 1], [N - 2, M - 2]])
+            assert fit.predictions.shape == (2,)
+            comp = cl.compress(f"s-{encoding}", KMAX, 0.2, max_points=64)
+            assert len(comp.X) <= 64 and comp.served_from == "exact"
+            cl.ingest(f"st-{encoding}", synthetic={"kind": "piecewise",
+                                                   "n": 16, "m": M, "seed": 1})
+        health = CoresetClient(base).healthz()
+        assert health["status"] == "ok" and health["signals"] == 4
+        assert health["protocol"] == "v1"
+        metrics = CoresetClient(base).metrics_text()
+        assert "coreset_cache_hit_dominated" in metrics
+        assert "coreset_build_seconds_bucket" in metrics
+        # structured API error: unknown signal -> 404 envelope, server stays up
+        try:
+            CoresetClient(base).build("nope", 4, 0.3)
+            raise AssertionError("expected CoresetAPIError")
+        except CoresetAPIError as exc:
+            assert exc.http == 404 and exc.code == "not_found"
+        assert CoresetClient(base).healthz()["status"] == "ok"
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_http_legacy_routes_answer_with_deprecation_header():
+    eng, srv, base = _server()
 
     def post(path, payload):
         req = urllib.request.Request(base + path, data=json.dumps(payload).encode(),
                                      headers={"Content-Type": "application/json"})
         with urllib.request.urlopen(req, timeout=60) as r:
-            return json.loads(r.read())
-
-    def get(path):
-        with urllib.request.urlopen(base + path, timeout=30) as r:
-            return r.read()
+            return json.loads(r.read()), dict(r.headers)
 
     try:
         y = _signal(6)
-        post("/signals", {"name": "s", "values": y.tolist()})
-        b = post("/build", {"name": "s", "k": KMAX, "eps": 0.2})
-        assert b["cache"] == "built" and b["size"] > 0 and len(b["fingerprint"]) == 32
+        body, hdr = post("/signals", {"name": "s", "values": y.tolist()})
+        assert hdr.get("Deprecation") == "true"
+        assert '</v1/signals>; rel="successor-version"' in hdr.get("Link", "")
+        assert body["n"] == N and body["version"]
+        body, hdr = post("/build", {"name": "s", "k": KMAX, "eps": 0.2})
+        assert hdr.get("Deprecation") == "true"
+        assert body["served_from"] == "built" and len(body["fingerprint"]) == 32
+        # pre-v1 response compatibility: old key names still answer
+        assert body["cache"] == "built" and "type" not in body
+        comp, _ = post("/query/compress", {"name": "s", "k": KMAX, "eps": 0.2,
+                                           "max_points": 64})
+        assert comp["cache"] in ("exact", "dominated")
+        assert len(comp["points"]["X"]) <= 64   # old nested points layout
         q = random_tree_segmentation(N, M, 4, np.random.default_rng(2))
-        r = post("/query/loss", {"name": "s", "rects": q.rects.tolist(),
-                                 "labels": q.labels.tolist(), "eps": 0.3})
-        assert r["cache"] in ("exact", "dominated")
-        tl = true_loss(y, q.rects, q.labels)
-        assert abs(r["loss"] - tl) <= 0.3 * max(tl, 1e-9)
-        fit = post("/query/fit", {"name": "s", "k": KMAX, "n_estimators": 2,
-                                  "predict": [[1, 1], [N - 2, M - 2]]})
-        assert len(fit["predictions"]) == 2
-        comp = post("/query/compress", {"name": "s", "k": KMAX, "eps": 0.2,
-                                        "max_points": 64})
-        assert len(comp["points"]["X"]) <= 64 and comp["cache"] == "exact"
-        post("/ingest", {"name": "st", "synthetic":
-                         {"kind": "piecewise", "n": 16, "m": M, "seed": 1}})
-        health = json.loads(get("/healthz"))
-        assert health["status"] == "ok" and health["signals"] == 2
-        metrics = get("/metrics").decode()
-        assert "coreset_cache_hit_dominated" in metrics
-        assert "coreset_build_seconds_bucket" in metrics
-        # malformed request -> 400, server stays up
+        body, hdr = post("/query/loss", {"name": "s", "rects": q.rects.tolist(),
+                                         "labels": q.labels.tolist(), "eps": 0.3})
+        assert hdr.get("Deprecation") == "true"
+        assert body["served_from"] in ("exact", "dominated")
+        with urllib.request.urlopen(base + "/healthz", timeout=30) as r:
+            assert r.headers.get("Deprecation") == "true"
+            assert json.loads(r.read())["status"] == "ok"
+        # v1 routes do NOT carry the deprecation header
+        with urllib.request.urlopen(base + "/v1/healthz", timeout=30) as r:
+            assert r.headers.get("Deprecation") is None
+        # malformed legacy request -> 400 with the uniform v1 envelope
         try:
             post("/query/loss", {"name": "nope", "rects": [], "labels": []})
             raise AssertionError("expected HTTP error")
         except urllib.error.HTTPError as exc:
             assert exc.code == 400
-        assert json.loads(get("/healthz"))["status"] == "ok"
+            env = json.loads(exc.read())
+            assert env["error"]["code"] == "bad_request"
+            assert env["error"]["message"]
     finally:
         srv.shutdown()
+        eng.close()
+
+
+def test_http_400_envelope_for_ragged_and_non_numeric_arrays():
+    eng, srv, base = _server()
+
+    def post_raw(path, payload):
+        req = urllib.request.Request(base + path, data=json.dumps(payload).encode(),
+                                     headers={"Content-Type": "application/json"})
+        urllib.request.urlopen(req, timeout=60).close()
+
+    try:
+        for bad_values in ([[1.0, 2.0], [3.0]],          # ragged
+                           [["a", "b"], ["c", "d"]],     # non-numeric
+                           [1.0, 2.0, 3.0],              # wrong ndim
+                           [[1.0, float("nan")]]):       # non-finite signal
+            for path, payload in (
+                    ("/v1/signals", {"type": "register",
+                                     "signal": {"name": "bad"},
+                                     "values": bad_values}),
+                    ("/signals", {"name": "bad", "values": bad_values})):
+                try:
+                    post_raw(path, payload)
+                    raise AssertionError(f"expected 400 for {path} {bad_values}")
+                except urllib.error.HTTPError as exc:
+                    assert exc.code == 400, (path, bad_values)
+                    env = json.loads(exc.read())
+                    assert env["error"]["code"] == "bad_request"
+                    assert isinstance(env["error"]["message"], str)
+        # nothing got registered, server healthy
+        assert CoresetClient(base).healthz()["signals"] == 0
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_http_415_for_undecodable_codec_and_unknown_media_type():
+    from repro.service import protocol as P
+    eng, srv, base = _server()
+
+    def post_raw(path, body, ctype):
+        req = urllib.request.Request(base + path, data=body,
+                                     headers={"Content-Type": ctype})
+        urllib.request.urlopen(req, timeout=30).close()
+
+    try:
+        try:
+            post_raw("/v1/signals", b"<xml/>", "application/xml")
+            raise AssertionError("expected 415")
+        except urllib.error.HTTPError as exc:
+            assert exc.code == 415
+            assert json.loads(exc.read())["error"]["code"] == "unsupported_media"
+        if P.zstandard is None:
+            # a zstd frame on this zlib-only host: 415 tells the SDK to
+            # renegotiate down to JSON instead of failing with 400
+            frame = b"RPV1" + b"Z" + b"\x28\xb5\x2f\xfd" + b"\x00" * 8
+            try:
+                post_raw("/v1/signals", frame, P.CONTENT_TYPE_BINARY)
+                raise AssertionError("expected 415")
+            except urllib.error.HTTPError as exc:
+                assert exc.code == 415
+                env = json.loads(exc.read())
+                assert env["error"]["code"] == "unsupported_media"
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+# --------------------------------------------------- fused batch loss queries
+def test_batch_loss_uses_fewer_scoring_calls_than_sequential():
+    eng, srv, base = _server()
+    try:
+        y = _signal(8)
+        cl = CoresetClient(base)
+        cl.register_signal("s", values=y)
+        rng = np.random.default_rng(3)
+        segs = [random_tree_segmentation(N, M, 5, rng) for _ in range(32)]
+        rects = np.stack([s.rects for s in segs])
+        labels = np.stack([s.labels for s in segs])
+
+        base_calls = eng.metrics.get("loss_scoring_calls")
+        seq = [cl.query_loss("s", s.rects, s.labels, eps=0.3, k=KMAX).loss
+               for s in segs]
+        seq_calls = eng.metrics.get("loss_scoring_calls") - base_calls
+        assert seq_calls == 32
+
+        base_calls = eng.metrics.get("loss_scoring_calls")
+        rb = cl.query_loss_batch("s", rects, labels, eps=0.3, k=KMAX)
+        batch_calls = eng.metrics.get("loss_scoring_calls") - base_calls
+        assert batch_calls == 1 < seq_calls
+        assert rb.scoring_calls == 1
+        assert rb.losses.shape == (32,)
+        assert np.allclose(rb.losses, seq, rtol=1e-4)
+        # the fused result honors the same guarantee as the sequential path
+        for s, lb in zip(segs, rb.losses):
+            tl = true_loss(y, s.rects, s.labels)
+            assert abs(lb - tl) <= 0.3 * max(tl, 1e-9) * (1 + 1e-4)
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_batch_loss_validates_shapes():
+    eng = _engine()
+    try:
+        eng.register_signal("s", _signal())
+        rng = np.random.default_rng(0)
+        q = random_tree_segmentation(N, M, 4, rng)
+        try:
+            eng.tree_loss_batch("s", q.rects, q.labels)  # 2-D, not (T, K, 4)
+            raise AssertionError("expected ValueError")
+        except ValueError:
+            pass
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------- forest model caching
+def test_fit_forest_caches_by_fingerprint_and_hyperparams():
+    eng = _engine()
+    try:
+        eng.register_signal("s", _signal(9))
+        r1 = eng.fit_forest("s", k=4, eps=0.3, n_estimators=2, seed=7,
+                            predict=[[1, 1]])
+        assert r1["model_cache"] == "fit"
+        r2 = eng.fit_forest("s", k=4, eps=0.3, n_estimators=2, seed=7,
+                            predict=[[1, 1]])
+        assert r2["model_cache"] == "hit"
+        assert r2["predictions"] == r1["predictions"]
+        assert eng.metrics.get("forest_cache_hit") == 1
+        # different hyperparams / seed -> distinct cache slots
+        assert eng.fit_forest("s", k=4, eps=0.3, n_estimators=3,
+                              seed=7)["model_cache"] == "fit"
+        assert eng.fit_forest("s", k=4, eps=0.3, n_estimators=2,
+                              seed=8)["model_cache"] == "fit"
+    finally:
+        eng.close()
+
+
+# ------------------------------------------- cache build_seconds + eviction
+def test_cache_records_build_seconds_and_exposes_in_stats():
+    eng, srv, base = _server()
+    try:
+        cl = CoresetClient(base)
+        cl.register_signal("s", values=_signal(10))
+        b = cl.build("s", 4, 0.3)
+        assert b.build_seconds > 0
+        stats = cl.stats()
+        keys = stats["cache"]["keys"]
+        assert len(keys) == 1
+        assert keys[0]["build_seconds"] > 0
+        # insert-time record matches the build response's wall clock
+        assert abs(keys[0]["build_seconds"] - b.build_seconds) < 1e-9
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_dominance_cache_evicts_stale_versions_on_ingest():
+    # cache-level: invalidate_signal drops every entry of other versions
+    cache = DominanceCache(metrics=ServiceMetrics())
+    cs = signal_coreset(_signal(11), 4, 0.3)
+
+    def entry(version, k):
+        return CacheEntry(signal="s", version=version, k=k, eps=0.3,
+                          eps_eff=0.3, coreset=cs, nbytes=cs.nbytes,
+                          fingerprint=cs.fingerprint(),
+                          build_seconds=cs.build_seconds)
+
+    cache.put(entry("v1", 4))
+    cache.put(entry("v1", 8))
+    cache.put(entry("v2", 4))
+    assert len(cache) == 3
+    dropped = cache.invalidate_signal("s", keep_version="v2")
+    assert dropped == 2 and len(cache) == 1
+    e, kind = cache.lookup("s", "v2", 4, 0.3)
+    assert kind == "exact" and e.build_seconds == cs.build_seconds
+    assert cache.lookup("s", "v1", 4, 0.3) == (None, None)
+
+    # engine-level: a fresh band bumps the version and evicts eagerly
+    eng = _engine()
+    try:
+        y = _signal(11)
+        eng.ingest_band("st", y[:24])
+        eng.get_coreset("st", 4, 0.3)
+        assert len(eng.cache) == 1
+        eng.ingest_band("st", y[24:48])
+        assert len(eng.cache) == 0
+    finally:
         eng.close()
 
 
