@@ -1,0 +1,129 @@
+"""Backend sweep for the repro.ops dispatch surface.
+
+Times every registered backend (numpy oracle, jitted xla, Pallas —
+interpret-mode on this CPU container, so its wall-times are kernel-body
+semantics, not TPU timing) for each of the four canonical ops, and records
+cross-backend parity deltas.  The batched-Pallas-vs-dense delta is the
+number ``scripts/ci_smoke.sh`` gates on (<= 1e-4 relative): the serving
+engine's /v1/query/loss:batch hot path rides the batched kernel on TPU, so
+it must agree with the dense dispatched path it replaced.
+
+Results merge into ``benchmarks/results/bench_ops.json`` keyed by op and
+backend (existing keys from other runs are preserved).
+
+  python -m benchmarks.bench_ops [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+try:
+    from .common import RESULTS, emit, timed   # python -m benchmarks.bench_ops
+except ImportError:  # pragma: no cover
+    sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+    from common import RESULTS, emit, timed    # python benchmarks/bench_ops.py
+
+from repro import ops                                        # noqa: E402
+from repro.core import random_tree_segmentation, signal_coreset  # noqa: E402
+from repro.data import piecewise_signal                      # noqa: E402
+
+
+def _merge_save(obj: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "bench_ops.json"
+    merged = {}
+    if path.exists():
+        merged = json.loads(path.read_text())
+    for op, per_backend in obj.items():
+        if isinstance(per_backend, dict):
+            merged.setdefault(op, {}).update(per_backend)
+        else:
+            merged[op] = per_backend
+    path.write_text(json.dumps(merged, indent=1, default=float))
+
+
+def _rel(a, b) -> float:
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-9)))
+
+
+def run(fast: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    results: dict = {}
+    repeat = 2 if fast else 3
+
+    def sweep(op_name, call, parity_of):
+        per = {}
+        ref = None
+        for b in ops.BACKENDS:
+            out, _ = timed(call, b)                    # warmup / compile
+            out, dt = timed(call, b, repeat=repeat)
+            if ref is None:
+                ref = parity_of(out)                   # numpy runs first
+            per[b] = {"us_per_call": dt * 1e6,
+                      "rel_delta_vs_numpy": _rel(parity_of(out), ref)}
+            emit(f"ops/{op_name}_{b}", dt * 1e6,
+                 f"rel_vs_numpy={per[b]['rel_delta_vs_numpy']:.2e}")
+        return per
+
+    # ---- sat_moments
+    n = 256 if fast else 768
+    y = rng.normal(size=(n, n))
+    results["sat_moments"] = sweep(
+        "sat_moments", lambda b: ops.sat_moments(y, backend=b), lambda o: o)
+
+    # ---- fitting_loss + fitting_loss_batched on one coreset
+    ys = piecewise_signal(96 if fast else 160, 80 if fast else 120, 6,
+                          noise=0.2, seed=0)
+    cs = signal_coreset(ys, 6, 0.3)
+    segs = [random_tree_segmentation(*ys.shape, 6, rng)
+            for _ in range(4 if fast else 16)]
+    sr = np.stack([s.rects for s in segs]).astype(np.float64)
+    sl = np.stack([s.labels for s in segs])
+    results["fitting_loss"] = sweep(
+        "fitting_loss",
+        lambda b: ops.fitting_loss(cs, segs[0].rects, segs[0].labels,
+                                   backend=b),
+        lambda o: o)
+    results["fitting_loss_batched"] = sweep(
+        "fitting_loss_batched",
+        lambda b: ops.fitting_loss_batched(cs, sr, sl, backend=b),
+        lambda o: o)
+
+    # the CI gate: batched Pallas kernel vs the dense dispatched (xla) path
+    dense = ops.fitting_loss_batched(cs, sr, sl, backend="xla")
+    pallas = ops.fitting_loss_batched(cs, sr, sl, backend="pallas")
+    gate = _rel(pallas, dense)
+    results["parity"] = {
+        "batched_pallas_vs_dense_rel": gate,
+        "coreset_blocks": cs.num_blocks, "trees": int(sr.shape[0]),
+        "leaves": int(sr.shape[1]),
+    }
+    emit("ops/parity_batched_pallas_vs_dense", 0.0, f"rel={gate:.2e}")
+
+    # ---- hist_split
+    P, F, B = (50_000, 4, 64) if fast else (200_000, 8, 256)
+    codes = rng.integers(0, B, size=(P, F)).astype(np.uint8)
+    w = rng.uniform(0.5, 1.5, P)
+    yv = rng.normal(size=P)
+    results["hist_split"] = sweep(
+        "hist_split",
+        lambda b: ops.hist_split(codes, w, w * yv, w * yv * yv, B, backend=b),
+        lambda o: o)
+
+    # selection state alongside the numbers (what auto would pick here)
+    results["selection"] = {op: s["selected"]
+                            for op, s in ops.snapshot().items()}
+    _merge_save(results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(fast=ap.parse_args().fast)

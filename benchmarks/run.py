@@ -20,11 +20,11 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: compression,tuning,time,guarantee,"
-                         "scaling,size,datasets,kernels,roofline")
+                         "scaling,size,datasets,kernels,ops,roofline")
     args = ap.parse_args()
     from . import (bench_compression, bench_datasets, bench_guarantee,
-                   bench_kernels, bench_roofline, bench_scaling, bench_size,
-                   bench_time, bench_tuning)
+                   bench_kernels, bench_ops, bench_roofline, bench_scaling,
+                   bench_size, bench_time, bench_tuning)
 
     fast = args.fast
     jobs = {
@@ -48,6 +48,7 @@ def main() -> None:
                                        k=500 if fast else 2000),
         "datasets": lambda: bench_datasets.run(res=64 if fast else 96),
         "kernels": bench_kernels.run,
+        "ops": lambda: bench_ops.run(fast=fast),
         "roofline": bench_roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(jobs)

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 suite + the serve_coresets self-check + a 2-second
-# closed-loop loadgen per wire encoding, so serving-path regressions fail
-# fast.  The final gate asserts the v1 binary frame actually beats JSON on
-# 512x512 signal registration (the ROADMAP's "JSON array parsing dominates"
-# fix) using the per-mode results both runs merged into
+# CI smoke: tier-1 suite, the repro.ops backend sweep with its
+# batched-Pallas-vs-dense parity gate (<= 1e-4 relative), the real
+# 2-device-mesh batched-loss parity check, the serve_coresets self-check,
+# and a 2-second closed-loop loadgen per wire encoding, so serving-path
+# regressions fail fast.  The final gate asserts the v1 binary frame beats
+# JSON on 512x512 signal registration (the ROADMAP's "JSON array parsing
+# dominates" fix) using the per-mode results both runs merged into
 # benchmarks/results/bench_service.json.
 #
 #   scripts/ci_smoke.sh
@@ -13,6 +15,27 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 python -m pytest -q
+
+echo "== bench_ops backend sweep (numpy vs xla vs pallas-interpret) =="
+python -m benchmarks.bench_ops --fast
+
+echo "== batched-Pallas vs dense dispatched-path parity gate =="
+python - <<'EOF'
+import json, pathlib, sys
+p = pathlib.Path("benchmarks/results/bench_ops.json")
+res = json.loads(p.read_text())
+rel = res["parity"]["batched_pallas_vs_dense_rel"]
+print(f"[ci_smoke] batched pallas vs dense: rel={rel:.2e} "
+      f"(blocks={res['parity']['coreset_blocks']}, "
+      f"T={res['parity']['trees']}, K={res['parity']['leaves']})")
+if rel > 1e-4:
+    sys.exit(f"[ci_smoke] FAIL: batched kernel off dense path by {rel:.2e} > 1e-4")
+EOF
+
+echo "== mesh-sharded batched fitting loss (2 devices, forced host mesh) =="
+# the parity logic lives once, in the test (it spawns its own subprocess
+# with XLA_FLAGS); this step just runs it by name so a smoke log shows it
+python -m pytest -q tests/test_ops.py -k mesh_sharded
 
 echo "== serve_coresets smoke (concurrent SDK clients, both encodings) =="
 python -m repro.launch.serve_coresets --smoke

@@ -88,45 +88,34 @@ def sat_pjit(values, mesh=None, data_axis: str = "data"):
 
 
 # ------------------------------------------------- batched Algorithm 5 eval
-def _fitting_loss_dense(rects, labels4, weights4, seg_rects, seg_labels):
-    """Dense jnp Algorithm 5 (all blocks through the smoothed path — exact
-    for non-intersected blocks too, since a single covering label reduces
-    the smoothed sum to the moment formula)."""
-    z_r = jnp.clip(jnp.minimum(rects[:, None, 1], seg_rects[None, :, 1])
-                   - jnp.maximum(rects[:, None, 0], seg_rects[None, :, 0]), 0, None)
-    z_c = jnp.clip(jnp.minimum(rects[:, None, 3], seg_rects[None, :, 3])
-                   - jnp.maximum(rects[:, None, 2], seg_rects[None, :, 2]), 0, None)
-    z = (z_r * z_c).astype(jnp.float32)              # (B, K)
-    Z = jnp.cumsum(z, axis=1)
-    Zp = Z - z
-    U = jnp.cumsum(weights4, axis=1)                  # (B, 4)
-    Up = U - weights4
-    lo = jnp.maximum(Zp[:, :, None], Up[:, None, :])
-    hi = jnp.minimum(Z[:, :, None], U[:, None, :])
-    consumed = jnp.clip(hi - lo, 0.0, None)           # (B, K, 4)
-    diff = seg_labels[None, :, None] - labels4[:, None, :]
-    return (consumed * diff * diff).sum()
-
-
 def fitting_loss_batched(cs: SignalCoreset, seg_rects: np.ndarray,
                          seg_labels: np.ndarray, mesh=None,
-                         data_axis: str = "data"):
+                         data_axis: str = "data", backend: str | None = None):
     """Evaluate T candidate segmentations at once: seg_rects (T, K, 4),
-    seg_labels (T, K).  Blocks are sharded over the mesh; each device scores
-    its shard of blocks against all T trees, then one psum.  Returns (T,)."""
+    seg_labels (T, K).  Returns (T,).
+
+    Without a mesh this is the dispatched ``repro.ops.fitting_loss_batched``
+    (numpy oracle / jitted xla / batched Pallas kernel, by selection rules
+    or the explicit ``backend=``).  With a mesh, blocks are sharded over
+    ``data_axis`` and every device scores its shard against all T trees
+    through the same canonical dense math the xla backend jits
+    (``kernels.fitting_loss.ref.fitting_loss_batched_ref``), then one psum.
+    """
+    if mesh is None:
+        from repro import ops
+        return ops.fitting_loss_batched(cs, np.asarray(seg_rects),
+                                        np.asarray(seg_labels),
+                                        backend=backend)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.kernels.fitting_loss.ref import fitting_loss_batched_ref
+
     rects = jnp.asarray(cs.rects, jnp.float32)
     lab4 = jnp.asarray(cs.labels, jnp.float32)
     w4 = jnp.asarray(cs.weights, jnp.float32)
     sr = jnp.asarray(seg_rects, jnp.float32)
     sl = jnp.asarray(seg_labels, jnp.float32)
-
-    def score_all(rects, lab4, w4, sr, sl):
-        return jax.vmap(lambda r, l: _fitting_loss_dense(rects, lab4, w4, r, l))(sr, sl)
-
-    if mesh is None:
-        return np.asarray(jax.jit(score_all)(rects, lab4, w4, sr, sl))
-
-    from jax.sharding import NamedSharding, PartitionSpec as P
     B = rects.shape[0]
     shards = int(np.prod([mesh.shape[a] for a in (data_axis,)]))
     pad = (-B) % shards
@@ -137,7 +126,7 @@ def fitting_loss_batched(cs: SignalCoreset, seg_rects: np.ndarray,
         w4 = jnp.pad(w4, ((0, pad), (0, 0)))
     sharding = NamedSharding(mesh, P(data_axis, None))
     with compat_set_mesh(mesh):
-        f = jax.jit(score_all,
+        f = jax.jit(fitting_loss_batched_ref,
                     in_shardings=(sharding, sharding, sharding, None, None),
                     out_shardings=NamedSharding(mesh, P()))
         return np.asarray(f(rects, lab4, w4, sr, sl))

@@ -12,9 +12,10 @@ column-interval queries, vectorized over arrays of rectangles.
 k=1) is ``S2 - S1^2 / S0`` — the variance identity used by Lemma 12(iv) /
 Eq. (1) of the paper.
 
-The accelerated (Pallas) construction of the same integral images lives in
-``repro.kernels.sat2d``; this module is the host-side oracle and the owner
-of the query API.
+The unmasked/unweighted build routes through the ``repro.ops.sat_moments``
+dispatcher (numpy oracle on host, the ``repro.kernels.sat2d`` Pallas kernel
+on TPU, env-overridable); this module remains the owner of the float64
+query API.
 """
 from __future__ import annotations
 
@@ -58,10 +59,24 @@ class PrefixStats:
         y = np.asarray(values, dtype=np.float64)
         if y.ndim != 2:
             raise ValueError(f"signal must be 2D, got shape {y.shape}")
+        n, m = y.shape
+        if mask is None and weights is None:
+            # the common (unmasked, unweighted) path goes through the op
+            # dispatcher: numpy oracle by default on host (same float64
+            # cumsums as before), the sat2d Pallas kernel on TPU or under
+            # REPRO_OPS_BACKEND.  The float32 accelerator backends trade
+            # precision for bandwidth; the query API stays float64.
+            from repro import ops
+            s = np.asarray(ops.sat_moments(y), np.float64)      # (3, n, m)
+            ps = []
+            for c in range(3):
+                out = np.zeros((n + 1, m + 1), dtype=np.float64)
+                out[1:, 1:] = s[c]
+                ps.append(out)
+            return PrefixStats(*ps)
         w = np.ones_like(y) if weights is None else np.asarray(weights, np.float64)
         if mask is not None:
             w = w * np.asarray(mask, dtype=np.float64)
-        n, m = y.shape
 
         def integral(a: np.ndarray) -> np.ndarray:
             out = np.zeros((n + 1, m + 1), dtype=np.float64)

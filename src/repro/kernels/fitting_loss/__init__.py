@@ -1,4 +1,4 @@
 from . import ops, ref
-from .kernel import fitting_loss_call
+from .kernel import fitting_loss_batched_call, fitting_loss_call
 
-__all__ = ["ops", "ref", "fitting_loss_call"]
+__all__ = ["ops", "ref", "fitting_loss_call", "fitting_loss_batched_call"]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: Algorithm 5 (FITTING-LOSS) evaluation, fused.
+"""Pallas TPU kernels: Algorithm 5 (FITTING-LOSS) evaluation, fused.
 
 The tree-tuning inner loop evaluates many candidate k-trees against the
 coreset.  Per (block-tile, all K leaves): rectangle-overlap counts, the
@@ -7,10 +7,27 @@ see core/fitting_loss.py), and the weighted squared-difference reduction —
 all fused in VMEM, so HBM traffic is one read of the coreset tile and the
 (K, 5) segmentation instead of a (B, K, 4) intermediate.
 
-Grid: (B / TB,).  Blocks: coreset tile (TB, 16) (rects|labels|weights packed
-and padded to the lane quantum), segmentation (K, 8).  Output: per-tile
-partial sums (grid, 8) reduced by the wrapper (keeps the kernel free of
-cross-tile accumulation ordering concerns).
+Two entry points:
+
+``fitting_loss_call``        one segmentation.  Grid (B/TB,); blocks:
+                             coreset tile (TB, 16) (rects|labels|weights
+                             packed and padded to the lane quantum),
+                             segmentation (K, 8); output per-tile partial
+                             sums (grid, 8) reduced by the wrapper.
+
+``fitting_loss_batched_call``  T segmentations in ONE pallas_call (the
+                             serving /v1/query/loss:batch and tuning-sweep
+                             hot path — previously a per-segmentation
+                             Python loop).  Grid (T/TT, B/TB) with the
+                             B axis innermost: TPU grids execute
+                             sequentially with the last axis fastest, so
+                             each (TT, 8) output tile accumulates its
+                             B-tile partial losses in place (initialized
+                             at b == 0 — the histsplit accumulation
+                             pattern).  The coreset tile is read once per
+                             (t, b) cell and scored against TT candidate
+                             trees while resident in VMEM, amortizing the
+                             HBM read T/TT-fold versus the looped kernel.
 """
 from __future__ import annotations
 
@@ -22,32 +39,43 @@ from jax.experimental import pallas as pl
 
 from ..common import default_interpret
 
-__all__ = ["fitting_loss_call"]
+__all__ = ["fitting_loss_call", "fitting_loss_batched_call"]
+
+
+def _smoothed_loss_terms(rects, labels4, weights4, seg_rects, seg_labels):
+    """Smoothed-assignment loss contributions, batched over leading axes.
+
+    rects/labels4/weights4: (TB, 4); seg_rects: (..., K, 4);
+    seg_labels: (..., K).  Returns the consumed-mass weighted squared
+    differences with shape (TB, ..., K, 4); callers reduce.
+    """
+    extra = seg_rects.ndim - 1               # broadcast axes: (TT,) K or K
+    rshape = (rects.shape[0],) + (1,) * extra
+    z_r = jnp.clip(jnp.minimum(rects[:, 1].reshape(rshape), seg_rects[None, ..., 1])
+                   - jnp.maximum(rects[:, 0].reshape(rshape), seg_rects[None, ..., 0]),
+                   0, None)
+    z_c = jnp.clip(jnp.minimum(rects[:, 3].reshape(rshape), seg_rects[None, ..., 3])
+                   - jnp.maximum(rects[:, 2].reshape(rshape), seg_rects[None, ..., 2]),
+                   0, None)
+    z = z_r * z_c                                  # (TB, ..., K)
+    Z = jnp.cumsum(z, axis=-1)
+    Zp = Z - z
+    U = jnp.cumsum(weights4, axis=1)               # (TB, 4)
+    Up = U - weights4
+    # broadcast U/Up (TB, 4) against Z (TB, ..., K) -> (TB, ..., K, 4)
+    shape = (U.shape[0],) + (1,) * extra + (4,)
+    lo = jnp.maximum(Zp[..., None], Up.reshape(shape))
+    hi = jnp.minimum(Z[..., None], U.reshape(shape))
+    consumed = jnp.clip(hi - lo, 0.0, None)        # (TB, ..., K, 4)
+    diff = seg_labels[None, ..., None] - labels4.reshape(shape)
+    return consumed * diff * diff
 
 
 def _fl_kernel(blk_ref, seg_ref, o_ref):
     blk = blk_ref[...]                         # (TB, 16)
-    rects = blk[:, 0:4]
-    labels4 = blk[:, 4:8]
-    weights4 = blk[:, 8:12]
     seg = seg_ref[...]                         # (K, 8)
-    seg_rects = seg[:, 0:4]
-    seg_labels = seg[:, 4]
-
-    z_r = jnp.clip(jnp.minimum(rects[:, None, 1], seg_rects[None, :, 1])
-                   - jnp.maximum(rects[:, None, 0], seg_rects[None, :, 0]), 0, None)
-    z_c = jnp.clip(jnp.minimum(rects[:, None, 3], seg_rects[None, :, 3])
-                   - jnp.maximum(rects[:, None, 2], seg_rects[None, :, 2]), 0, None)
-    z = z_r * z_c                              # (TB, K)
-    Z = jnp.cumsum(z, axis=1)
-    Zp = Z - z
-    U = jnp.cumsum(weights4, axis=1)
-    Up = U - weights4
-    lo = jnp.maximum(Zp[:, :, None], Up[:, None, :])
-    hi = jnp.minimum(Z[:, :, None], U[:, None, :])
-    consumed = jnp.clip(hi - lo, 0.0, None)    # (TB, K, 4)
-    diff = seg_labels[None, :, None] - labels4[:, None, :]
-    part = (consumed * diff * diff).sum()
+    part = _smoothed_loss_terms(blk[:, 0:4], blk[:, 4:8], blk[:, 8:12],
+                                seg[:, 0:4], seg[:, 4]).sum()
     o_ref[...] = jnp.full_like(o_ref, part)
 
 
@@ -81,3 +109,66 @@ def fitting_loss_call(rects, labels4, weights4, seg_rects, seg_labels,
         interpret=interpret,
     )(blk.astype(jnp.float32), seg.astype(jnp.float32))
     return partials[:, 0].sum()
+
+
+def _fl_batched_kernel(seg_ref, blk_ref, o_ref):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = blk_ref[...]                         # (TB, 16)
+    seg = seg_ref[...]                         # (TT, K, 8)
+    terms = _smoothed_loss_terms(blk[:, 0:4], blk[:, 4:8], blk[:, 8:12],
+                                 seg[:, :, 0:4], seg[:, :, 4])
+    part = terms.sum(axis=(0, 2, 3))           # (TT,)
+    o_ref[...] += part[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_b", "tile_t", "interpret"))
+def fitting_loss_batched_call(rects, labels4, weights4, seg_rects, seg_labels,
+                              tile_b: int = 512, tile_t: int = 8,
+                              interpret: bool | None = None):
+    """(T,) Algorithm-5 losses, one pallas_call for the whole candidate set.
+
+    rects/labels4/weights4: (B, 4) f32; seg_rects: (T, K, 4) f32;
+    seg_labels: (T, K) f32.  B pads with zero-weight blocks (no loss),
+    T pads with zero segmentations (rows sliced off).  ``tile_b`` is capped
+    so the fused (TB, TT, K, 4) intermediate stays inside the VMEM budget.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B = rects.shape[0]
+    T, K = seg_rects.shape[0], seg_rects.shape[1]
+    tt = min(tile_t, max(T, 1))
+    # (TB, TT, K, 4) f32 working set <= ~4 MiB alongside double buffering
+    vmem_cap = max(8, (1 << 20) // max(tt * K * 4, 1))
+    tb = min(tile_b, max(B, 1), vmem_cap)
+    pad_b = (-B) % tb
+    pad_t = (-T) % tt
+
+    blk = jnp.concatenate([rects, labels4, weights4,
+                           jnp.zeros((B, 4), rects.dtype)], axis=1)  # (B,16)
+    if pad_b:
+        blk = jnp.pad(blk, ((0, pad_b), (0, 0)))
+    seg = jnp.concatenate([seg_rects, seg_labels[..., None],
+                           jnp.zeros((T, K, 3), seg_rects.dtype)],
+                          axis=-1)                                   # (T,K,8)
+    if pad_t:
+        seg = jnp.pad(seg, ((0, pad_t), (0, 0), (0, 0)))
+    Tp = seg.shape[0]
+    grid = (Tp // tt, blk.shape[0] // tb)      # B innermost: accumulation
+    out = pl.pallas_call(
+        _fl_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, K, 8), lambda t, b: (t, 0, 0)),
+            pl.BlockSpec((tb, 16), lambda t, b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((tt, 8), lambda t, b: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, 8), jnp.float32),
+        interpret=interpret,
+    )(seg.astype(jnp.float32), blk.astype(jnp.float32))
+    return out[:T, 0]

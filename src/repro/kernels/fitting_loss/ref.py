@@ -1,9 +1,16 @@
-"""Pure-jnp oracle for the Algorithm-5 smoothed-assignment loss."""
+"""Pure-jnp oracle for the Algorithm-5 smoothed-assignment loss.
+
+``fitting_loss_ref`` is also the single source of the dense math: the
+``repro.ops`` xla backend jits it, and ``core.sharded`` shards the vmapped
+``fitting_loss_batched_ref`` over the device mesh — there is no second
+hand-written dense implementation anywhere.
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["fitting_loss_ref"]
+__all__ = ["fitting_loss_ref", "fitting_loss_batched_ref"]
 
 
 def fitting_loss_ref(rects, labels4, weights4, seg_rects, seg_labels):
@@ -28,3 +35,13 @@ def fitting_loss_ref(rects, labels4, weights4, seg_rects, seg_labels):
     consumed = jnp.clip(hi - lo, 0.0, None)           # (B, K, 4)
     diff = seg_labels[None, :, None] - labels4[:, None, :]
     return (consumed * diff * diff).sum()
+
+
+def fitting_loss_batched_ref(rects, labels4, weights4, seg_rects, seg_labels):
+    """(T,) dense losses for T segmentations: seg_rects (T, K, 4),
+    seg_labels (T, K).  vmap of :func:`fitting_loss_ref` over candidates —
+    every device in the sharded path scores its block shard against all T
+    trees at once."""
+    return jax.vmap(
+        lambda r, l: fitting_loss_ref(rects, labels4, weights4, r, l)
+    )(seg_rects, seg_labels)

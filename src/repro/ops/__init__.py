@@ -1,0 +1,97 @@
+"""repro.ops — one canonical op surface, three backends per op.
+
+The serving/tuning hot paths reduce to four primitives:
+
+  ``sat_moments(y)``                     (3, n, m) integral images of
+                                         (1, y, y²) — PrefixStats' build
+  ``fitting_loss(cs, rects, labels)``    Algorithm-5 loss of one tree
+  ``fitting_loss_batched(cs, R, L)``     (T,) losses, one fused evaluation
+  ``hist_split(codes, w, wy, wy2, B)``   CART split histograms
+
+Each dispatches through the backend registry (numpy oracle / jitted xla /
+Pallas kernel) with capability+size auto-selection and the
+``REPRO_OPS_BACKEND`` env override — see ``registry.py`` for the rules.
+Core, trees, and the serving engine all route through this module instead
+of importing kernel modules directly, so a future op (delta ingest,
+streaming compress) plugs in here once and is immediately servable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import backends as _backends  # noqa: F401  (registers implementations)
+from .registry import (BACKENDS, ENV_VAR, OPS, BackendError,
+                       available_backends, backend_override, dispatch,
+                       register, resolve, select_backend, snapshot)
+
+__all__ = [
+    "OPS", "BACKENDS", "ENV_VAR", "BackendError",
+    "available_backends", "backend_override", "dispatch", "register",
+    "resolve", "select_backend", "selected_backend", "snapshot",
+    "sat_moments", "fitting_loss", "fitting_loss_batched", "hist_split",
+    "fitting_loss_size", "fitting_loss_batched_size",
+]
+
+
+def sat_moments(y, *, backend: str | None = None, **kw) -> np.ndarray:
+    """(3, n, m) integral images of (1, y, y^2) for a 2-D signal."""
+    y = np.asarray(y)
+    if y.ndim != 2:
+        raise ValueError(f"signal must be 2D, got shape {y.shape}")
+    return dispatch("sat_moments", y, backend=backend, size=3 * y.size, **kw)
+
+
+def fitting_loss_size(cs, seg_rects) -> int:
+    """Selection 'size' of a fitting_loss problem (blocks x leaves) — the
+    one definition shared by the wrapper below and callers that need to
+    know the backend a dispatch will use (``selected_backend``)."""
+    k = np.asarray(seg_rects).reshape(-1, 4).shape[0]
+    return cs.num_blocks * max(k, 1)
+
+
+def fitting_loss_batched_size(cs, seg_rects) -> int:
+    """Selection 'size' of a batched problem (trees x blocks x leaves)."""
+    sr = np.asarray(seg_rects)
+    return cs.num_blocks * sr.shape[0] * max(sr.shape[1], 1)
+
+
+def fitting_loss(cs, seg_rects, seg_labels, *,
+                 backend: str | None = None, **kw) -> float:
+    """Scalar Algorithm-5 loss of one k-segmentation against ``cs``."""
+    sr = np.asarray(seg_rects).reshape(-1, 4)
+    sl = np.asarray(seg_labels, np.float64).ravel()
+    if sr.shape[0] != sl.shape[0]:
+        raise ValueError("rects/labels length mismatch")
+    return dispatch("fitting_loss", cs, sr, sl, backend=backend,
+                    size=fitting_loss_size(cs, sr), **kw)
+
+
+def fitting_loss_batched(cs, seg_rects, seg_labels, *,
+                         backend: str | None = None, **kw) -> np.ndarray:
+    """(T,) Algorithm-5 losses: seg_rects (T, K, 4), seg_labels (T, K)."""
+    sr = np.asarray(seg_rects)
+    sl = np.asarray(seg_labels, np.float64)
+    if sr.ndim != 3 or sr.shape[-1] != 4:
+        raise ValueError("batch rects must have shape (T, K, 4)")
+    if sl.shape != sr.shape[:2]:
+        raise ValueError("batch labels must have shape (T, K)")
+    return dispatch("fitting_loss_batched", cs, sr, sl, backend=backend,
+                    size=fitting_loss_batched_size(cs, sr), **kw)
+
+
+def hist_split(codes, w, wy, wy2, n_bins: int, *,
+               backend: str | None = None, **kw) -> np.ndarray:
+    """(F, n_bins, 3) per-(feature, bin) sums of (w, wy, wy2);
+    codes (P, F) integer bin ids."""
+    codes = np.asarray(codes)
+    if codes.ndim != 2:
+        raise ValueError(f"codes must be (P, F), got shape {codes.shape}")
+    return dispatch("hist_split", codes, w, wy, wy2, int(n_bins),
+                    backend=backend, size=codes.size, **kw)
+
+
+def selected_backend(op: str, size: int | None = None,
+                     backend: str | None = None) -> str:
+    """The backend name a dispatch of ``op`` at ``size`` would use — for
+    surfacing in responses, ``/v1/stats`` and bench output."""
+    return backend or select_backend(op, size)

@@ -1,0 +1,190 @@
+"""Registered backend implementations for the canonical op surface.
+
+Each factory is resolved lazily on first dispatch (see registry.py), so the
+numpy path never imports jax and importing ``repro.ops`` never imports the
+kernel packages.  Conventions:
+
+  * inputs are host values (SignalCoreset / numpy arrays / plain ints);
+  * outputs are numpy arrays (or Python floats) — the dispatch surface is
+    host-level; device-resident pipelines (the mesh-sharded scorer in
+    ``core.sharded``) use the kernel/ref modules directly;
+  * the ``pallas`` implementations accept ``interpret=`` so tests can pin
+    interpret mode explicitly.
+
+The dense jnp math exists exactly once, in ``repro.kernels.*.ref`` — the
+xla backends jit those oracles; nothing here re-derives a formula.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .registry import register
+
+# ------------------------------------------------------------- sat_moments
+# (3, n, m) inclusive integral images of (1, y, y^2) — PrefixStats' core.
+
+
+@register("sat_moments", "numpy")
+def _sat_moments_numpy():
+    def sat_moments(y):
+        y = np.asarray(y, np.float64)
+        stk = np.stack([np.ones_like(y), y, y * y], axis=0)
+        return np.cumsum(np.cumsum(stk, axis=1), axis=2)
+    return sat_moments
+
+
+@register("sat_moments", "xla")
+def _sat_moments_xla():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.sat2d.ref import sat_moments_ref
+    f = jax.jit(sat_moments_ref)
+
+    def sat_moments(y):
+        return np.asarray(f(jnp.asarray(y, jnp.float32)))
+    return sat_moments
+
+
+@register("sat_moments", "pallas")
+def _sat_moments_pallas():
+    import jax.numpy as jnp
+    from repro.kernels.sat2d.ops import sat_moments as kernel_sat_moments
+
+    def sat_moments(y, interpret=None):
+        return np.asarray(kernel_sat_moments(jnp.asarray(y, jnp.float32),
+                                             interpret=interpret))
+    return sat_moments
+
+
+# ------------------------------------------------------------ fitting_loss
+# scalar Algorithm-5 loss of one segmentation against a SignalCoreset.
+
+
+@register("fitting_loss", "numpy")
+def _fitting_loss_numpy():
+    from repro.core.fitting_loss import fitting_loss
+
+    def fl(cs, seg_rects, seg_labels):
+        return float(fitting_loss(cs, seg_rects, seg_labels))
+    return fl
+
+
+@register("fitting_loss", "xla")
+def _fitting_loss_xla():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fitting_loss.ref import fitting_loss_ref
+    f = jax.jit(fitting_loss_ref)
+
+    def fl(cs, seg_rects, seg_labels):
+        return float(f(
+            jnp.asarray(cs.rects, jnp.float32),
+            jnp.asarray(cs.labels, jnp.float32),
+            jnp.asarray(cs.weights, jnp.float32),
+            jnp.asarray(seg_rects, jnp.float32),
+            jnp.asarray(seg_labels, jnp.float32)))
+    return fl
+
+
+@register("fitting_loss", "pallas")
+def _fitting_loss_pallas():
+    from repro.kernels.fitting_loss.ops import coreset_loss
+
+    def fl(cs, seg_rects, seg_labels, interpret=None):
+        return float(coreset_loss(cs, seg_rects, seg_labels,
+                                  interpret=interpret))
+    return fl
+
+
+# ---------------------------------------------------- fitting_loss_batched
+# (T,) losses for T candidate segmentations against one coreset.
+
+
+@register("fitting_loss_batched", "numpy")
+def _fitting_loss_batched_numpy():
+    from repro.core.fitting_loss import fitting_loss
+
+    def fb(cs, seg_rects, seg_labels):
+        return np.array([fitting_loss(cs, r, l)
+                         for r, l in zip(seg_rects, seg_labels)], np.float64)
+    return fb
+
+
+@register("fitting_loss_batched", "xla")
+def _fitting_loss_batched_xla():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fitting_loss.ref import fitting_loss_batched_ref
+    f = jax.jit(fitting_loss_batched_ref)
+
+    def fb(cs, seg_rects, seg_labels):
+        return np.asarray(f(
+            jnp.asarray(cs.rects, jnp.float32),
+            jnp.asarray(cs.labels, jnp.float32),
+            jnp.asarray(cs.weights, jnp.float32),
+            jnp.asarray(seg_rects, jnp.float32),
+            jnp.asarray(seg_labels, jnp.float32)), np.float64)
+    return fb
+
+
+@register("fitting_loss_batched", "pallas")
+def _fitting_loss_batched_pallas():
+    from repro.kernels.fitting_loss.ops import coreset_loss_batched
+
+    def fb(cs, seg_rects, seg_labels, interpret=None):
+        return np.asarray(coreset_loss_batched(cs, seg_rects, seg_labels,
+                                               interpret=interpret),
+                          np.float64)
+    return fb
+
+
+# -------------------------------------------------------------- hist_split
+# per-(feature, bin) sums of (w, wy, wy2) — the CART split-search hot spot.
+
+
+@register("hist_split", "numpy")
+def _hist_split_numpy():
+    def hist(codes, w, wy, wy2, n_bins):
+        codes = np.asarray(codes)
+        out = np.empty((codes.shape[1], n_bins, 3), np.float64)
+        for f in range(codes.shape[1]):
+            c = codes[:, f]
+            out[f, :, 0] = np.bincount(c, weights=w, minlength=n_bins)
+            out[f, :, 1] = np.bincount(c, weights=wy, minlength=n_bins)
+            out[f, :, 2] = np.bincount(c, weights=wy2, minlength=n_bins)
+        return out
+    return hist
+
+
+@register("hist_split", "xla")
+def _hist_split_xla():
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    # segment-sum per feature: O(P*F) work and memory, unlike the one-hot
+    # einsum oracle in kernels/histsplit/ref.py whose (P, F, n_bins) one-hot
+    # would blow up host memory at training sizes
+    @functools.partial(jax.jit, static_argnames=("n_bins",))
+    def _hist(codes, vals, n_bins):
+        def one(c):
+            return jax.ops.segment_sum(vals, c, num_segments=n_bins)
+        return jax.vmap(one, in_axes=1)(codes)          # (F, n_bins, 3)
+
+    def hist(codes, w, wy, wy2, n_bins):
+        codes = jnp.asarray(np.asarray(codes), jnp.int32)
+        vals = jnp.stack([jnp.asarray(w, jnp.float32),
+                          jnp.asarray(wy, jnp.float32),
+                          jnp.asarray(wy2, jnp.float32)], axis=1)
+        return np.asarray(_hist(codes, vals, n_bins), np.float64)
+    return hist
+
+
+@register("hist_split", "pallas")
+def _hist_split_pallas():
+    from repro.kernels.histsplit.ops import histograms
+
+    def hist(codes, w, wy, wy2, n_bins):
+        return np.asarray(histograms(codes, w, wy, wy2, n_bins), np.float64)
+    return hist

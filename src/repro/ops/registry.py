@@ -1,0 +1,196 @@
+"""Backend registry + dispatch for the canonical op surface.
+
+Every hot-path primitive in this repo exists (or existed) several times:
+a numpy oracle, a jitted dense-jnp variant, and a Pallas TPU kernel.  The
+registry makes that structure explicit instead of ad hoc: each *op* name
+maps to up to three registered *backends*,
+
+    numpy   — float64 host oracle (ground truth; fastest for small inputs)
+    xla     — jitted dense jnp (the dry-run / CPU-compiled path)
+    pallas  — the TPU kernel (interpret-mode on CPU)
+
+and callers go through :func:`dispatch`, never through a kernel module
+directly.  Selection order:
+
+  1. explicit ``backend=`` argument (callers that must pin a path);
+  2. a :func:`backend_override` context (tests);
+  3. the ``REPRO_OPS_BACKEND`` environment variable — either one backend
+     name for every op (``REPRO_OPS_BACKEND=pallas``) or a comma list of
+     ``op=backend`` pairs with an optional bare default
+     (``REPRO_OPS_BACKEND=xla,hist_split=numpy``);
+  4. capability: on a TPU host, ``pallas`` (the kernels are written for it);
+  5. size: below the per-op ``XLA_SIZE_THRESHOLD`` the numpy oracle wins
+     (no dispatch/compile overhead), above it the jitted xla path.
+     Precision-critical ops (``XLA_SIZE_THRESHOLD[op] is None``) never
+     size-promote to the float32 accelerator backends, and interpret-mode
+     Pallas is never auto-selected — on CPU it is a correctness path, not
+     a fast one.
+
+Implementations are registered as *factories* resolved on first use, so
+importing ``repro.ops`` pulls in neither jax nor the kernel packages and
+the registry stays import-cycle free (backends import ``repro.core`` /
+``repro.kernels`` lazily).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import threading
+from typing import Callable
+
+__all__ = [
+    "OPS", "BACKENDS", "ENV_VAR", "BackendError", "register",
+    "available_backends", "select_backend", "resolve", "dispatch",
+    "backend_override", "snapshot",
+]
+
+OPS = ("sat_moments", "fitting_loss", "fitting_loss_batched", "hist_split")
+BACKENDS = ("numpy", "xla", "pallas")
+ENV_VAR = "REPRO_OPS_BACKEND"
+
+# auto-selection crossover (problem "size" is op-specific, computed by the
+# public wrappers in __init__): below -> numpy oracle, above -> jitted xla.
+# None = NEVER size-promote: sat_moments and hist_split feed the variance
+# identity S2 - S1^2/S0, which is catastrophically cancellation-sensitive —
+# their float32 xla/pallas backends are only used when explicitly pinned
+# (env/override) or on TPU, where f32 is the documented trade-off.  The two
+# loss ops sum non-negative terms, so f32 promotion is safe.
+XLA_SIZE_THRESHOLD = {
+    "sat_moments": None,               # precision-critical (f64 oracle)
+    "fitting_loss": 1 << 16,           # blocks * leaves
+    "fitting_loss_batched": 1 << 16,   # trees * blocks * leaves
+    "hist_split": None,                # precision-critical (f64 oracle)
+}
+
+
+class BackendError(KeyError):
+    """Unknown op/backend pair requested from the registry."""
+
+
+_FACTORIES: dict[tuple[str, str], Callable[[], Callable]] = {}
+_RESOLVED: dict[tuple[str, str], Callable] = {}
+_RESOLVE_LOCK = threading.Lock()
+_OVERRIDE: list[str] = []   # backend_override stack (innermost last)
+
+
+def register(op: str, backend: str):
+    """Decorator: register a lazy factory for (op, backend)."""
+    if op not in OPS:
+        raise BackendError(f"unknown op {op!r}; ops are {OPS}")
+    if backend not in BACKENDS:
+        raise BackendError(f"unknown backend {backend!r}; backends are {BACKENDS}")
+
+    def deco(factory: Callable[[], Callable]) -> Callable[[], Callable]:
+        _FACTORIES[(op, backend)] = factory
+        return factory
+
+    return deco
+
+
+def available_backends(op: str) -> tuple[str, ...]:
+    return tuple(b for b in BACKENDS if (op, b) in _FACTORIES)
+
+
+def _env_choice(op: str) -> str | None:
+    """Parse REPRO_OPS_BACKEND: bare default + op-specific overrides."""
+    spec = os.environ.get(ENV_VAR, "").strip()
+    if not spec:
+        return None
+    default = specific = None
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            o, b = (s.strip() for s in part.split("=", 1))
+            if o == op:
+                specific = b
+        elif default is None:
+            default = part
+    choice = specific or default
+    if choice is not None and choice not in BACKENDS:
+        raise BackendError(
+            f"{ENV_VAR}={spec!r} names unknown backend {choice!r}; "
+            f"valid backends are {BACKENDS}")
+    return choice
+
+
+@functools.cache
+def _platform_is_tpu() -> bool:
+    # cached: the platform cannot change mid-process, and the first
+    # jax.default_backend() call forces XLA client init — pure-numpy hot
+    # paths (PrefixStats.build, per-node hist_split) must pay it only once
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def select_backend(op: str, size: int | None = None) -> str:
+    """The backend :func:`dispatch` would use for ``op`` at ``size``."""
+    if op not in OPS:
+        raise BackendError(f"unknown op {op!r}; ops are {OPS}")
+    if _OVERRIDE:
+        return _OVERRIDE[-1]
+    env = _env_choice(op)
+    if env is not None:
+        return env
+    if _platform_is_tpu():
+        return "pallas"
+    thr = XLA_SIZE_THRESHOLD[op]
+    if thr is not None and size is not None and size >= thr:
+        return "xla"
+    return "numpy"
+
+
+def resolve(op: str, backend: str | None = None,
+            size: int | None = None) -> tuple[str, Callable]:
+    """(backend name, callable) after selection + lazy factory resolution."""
+    name = backend or select_backend(op, size)
+    key = (op, name)
+    fn = _RESOLVED.get(key)
+    if fn is None:
+        with _RESOLVE_LOCK:
+            fn = _RESOLVED.get(key)
+            if fn is None:
+                factory = _FACTORIES.get(key)
+                if factory is None:
+                    raise BackendError(
+                        f"no {name!r} backend registered for op {op!r}; "
+                        f"available: {available_backends(op)}")
+                fn = _RESOLVED[key] = factory()
+    return name, fn
+
+
+def dispatch(op: str, *args, backend: str | None = None,
+             size: int | None = None, **kw):
+    _, fn = resolve(op, backend, size)
+    return fn(*args, **kw)
+
+
+@contextlib.contextmanager
+def backend_override(backend: str):
+    """Force every dispatch inside the context onto one backend (tests)."""
+    if backend not in BACKENDS:
+        raise BackendError(f"unknown backend {backend!r}; backends are {BACKENDS}")
+    _OVERRIDE.append(backend)
+    try:
+        yield
+    finally:
+        _OVERRIDE.pop()
+
+
+def snapshot() -> dict:
+    """Selection state per op — surfaced in ``/v1/stats`` and bench output.
+
+    ``selected`` is the small-problem choice (size-unaware); large problems
+    auto-promote to ``xla`` at ``xla_threshold`` unless pinned.
+    """
+    out = {}
+    for op in OPS:
+        out[op] = {
+            "available": list(available_backends(op)),
+            "selected": select_backend(op),
+            "env_override": _env_choice(op),
+            "xla_threshold": XLA_SIZE_THRESHOLD[op],
+        }
+    return out

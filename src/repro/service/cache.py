@@ -16,9 +16,19 @@ recompressed streamed coreset is not claimed tighter than it is.
 
 Entries are keyed by (signal, version, k, eps); ``version`` is a content
 hash maintained by the engine (a new ingested band bumps it), so stale
-coresets can never serve a mutated signal.  Eviction is plain LRU over a
-byte budget (coresets are small — 88 bytes/block — but millions of signals
-are not).
+coresets can never serve a mutated signal.
+
+Eviction is cost-aware (GDSF — greedy-dual size-frequency) over a byte
+budget: an entry's priority is
+
+    priority = clock + (1 + hits) * max(build_seconds, floor) / nbytes
+
+and overflow evicts the minimum-priority entry.  ``build_seconds / nbytes``
+is the rebuild cost per cached byte (an expensive O(Nk) build that
+compressed well is the most valuable thing in the cache), ``hits`` folds in
+frequency, and the ``clock`` — advanced to each victim's priority — ages
+out entries that stop being touched, so a once-hot expensive coreset still
+drains away under pressure.  Priorities refresh on every hit and insert.
 """
 from __future__ import annotations
 
@@ -48,9 +58,10 @@ class CacheEntry:
     nbytes: int
     fingerprint: str
     hits: int = 0
-    build_seconds: float = 0.0   # construction cost, recorded at insert —
-                                 # the signal cost-aware eviction will weigh
-                                 # against bytes/recency (ROADMAP)
+    build_seconds: float = 0.0   # construction cost, recorded at insert;
+                                 # weighed against nbytes + recency by the
+                                 # GDSF eviction policy
+    priority: float = 0.0        # GDSF score, maintained by DominanceCache
 
     @property
     def key(self) -> tuple:
@@ -58,7 +69,12 @@ class CacheEntry:
 
 
 class DominanceCache:
-    """LRU over bytes; lookup tries exact key, then the dominance rule."""
+    """Byte-budgeted cache; lookup tries exact key, then the dominance rule;
+    overflow evicts by GDSF priority (cost-aware, not pure LRU)."""
+
+    # floor for build_seconds in the priority: manually-constructed entries
+    # (tests, replicated inserts) with cost 0 still order by size/recency
+    MIN_COST = 1e-6
 
     def __init__(self, byte_budget: int = 256 << 20,
                  metrics: ServiceMetrics | None = None):
@@ -71,6 +87,13 @@ class DominanceCache:
         # of signals)
         self._by_signal: dict[str, dict[str, set[tuple]]] = {}
         self._bytes = 0
+        self._clock = 0.0   # GDSF aging clock; advances to victim priority
+
+    def _boost(self, e: CacheEntry) -> None:
+        """Refresh an entry's GDSF priority (call under the lock, on every
+        insert and hit)."""
+        cost = max(float(e.build_seconds), self.MIN_COST)
+        e.priority = self._clock + (1.0 + e.hits) * cost / max(e.nbytes, 1)
 
     # ---------------------------------------------------------------- lookup
     def lookup(self, signal: str, version: str, k: int, eps: float, *,
@@ -86,6 +109,7 @@ class DominanceCache:
             if e is not None:
                 self._entries.move_to_end(key)
                 e.hits += 1
+                self._boost(e)
                 if record:
                     self.metrics.inc("cache_hit_exact")
                 return e, "exact"
@@ -101,6 +125,7 @@ class DominanceCache:
             if best is not None:
                 self._entries.move_to_end(best.key)
                 best.hits += 1
+                self._boost(best)
                 if record:
                     self.metrics.inc("cache_hit_dominated")
                 return best, "dominated"
@@ -131,10 +156,17 @@ class DominanceCache:
             self._by_signal.setdefault(entry.signal, {}).setdefault(
                 entry.version, set()).add(entry.key)
             self._bytes += entry.nbytes
+            self._boost(entry)
             self.metrics.inc("cache_insertions")
             while self._bytes > self.byte_budget and len(self._entries) > 1:
-                victim_key = next(iter(self._entries))   # LRU head
-                self._drop(victim_key)
+                # GDSF victim: minimum priority.  O(entries) scan, but only
+                # on overflow — lookups stay O(1)+dominance.  The victim may
+                # be the entry just inserted (a cheap build must not displace
+                # expensive-to-rebuild ones); callers already hold the built
+                # coreset, so serving is unaffected.
+                victim = min(self._entries.values(), key=lambda e: e.priority)
+                self._clock = max(self._clock, victim.priority)
+                self._drop(victim.key)
                 self.metrics.inc("cache_evictions")
 
     def invalidate_signal(self, signal: str, keep_version: str | None = None) -> int:
@@ -165,9 +197,12 @@ class DominanceCache:
                 "entries": len(self._entries),
                 "bytes": self._bytes,
                 "byte_budget": self.byte_budget,
+                "eviction_policy": "gdsf",
+                "clock": self._clock,
                 "keys": [{"signal": e.signal, "k": e.k, "eps": e.eps,
                           "eps_eff": e.eps_eff, "blocks": e.coreset.num_blocks,
                           "nbytes": e.nbytes, "hits": e.hits,
-                          "build_seconds": e.build_seconds}
+                          "build_seconds": e.build_seconds,
+                          "priority": e.priority}
                          for e in self._entries.values()],
             }

@@ -24,8 +24,8 @@ import threading
 
 import numpy as np
 
+from repro import ops
 from repro.core.coreset import SignalCoreset, signal_coreset, signal_coreset_to_size
-from repro.core.fitting_loss import fitting_loss
 from repro.core.sharded import fitting_loss_batched, sharded_coreset
 from repro.core.streaming import StreamingBuilder
 from repro.trees.forest import RandomForestRegressor
@@ -306,12 +306,18 @@ class CoresetEngine:
         k = int(k) if k is not None else int(seg_rects.shape[0])
         with self.metrics.timed("query_loss"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
-            loss = fitting_loss(cs, seg_rects, seg_labels)
+            # resolve once, dispatch with the same choice: the reported
+            # backend is by construction the one that served the query
+            backend = ops.selected_backend(
+                "fitting_loss", ops.fitting_loss_size(cs, seg_rects))
+            loss = ops.fitting_loss(cs, seg_rects, seg_labels,
+                                    backend=backend)
         self.metrics.inc("queries_loss")
         self.metrics.inc("loss_scoring_calls")
+        self.metrics.inc(f"ops_backend_{backend}")
         return {"loss": float(loss), "k": k, "eps": eps, "eps_eff": eps_eff,
                 "served_from": how, "fingerprint": cs.fingerprint(),
-                "coreset_size": cs.size}
+                "coreset_size": cs.size, "backend": backend}
 
     def tree_loss_batch(self, name: str, seg_rects, seg_labels, *,
                         eps: float = 0.2, k: int | None = None,
@@ -319,10 +325,12 @@ class CoresetEngine:
         """Fused Algorithm-5 loss for T same-signal segmentations.
 
         ``seg_rects`` (T, K, 4) / ``seg_labels`` (T, K) score against ONE
-        cached coreset through ``core.sharded.fitting_loss_batched`` (blocks
-        sharded over ``self.mesh`` when one is configured): a single engine
-        scoring call replaces T sequential ``tree_loss`` evaluations — the
-        tuning-sweep inner loop served as one request.
+        cached coreset through the dispatched batched op
+        (``core.sharded.fitting_loss_batched`` — the ``repro.ops`` backend
+        rules when no mesh, blocks sharded over ``self.mesh`` when one is
+        configured): a single engine scoring call replaces T sequential
+        ``tree_loss`` evaluations — the tuning-sweep inner loop served as
+        one request.
         """
         seg_rects = np.asarray(seg_rects, np.int64)
         seg_labels = np.asarray(seg_labels, np.float64)
@@ -335,15 +343,25 @@ class CoresetEngine:
         k = int(k) if k is not None else int(seg_rects.shape[1])
         with self.metrics.timed("query_loss_batch"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
-            losses = fitting_loss_batched(cs, seg_rects, seg_labels,
-                                          mesh=self.mesh)
+            if self.mesh is not None:
+                backend = "xla+mesh"
+                losses = fitting_loss_batched(cs, seg_rects, seg_labels,
+                                              mesh=self.mesh)
+            else:
+                # resolve once, dispatch with the same choice (see tree_loss)
+                backend = ops.selected_backend(
+                    "fitting_loss_batched",
+                    ops.fitting_loss_batched_size(cs, seg_rects))
+                losses = fitting_loss_batched(cs, seg_rects, seg_labels,
+                                              backend=backend)
         self.metrics.inc("queries_loss_batch")
         self.metrics.inc("queries_loss_batch_items", seg_rects.shape[0])
         self.metrics.inc("loss_scoring_calls")   # ONE fused evaluation
+        self.metrics.inc(f"ops_backend_{backend}")
         return {"losses": np.asarray(losses, np.float64),
                 "k": k, "eps": eps, "eps_eff": eps_eff, "served_from": how,
                 "fingerprint": cs.fingerprint(), "coreset_size": cs.size,
-                "scoring_calls": 1}
+                "scoring_calls": 1, "backend": backend}
 
     def fit_forest(self, name: str, *, k: int, eps: float = 0.2,
                    n_estimators: int = 10, max_leaves: int | None = None,
@@ -421,6 +439,7 @@ class CoresetEngine:
     def stats(self) -> dict:
         return {"signals": self.list_signals(), "cache": self.cache.stats(),
                 "builds_in_flight": self.scheduler.in_flight(),
+                "ops_backends": ops.snapshot(),
                 "metrics": self.metrics.snapshot()}
 
     def close(self) -> None:

@@ -5,10 +5,12 @@
 from .cart import DecisionTreeRegressor, apply_bins, quantile_bins
 from .forest import RandomForestRegressor
 from .boosting import GradientBoostingRegressor
-from .tuning import TuneResult, signal_to_points, tune_k, uniform_sample
+from .tuning import (TuneResult, best_segmentation, score_segmentations,
+                     signal_to_points, tune_k, uniform_sample)
 
 __all__ = [
     "DecisionTreeRegressor", "apply_bins", "quantile_bins",
     "RandomForestRegressor", "GradientBoostingRegressor",
-    "TuneResult", "signal_to_points", "tune_k", "uniform_sample",
+    "TuneResult", "best_segmentation", "score_segmentations",
+    "signal_to_points", "tune_k", "uniform_sample",
 ]

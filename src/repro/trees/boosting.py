@@ -15,7 +15,7 @@ __all__ = ["GradientBoostingRegressor"]
 class GradientBoostingRegressor:
     def __init__(self, n_estimators: int = 50, learning_rate: float = 0.1,
                  max_leaves: int = 31, max_depth: int = 64, max_bins: int = 255,
-                 hist_backend: str = "numpy"):
+                 hist_backend: str = "auto"):
         self.n_estimators = int(n_estimators)
         self.learning_rate = float(learning_rate)
         self.max_leaves = int(max_leaves)

@@ -12,10 +12,12 @@ follows LightGBM's histogram algorithm:
     paper's k-tree notion), like LightGBM's leaf-wise growth.
 
 Sample weights are first-class throughout (coreset points are weighted).
-The histogram build is the training hot spot; on TPU it maps to the
+The histogram build is the training hot spot; it dispatches through
+``repro.ops.hist_split`` — numpy bincount oracle, xla segment-sum, or the
 one-hot-matmul Pallas kernel in ``repro.kernels.histsplit`` (GPU scatter-
-atomics have no TPU analogue — see DESIGN.md §4); set ``hist_backend`` to
-"jax" to use the kernel's jit wrapper.
+atomics have no TPU analogue — see DESIGN.md §4).  ``hist_backend``
+selects: "auto" (dispatcher rules / REPRO_OPS_BACKEND), "numpy", "xla",
+"pallas", or the legacy alias "jax" (= "pallas", the kernel path).
 """
 from __future__ import annotations
 
@@ -25,6 +27,11 @@ import heapq
 import numpy as np
 
 __all__ = ["DecisionTreeRegressor", "quantile_bins", "apply_bins"]
+
+# legacy spelling -> registry backend ("jax" predates the ops registry and
+# always meant the Pallas kernel's jit wrapper); "auto" defers to selection
+_HIST_BACKENDS = {"auto": None, "jax": "pallas",
+                  "numpy": "numpy", "xla": "xla", "pallas": "pallas"}
 
 
 def quantile_bins(X: np.ndarray, max_bins: int = 255) -> list[np.ndarray]:
@@ -44,24 +51,6 @@ def apply_bins(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
     return out
 
 
-def _histograms_numpy(codes: np.ndarray, w: np.ndarray, wy: np.ndarray,
-                      wy2: np.ndarray, n_bins: int) -> np.ndarray:
-    """(F, n_bins, 3) sums of (w, wy, wy2) per feature x bin."""
-    P, F = codes.shape
-    out = np.empty((F, n_bins, 3), np.float64)
-    for f in range(F):
-        c = codes[:, f]
-        out[f, :, 0] = np.bincount(c, weights=w, minlength=n_bins)
-        out[f, :, 1] = np.bincount(c, weights=wy, minlength=n_bins)
-        out[f, :, 2] = np.bincount(c, weights=wy2, minlength=n_bins)
-    return out
-
-
-def _histograms_jax(codes, w, wy, wy2, n_bins):
-    from repro.kernels.histsplit import ops as hist_ops
-    return np.asarray(hist_ops.histograms(codes, w, wy, wy2, n_bins))
-
-
 @dataclasses.dataclass
 class _Node:
     feature: int = -1        # -1: leaf
@@ -77,7 +66,7 @@ class DecisionTreeRegressor:
 
     def __init__(self, max_leaves: int = 31, max_depth: int = 64,
                  min_weight_leaf: float = 1e-9, min_gain: float = 0.0,
-                 max_bins: int = 255, hist_backend: str = "numpy",
+                 max_bins: int = 255, hist_backend: str = "auto",
                  feature_indices: np.ndarray | None = None):
         self.max_leaves = int(max_leaves)
         self.max_depth = int(max_depth)
@@ -104,7 +93,17 @@ class DecisionTreeRegressor:
             codes = codes[:, self.feature_indices]
         n_bins = max(self.max_bins + 1, 2)
         wy, wy2 = w * y, w * y * y
-        hist_fn = _histograms_jax if self.hist_backend == "jax" else _histograms_numpy
+        from repro import ops
+        try:
+            hist_backend = _HIST_BACKENDS[self.hist_backend]
+        except KeyError:
+            raise ValueError(
+                f"unknown hist_backend {self.hist_backend!r}; "
+                f"valid: {sorted(_HIST_BACKENDS)}") from None
+
+        def hist_fn(codes, w_, wy_, wy2_, n_bins_):
+            return np.asarray(ops.hist_split(codes, w_, wy_, wy2_, n_bins_,
+                                             backend=hist_backend))
 
         self.nodes = [_Node()]
         # heap entries: (-gain, counter, node_id, row_idx, depth, split_info)

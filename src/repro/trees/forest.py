@@ -19,7 +19,7 @@ class RandomForestRegressor:
     def __init__(self, n_estimators: int = 20, max_leaves: int = 31,
                  max_depth: int = 64, feature_fraction: float = 1.0,
                  bootstrap: bool = True, max_bins: int = 255,
-                 random_state: int = 0, hist_backend: str = "numpy"):
+                 random_state: int = 0, hist_backend: str = "auto"):
         self.n_estimators = int(n_estimators)
         self.max_leaves = int(max_leaves)
         self.max_depth = int(max_depth)

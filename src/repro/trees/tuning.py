@@ -18,7 +18,32 @@ import numpy as np
 from repro.core.coreset import SignalCoreset, signal_coreset
 from .forest import RandomForestRegressor
 
-__all__ = ["signal_to_points", "uniform_sample", "TuneResult", "tune_k"]
+__all__ = ["signal_to_points", "uniform_sample", "TuneResult", "tune_k",
+           "score_segmentations", "best_segmentation"]
+
+
+def score_segmentations(cs: SignalCoreset, seg_rects_batch, seg_labels_batch,
+                        *, backend: str | None = None) -> np.ndarray:
+    """(T,) Algorithm-5 losses of T candidate k-trees against one coreset.
+
+    The tuning-sweep inner loop as ONE dispatched ``fitting_loss_batched``
+    evaluation (numpy oracle / jitted xla / batched Pallas kernel by the
+    ``repro.ops`` selection rules) instead of T sequential scores.
+    """
+    from repro import ops
+    sr = np.asarray(seg_rects_batch, np.float64)
+    sl = np.asarray(seg_labels_batch, np.float64)
+    return np.asarray(ops.fitting_loss_batched(cs, sr, sl, backend=backend),
+                      np.float64)
+
+
+def best_segmentation(cs: SignalCoreset, seg_rects_batch, seg_labels_batch,
+                      *, backend: str | None = None) -> tuple[int, float]:
+    """(argmin index, loss) over T candidates — coreset model selection."""
+    losses = score_segmentations(cs, seg_rects_batch, seg_labels_batch,
+                                 backend=backend)
+    i = int(np.argmin(losses))
+    return i, float(losses[i])
 
 
 def signal_to_points(values: np.ndarray, mask: np.ndarray | None = None):
@@ -52,11 +77,17 @@ def tune_k(values: np.ndarray, train_mask: np.ndarray, test_mask: np.ndarray,
            target_frac: float | None = None,
            n_estimators: int = 10, methods: tuple[str, ...] = ("full", "coreset", "uniform"),
            rng: np.random.Generator | None = None,
-           forest_factory: Callable | None = None) -> TuneResult:
-    """Sweep max_leaves=k over the given training methods; §5 protocol."""
+           forest_factory: Callable | None = None,
+           hist_backend: str = "auto") -> TuneResult:
+    """Sweep max_leaves=k over the given training methods; §5 protocol.
+
+    ``hist_backend`` selects the split-histogram op backend for the default
+    forest factory ("auto" = dispatcher rules / REPRO_OPS_BACKEND).
+    """
     rng = rng or np.random.default_rng(0)
     forest_factory = forest_factory or (lambda k: RandomForestRegressor(
-        n_estimators=n_estimators, max_leaves=k, random_state=0))
+        n_estimators=n_estimators, max_leaves=k, random_state=0,
+        hist_backend=hist_backend))
 
     X_tr, y_tr = signal_to_points(values, train_mask)
     X_te, y_te = signal_to_points(values, test_mask)

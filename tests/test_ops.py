@@ -1,0 +1,252 @@
+"""repro.ops — registry selection rules, backend parity (including awkward
+shapes through the batched Pallas kernel's pad paths), the env override,
+and the real multi-device mesh path for the dispatched batched loss."""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import ops
+from repro.core import fitting_loss, random_tree_segmentation, signal_coreset
+from repro.data import piecewise_signal
+
+RNG = np.random.default_rng(0)
+
+
+def _coreset(n=57, m=41, k=5, eps=0.3, seed=0):
+    return signal_coreset(piecewise_signal(n, m, k, noise=0.2, seed=seed),
+                          k, eps)
+
+
+def _candidates(n, m, k, t, seed=1):
+    rng = np.random.default_rng(seed)
+    segs = [random_tree_segmentation(n, m, k, rng) for _ in range(t)]
+    return (np.stack([s.rects for s in segs]).astype(np.float64),
+            np.stack([s.labels for s in segs]))
+
+
+# ------------------------------------------------------------------ registry
+def test_every_op_has_all_three_backends():
+    for op in ops.OPS:
+        assert ops.available_backends(op) == ops.BACKENDS
+
+
+def test_env_override_bare_and_per_op(monkeypatch):
+    monkeypatch.setenv(ops.ENV_VAR, "xla")
+    assert all(ops.select_backend(op) == "xla" for op in ops.OPS)
+    monkeypatch.setenv(ops.ENV_VAR, "xla,hist_split=numpy")
+    assert ops.select_backend("fitting_loss") == "xla"
+    assert ops.select_backend("hist_split") == "numpy"
+    monkeypatch.setenv(ops.ENV_VAR, "nonsense")
+    with pytest.raises(ops.BackendError):
+        ops.select_backend("fitting_loss")
+
+
+def test_backend_override_context_beats_env(monkeypatch):
+    monkeypatch.setenv(ops.ENV_VAR, "xla")
+    with ops.backend_override("numpy"):
+        assert ops.select_backend("sat_moments") == "numpy"
+    assert ops.select_backend("sat_moments") == "xla"
+
+
+def test_size_auto_selection_numpy_small_xla_large(monkeypatch):
+    monkeypatch.delenv(ops.ENV_VAR, raising=False)
+    thr = ops.registry.XLA_SIZE_THRESHOLD["fitting_loss_batched"]
+    assert ops.select_backend("fitting_loss_batched", thr - 1) == "numpy"
+    assert ops.select_backend("fitting_loss_batched", thr) == "xla"
+
+
+def test_precision_critical_ops_never_size_promote(monkeypatch):
+    # sat_moments / hist_split feed S2 - S1^2/S0 (catastrophic cancellation
+    # in float32): the f64 numpy oracle must hold at ANY size unless pinned
+    monkeypatch.delenv(ops.ENV_VAR, raising=False)
+    for op in ("sat_moments", "hist_split"):
+        assert ops.select_backend(op, 10**12) == "numpy"
+
+
+def test_unknown_backend_and_op_raise():
+    with pytest.raises(ops.BackendError):
+        ops.resolve("fitting_loss", "cuda")
+    with pytest.raises(ops.BackendError):
+        ops.select_backend("matmul")
+
+
+def test_snapshot_surfaces_selection_state():
+    snap = ops.snapshot()
+    assert set(snap) == set(ops.OPS)
+    for entry in snap.values():
+        assert set(entry["available"]) == set(ops.BACKENDS)
+        assert entry["selected"] in ops.BACKENDS
+
+
+# ------------------------------------------------------ backend parity (ops)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_batched_parity_vs_oracle(backend):
+    cs = _coreset()
+    sr, sl = _candidates(57, 41, 4, 5)
+    want = np.array([fitting_loss(cs, r, l) for r, l in zip(sr, sl)])
+    got = ops.fitting_loss_batched(cs, sr, sl, backend=backend)
+    np.testing.assert_allclose(got, want, rtol=2e-3)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_single_loss_parity_vs_oracle(backend):
+    cs = _coreset(seed=3)
+    rng = np.random.default_rng(2)
+    q = random_tree_segmentation(57, 41, 6, rng)
+    want = fitting_loss(cs, q.rects, q.labels)
+    got = ops.fitting_loss(cs, q.rects, q.labels, backend=backend)
+    assert abs(got - want) / want < 2e-3
+
+
+def test_k_equals_one_all_backends():
+    cs = _coreset(seed=4)
+    sr = np.array([[[0, 57, 0, 41]]], np.float64)     # one leaf covers all
+    sl = np.array([[0.4]])
+    want = ops.fitting_loss_batched(cs, sr, sl, backend="numpy")
+    for b in ("xla", "pallas"):
+        got = ops.fitting_loss_batched(cs, sr, sl, backend=b)
+        np.testing.assert_allclose(got, want, rtol=2e-3)
+
+
+def test_zero_weight_padded_blocks_contribute_nothing():
+    # the fitting_loss_batched pad path: explicit zero-weight blocks must
+    # not change the loss (same invariant the kernel's internal B-padding
+    # relies on)
+    cs = _coreset(seed=5)
+    sr, sl = _candidates(57, 41, 3, 3, seed=6)
+    base = ops.fitting_loss_batched(cs, sr, sl, backend="pallas")
+    import copy
+    padded = copy.copy(cs)
+    extra = 7    # keeps B % tile awkward too
+    padded.rects = np.vstack([cs.rects, np.zeros((extra, 4), np.int64)])
+    padded.labels = np.vstack([cs.labels, RNG.normal(size=(extra, 4))])
+    padded.weights = np.vstack([cs.weights, np.zeros((extra, 4))])
+    got = ops.fitting_loss_batched(padded, sr, sl, backend="pallas")
+    np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def test_sat_moments_parity_awkward_shape():
+    y = piecewise_signal(33, 47, 4, noise=0.3, seed=7)   # non-tile multiple
+    ref = ops.sat_moments(y, backend="numpy")
+    for b in ("xla", "pallas"):
+        got = ops.sat_moments(y, backend=b)
+        np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-3)
+
+
+def test_hist_split_parity_awkward_sizes():
+    P, F, B = 1030, 3, 17                                # P % tile != 0
+    codes = RNG.integers(0, B, size=(P, F)).astype(np.uint8)
+    w = RNG.uniform(0.1, 2, P)
+    y = RNG.normal(size=P)
+    ref = ops.hist_split(codes, w, w * y, w * y * y, B, backend="numpy")
+    for b in ("xla", "pallas"):
+        got = ops.hist_split(codes, w, w * y, w * y * y, B, backend=b)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------- batched kernel tile pad paths
+def test_batched_kernel_awkward_tile_quanta():
+    """B and K not multiples of the tile quantum, T not a multiple of the
+    T-tile: every pad path of the (T-tile, B-tile) grid at once."""
+    import jax.numpy as jnp
+    from repro.kernels.fitting_loss.kernel import fitting_loss_batched_call
+    cs = _coreset(seed=8)
+    B = cs.num_blocks
+    assert B > 13
+    rects = jnp.asarray(cs.rects[:13], jnp.float32)      # B=13, tile_b=8
+    lab = jnp.asarray(cs.labels[:13], jnp.float32)
+    wgt = jnp.asarray(cs.weights[:13], jnp.float32)
+    sr, sl = _candidates(57, 41, 7, 3, seed=9)           # T=3, tile_t=2, K=7
+    got = np.asarray(fitting_loss_batched_call(
+        rects, lab, wgt, jnp.asarray(sr, jnp.float32),
+        jnp.asarray(sl, jnp.float32), tile_b=8, tile_t=2, interpret=True))
+    from repro.kernels.fitting_loss.ref import fitting_loss_ref
+    want = np.array([float(fitting_loss_ref(
+        rects, lab, wgt, jnp.asarray(r, jnp.float32),
+        jnp.asarray(l, jnp.float32))) for r, l in zip(sr, sl)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- deprecated shim
+def test_coreset_loss_many_shim_delegates_and_warns_once():
+    import repro.kernels.fitting_loss.ops as fl_ops
+    cs = _coreset(seed=10)
+    sr, sl = _candidates(57, 41, 4, 3, seed=11)
+    fl_ops._MANY_DEPRECATION_WARNED = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got = np.asarray(fl_ops.coreset_loss_many(cs, list(sr), list(sl)))
+        again = np.asarray(fl_ops.coreset_loss_many(cs, list(sr), list(sl)))
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1                       # warn once
+    want = np.array([fitting_loss(cs, r, l) for r, l in zip(sr, sl)])
+    np.testing.assert_allclose(got, want, rtol=2e-3)
+    np.testing.assert_allclose(again, want, rtol=2e-3)
+
+
+def test_coreset_loss_many_shim_accepts_ragged_leaf_counts():
+    # the pre-dispatch loop accepted candidates with differing K; the shim
+    # must too (per-item scoring instead of the fused stack)
+    import repro.kernels.fitting_loss.ops as fl_ops
+    cs = _coreset(seed=14)
+    rng = np.random.default_rng(15)
+    segs = [random_tree_segmentation(57, 41, k, rng) for k in (3, 6)]
+    got = np.asarray(fl_ops.coreset_loss_many(
+        cs, [s.rects for s in segs], [s.labels for s in segs]))
+    want = np.array([fitting_loss(cs, s.rects, s.labels) for s in segs])
+    np.testing.assert_allclose(got, want, rtol=2e-3)
+
+
+# -------------------------------------------------------- engine integration
+def test_engine_stats_surface_ops_backends():
+    from repro.service import CoresetEngine, ServiceMetrics
+    eng = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    try:
+        eng.register_signal("s", piecewise_signal(48, 32, 4, seed=12))
+        sr, sl = _candidates(48, 32, 3, 2, seed=13)
+        r = eng.tree_loss_batch("s", sr.astype(np.int64), sl, eps=0.3)
+        assert r["backend"] in ("numpy", "xla", "pallas")
+        snap = eng.stats()["ops_backends"]
+        assert set(snap) == set(ops.OPS)
+    finally:
+        eng.close()
+
+
+# ----------------------------------------------------------- real mesh path
+def test_mesh_sharded_batched_loss_matches_oracle():
+    """The ROADMAP's 'exercise the mesh path for real': a forced 8-device
+    host, a 2-device mesh, and the dispatched fitting_loss_batched sharded
+    over it — parity against the numpy oracle.  Runs in a subprocess so
+    XLA_FLAGS takes effect before jax initializes."""
+    script = textwrap.dedent("""
+        import numpy as np, jax
+        assert jax.device_count() >= 2, jax.devices()
+        from repro.launch.mesh import compat_make_mesh
+        from repro.core import (fitting_loss, fitting_loss_batched,
+                                random_tree_segmentation, signal_coreset)
+        from repro.data import piecewise_signal
+        y = piecewise_signal(48, 40, 5, noise=0.2, seed=0)
+        cs = signal_coreset(y, 5, 0.3)
+        rng = np.random.default_rng(0)
+        segs = [random_tree_segmentation(48, 40, 4, rng) for _ in range(3)]
+        sr = np.stack([s.rects for s in segs]).astype(np.float64)
+        sl = np.stack([s.labels for s in segs])
+        mesh = compat_make_mesh((2,), ("data",), jax.devices()[:2])
+        got = fitting_loss_batched(cs, sr, sl, mesh=mesh)
+        want = np.array([fitting_loss(cs, s.rects, s.labels) for s in segs])
+        assert np.allclose(got, want, rtol=2e-3, atol=1e-3), (got, want)
+        print("MESH-PARITY-OK devices=%d" % jax.device_count())
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run([sys.executable, "-c", script], env=env, cwd=repo,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "MESH-PARITY-OK" in proc.stdout

@@ -66,19 +66,26 @@ def test_tree_loss_defaults_k_to_leaf_count_and_is_accurate():
         eng.close()
 
 
-def test_cache_byte_budget_evicts_lru():
-    # budget fits ~one coreset: the second distinct signal evicts the first
-    eng = _engine(cache_bytes=1)  # any insert overflows; keeps newest entry
+def test_cache_byte_budget_evicts_and_rebuilds():
+    # budget fits ~one coreset: the second distinct signal overflows and the
+    # GDSF policy evicts the lower-priority entry; the evicted one rebuilds
+    eng = _engine(cache_bytes=1)  # any insert overflows; keeps one entry
     try:
         eng.register_signal("a", _signal(0))
         eng.register_signal("b", _signal(1))
         eng.get_coreset("a", 4, 0.3)
         eng.get_coreset("b", 4, 0.3)
-        assert len(eng.cache) == 1  # LRU evicted the older entry
+        assert len(eng.cache) == 1  # cost-aware eviction kept one entry
         assert eng.metrics.get("cache_evictions") >= 1
-        # evicted entry rebuilds correctly
-        _, _, how = eng.get_coreset("a", 4, 0.3)
+        builds = eng.metrics.get("coreset_builds")
+        # exactly one of the two is gone; re-requesting it rebuilds
+        missing = [s for s in ("a", "b")
+                   if eng.cache.lookup(s, eng.signal(s).version, 4, 0.3,
+                                       record=False)[0] is None]
+        assert len(missing) == 1
+        _, _, how = eng.get_coreset(missing[0], 4, 0.3)
         assert how == "built"
+        assert eng.metrics.get("coreset_builds") == builds + 1
     finally:
         eng.close()
 
@@ -466,6 +473,60 @@ def test_dominance_cache_evicts_stale_versions_on_ingest():
         assert len(eng.cache) == 0
     finally:
         eng.close()
+
+
+# ------------------------------------------------ cost-aware (GDSF) eviction
+def _gdsf_entry(cs, name, *, build_seconds, nbytes=None):
+    return CacheEntry(signal=name, version="v", k=4, eps=0.3, eps_eff=0.3,
+                      coreset=cs, nbytes=nbytes or cs.nbytes,
+                      fingerprint=cs.fingerprint(),
+                      build_seconds=build_seconds)
+
+
+def test_gdsf_expensive_entry_outlives_cheap_same_size_one():
+    cs = signal_coreset(_signal(12), 4, 0.3)
+    # budget fits exactly two entries of cs.nbytes
+    cache = DominanceCache(byte_budget=2 * cs.nbytes, metrics=ServiceMetrics())
+    cheap = _gdsf_entry(cs, "cheap", build_seconds=1e-4)
+    pricey = _gdsf_entry(cs, "pricey", build_seconds=5.0)
+    cache.put(cheap)
+    cache.put(pricey)
+    # equal recency, equal size, no hits: overflow must pick the cheap one
+    cache.put(_gdsf_entry(cs, "third", build_seconds=1e-4))
+    assert len(cache) == 2
+    got, kind = cache.lookup("pricey", "v", 4, 0.3)
+    assert kind == "exact" and got.build_seconds == 5.0
+    assert cache.lookup("cheap", "v", 4, 0.3) == (None, None)
+
+
+def test_gdsf_hit_rate_expensive_entry_survives_churn():
+    # an expensive-to-rebuild entry keeps hitting across a stream of cheap
+    # same-size inserts that each overflow the budget
+    cs = signal_coreset(_signal(13), 4, 0.3)
+    m = ServiceMetrics()
+    cache = DominanceCache(byte_budget=2 * cs.nbytes, metrics=m)
+    cache.put(_gdsf_entry(cs, "pricey", build_seconds=3.0))
+    hits = 0
+    for i in range(8):
+        cache.put(_gdsf_entry(cs, f"cheap{i}", build_seconds=1e-4))
+        e, kind = cache.lookup("pricey", "v", 4, 0.3)
+        hits += kind == "exact"
+    assert hits == 8                       # 100% hit rate for the hot entry
+    assert m.get("cache_evictions") >= 7   # the cheap stream churned instead
+
+
+def test_gdsf_clock_ages_out_untouched_entries():
+    # recency still matters: once the clock has advanced past an idle
+    # entry's stale priority, a fresher cheap entry outranks it
+    cs = signal_coreset(_signal(14), 4, 0.3)
+    cache = DominanceCache(byte_budget=2 * cs.nbytes, metrics=ServiceMetrics())
+    cache.put(_gdsf_entry(cs, "idle", build_seconds=0.05))
+    # churn enough cheap entries that each eviction raises the clock
+    for i in range(50):
+        cache.put(_gdsf_entry(cs, f"c{i}", build_seconds=0.02))
+        cache.lookup(f"c{i}", "v", 4, 0.3)   # keep the newest one hot
+    assert cache.lookup("idle", "v", 4, 0.3) == (None, None)
+    assert cache.stats()["clock"] > 0.0
 
 
 # ------------------------------------------------- satellite: fingerprint API
