@@ -52,6 +52,59 @@ def _rel(a, b) -> float:
     return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-9)))
 
 
+def _ingest_delta_gate(n: int, m: int, band_rows: int) -> dict:
+    """Delta write path vs legacy full re-ingest on an (n, m) registered
+    signal: the delta ships/patches ``band_rows`` rows (delta_sat + version
+    fold), the legacy path re-registers all n rows and re-SATs from scratch.
+    Also records the loss parity of the delta-built coreset against a
+    from-scratch build of the final signal (ci_smoke gates both numbers)."""
+    import time
+
+    from repro.core import fitting_loss, random_tree_segmentation
+    from repro.service import CoresetEngine, ServiceMetrics
+
+    rng = np.random.default_rng(7)
+    y = piecewise_signal(n, m, 8, noise=0.15, seed=2)
+    band = rng.normal(size=(band_rows, m))
+    y2 = y.copy()
+    y2[n - band_rows:] = band
+    k, eps = 8, 0.3
+
+    eng = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    scratch = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    try:
+        eng.register_signal("sig", y)
+        eng.signal("sig").ensure_stats()   # steady state: SAT materialized
+        t0 = time.perf_counter()
+        eng.ingest_delta("sig", band, row0=n - band_rows)
+        delta_s = time.perf_counter() - t0
+        cs_delta, _, _ = eng.get_coreset("sig", k, eps)
+
+        scratch.register_signal("sig", y2)
+        cs_scratch, _, _ = scratch.get_coreset("sig", k, eps)
+
+        # legacy full re-ingest of the same mutation: all n rows over the
+        # registration path + a from-scratch re-SAT of the new state
+        t0 = time.perf_counter()
+        eng.register_signal("sig", y2, replace=True)
+        eng.signal("sig").ensure_stats()
+        rebuild_s = time.perf_counter() - t0
+
+        q = random_tree_segmentation(n, m, k, rng)
+        ld = fitting_loss(cs_delta, q.rects, q.labels)
+        ls = fitting_loss(cs_scratch, q.rects, q.labels)
+        parity = abs(ld - ls) / max(abs(ls), 1e-12)
+        return {"n": n, "m": m, "band_rows": band_rows,
+                "delta_ms": delta_s * 1e3, "rebuild_ms": rebuild_s * 1e3,
+                "speedup": rebuild_s / max(delta_s, 1e-9),
+                "loss_parity_rel": parity,
+                "delta_fingerprint_matches": bool(
+                    cs_delta.fingerprint() == cs_scratch.fingerprint())}
+    finally:
+        eng.close()
+        scratch.close()
+
+
 def run(fast: bool = False) -> dict:
     rng = np.random.default_rng(0)
     results: dict = {}
@@ -115,6 +168,37 @@ def run(fast: bool = False) -> dict:
         "hist_split",
         lambda b: ops.hist_split(codes, w, w * yv, w * yv * yv, B, backend=b),
         lambda o: o)
+
+    # ---- delta_sat (the ingest patch: one band's worth of rows, not O(N))
+    dn, dm, band_rows = (512, 256, 16) if fast else (2048, 512, 32)
+    yd = rng.normal(size=(dn, dm))
+    carry = ops.sat_moments(yd, backend="numpy")[:, dn - band_rows - 1, :]
+    tail = yd[dn - band_rows:]
+    results["delta_sat"] = sweep(
+        "delta_sat", lambda b: ops.delta_sat(carry, tail, backend=b),
+        lambda o: o)
+
+    # ---- streaming_compress (batched recompress of two composed buckets)
+    from repro.core import compose
+    sn = 96 if fast else 192
+    ys = piecewise_signal(sn, 64, 5, noise=0.15, seed=1)
+    parts = [signal_coreset(ys[a:b], 5, 0.3)
+             for a, b in ((0, sn // 2), (sn // 2, sn))]
+    buckets = [compose(parts, [0, sn // 2], n_total=sn)] * 2
+    results["streaming_compress"] = sweep(
+        "streaming_compress",
+        lambda b: ops.streaming_compress(buckets, backend=b),
+        lambda o: np.concatenate([np.sort(c.moments, axis=None) for c in o]))
+
+    # ---- ingest_delta end-to-end gate numbers (ci_smoke asserts on these):
+    # delta-patching a band into a registered signal vs the legacy full
+    # re-ingest (replace registration + from-scratch re-SAT), plus the loss
+    # parity of the delta-built coreset against a from-scratch build
+    results["ingest_delta"] = _ingest_delta_gate(dn, dm, band_rows)
+    emit("ops/ingest_delta_vs_rebuild",
+         results["ingest_delta"]["delta_ms"] * 1e3,
+         f"rebuild_ms={results['ingest_delta']['rebuild_ms']:.1f} "
+         f"parity={results['ingest_delta']['loss_parity_rel']:.2e}")
 
     # selection state alongside the numbers (what auto would pick here)
     results["selection"] = {op: s["selected"]

@@ -66,7 +66,22 @@ def main() -> None:
     print(f"forest on {f1.train_size} weighted points: first={f1.model_cache}, "
           f"repeat={f2.model_cache}; predictions {np.round(f2.predictions, 2)}")
 
-    # 6. structured errors: typed envelope, not a stack trace
+    # 6. delta ingest: stream a signal in bands, then replace ONE band —
+    # only the changed rows cross the wire, the server patches its SAT and
+    # recompresses just the dirty merge-reduce buckets, and the previously
+    # cached coreset is re-cached under the new version
+    for i in range(0, 128, 32):
+        client.ingest("stream", y[i:i + 32])
+    client.build("stream", k=8, eps=0.3)
+    d = client.ingest_delta("stream", y[:32] * 0.5, row0=32)
+    print(f"delta {d.mode} of rows [{d.row0}, {d.row0 + d.rows}): "
+          f"{d.buckets_recompressed} bucket(s) recompressed, "
+          f"{d.entries_recached} cache entr{'y' if d.entries_recached == 1 else 'ies'} "
+          f"re-cached at version {d.version[:10]}…")
+    b2 = client.build("stream", k=8, eps=0.3)
+    print(f"post-delta build served_from={b2.served_from} (no rebuild)")
+
+    # 7. structured errors: typed envelope, not a stack trace
     try:
         client.query_loss("no-such-signal", seg.rects, seg.labels, eps=0.3)
     except CoresetAPIError as exc:

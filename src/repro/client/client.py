@@ -169,6 +169,22 @@ class CoresetClient:
         # the signal, so transport failures surface to the caller instead
         return self._call("/v1/ingest", msg, P.SignalInfo, retryable=False)
 
+    def ingest_delta(self, name: str, band, *, row0: int | None = None,
+                     ) -> P.IngestDeltaResponse:
+        """Delta write: ship ONLY the changed rows.  ``row0`` pins the
+        absolute row offset of the replaced band (on streamed signals it
+        must start an ingested band); None appends at the current end.  The
+        server patches its integral images and merge-reduce state
+        incrementally instead of re-ingesting the whole signal."""
+        msg = P.IngestDeltaRequest(
+            signal=P.SignalRef(name=name),
+            band=np.ascontiguousarray(band, np.float64),
+            row0=int(row0) if row0 is not None else None)
+        # replacement is idempotent (same row0 + bytes -> same version), so
+        # it may retry; an append retry would double-ingest like ingest()
+        return self._call("/v1/ingest:delta", msg, P.IngestDeltaResponse,
+                          retryable=row0 is not None)
+
     # -------------------------------------------------------------- queries
     def build(self, name: str, k: int, eps: float = 0.2) -> P.BuildResponse:
         msg = P.BuildRequest(signal=P.SignalRef(name=name),

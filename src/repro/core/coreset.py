@@ -161,11 +161,17 @@ def signal_coreset(values: np.ndarray, k: int, eps: float, *,
                    mask: np.ndarray | None = None,
                    tolerance_override: float | None = None,
                    max_slices_override: int | None = None,
-                   _sigma_hint=None) -> SignalCoreset:
+                   _sigma_hint=None,
+                   _stats: PrefixStats | None = None) -> SignalCoreset:
     """SIGNAL-CORESET(D, k, eps); see Theorem 8.
 
     ``mask`` (optional) marks observed cells; unobserved cells carry no mass
     (the §5 missing-value protocol compresses only the available data).
+
+    ``_stats`` (internal) supplies prebuilt integral images of ``values`` —
+    the serving engine maintains them incrementally via the ``delta_sat``
+    op, so repeated (k, eps) builds of a mutating signal skip the O(N)
+    prefix-sum rebuild.
 
     ``sigma_mode``:
       * "auto" (default): sigma = max(certified bi-criteria bound,
@@ -190,7 +196,9 @@ def signal_coreset(values: np.ndarray, k: int, eps: float, *,
             fidelity=fidelity, tolerance_override=tolerance_override,
             max_slices_override=max_slices_override, _sigma_hint=_sigma_hint)
 
-    ps_full = PrefixStats.build(y)
+    if _stats is not None and _stats.shape != y.shape:
+        raise ValueError(f"_stats shape {_stats.shape} != signal {y.shape}")
+    ps_full = PrefixStats.build(y) if _stats is None else _stats
     if _sigma_hint is not None:       # size-bisection path: sigma known
         sigma, certified, bic = _sigma_hint
     else:

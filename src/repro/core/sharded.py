@@ -33,7 +33,7 @@ __all__ = ["sharded_coreset", "sat_pjit", "fitting_loss_batched"]
 
 def sharded_coreset(values: np.ndarray, k: int, eps: float, num_bands: int,
                     *, recompress_result: bool = False, max_workers: int | None = None,
-                    share_tolerance: bool = True, **kw) -> SignalCoreset:
+                    share_tolerance: bool = True, _stats=None, **kw) -> SignalCoreset:
     """Build per-row-band coresets in parallel and compose them.
 
     ``share_tolerance``: derive the per-block opt1 cap from a *global* sigma
@@ -43,6 +43,11 @@ def sharded_coreset(values: np.ndarray, k: int, eps: float, num_bands: int,
     cap keeps |C| at the single-build size; per-band caps (share_tolerance=
     False, the pure merge-reduce setting) are also valid but ~bands-times
     larger.
+
+    ``_stats`` (internal): prebuilt full-signal integral images for the
+    sigma estimate — the serving engine maintains them incrementally via
+    ``delta_sat``, sparing every rebuild of a mutating signal the O(N)
+    from-scratch re-SAT here.
     """
     y = np.asarray(values, np.float64)
     n = y.shape[0]
@@ -50,7 +55,7 @@ def sharded_coreset(values: np.ndarray, k: int, eps: float, num_bands: int,
         from .segmentation import greedy_tree
         from .fitting_loss import true_loss
         from .stats import PrefixStats
-        ps = PrefixStats.build(y)
+        ps = _stats if _stats is not None else PrefixStats.build(y)
         g = greedy_tree(ps, k)
         sigma = max(true_loss(y, g.rects, g.labels, ps=ps) / 4.0, 1e-12)
         kw = dict(kw, tolerance_override=eps * eps * sigma / max(k, 1))

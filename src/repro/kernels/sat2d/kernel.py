@@ -42,10 +42,31 @@ def _row_scan_kernel(x_ref, o_ref, carry_ref):
     carry_ref[...] = cs[:, -1:]
 
 
+def _row_scan_seeded_kernel(x_ref, init_ref, o_ref, carry_ref):
+    # identical to _row_scan_kernel except the running carry starts from a
+    # caller-provided (TR, 1) column instead of zeros — the delta-SAT patch
+    # continues a prefix sum from the integral-image row above the patch
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = init_ref[...]
+
+    cs = jnp.cumsum(x_ref[...], axis=1) + carry_ref[...]
+    o_ref[...] = cs
+    carry_ref[...] = cs[:, -1:]
+
+
 @functools.partial(jax.jit, static_argnames=("tile_r", "tile_c", "interpret"))
 def scan_rows(x: jnp.ndarray, tile_r: int = 256, tile_c: int = 256,
-              interpret: bool | None = None) -> jnp.ndarray:
-    """Row-wise inclusive cumsum of a 2D array via the blocked kernel."""
+              interpret: bool | None = None,
+              init: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Row-wise inclusive cumsum of a 2D array via the blocked kernel.
+
+    ``init`` (optional, shape (n, 1)) seeds the running carry of each row:
+    row i scans as ``init[i] + cumsum(x[i])`` — the continuation used by the
+    ``delta_sat`` patch op, where ``init`` is the last unchanged prefix row.
+    """
     if interpret is None:
         interpret = default_interpret()
     n, m = x.shape
@@ -53,15 +74,28 @@ def scan_rows(x: jnp.ndarray, tile_r: int = 256, tile_c: int = 256,
     pad_r, pad_c = (-n) % tr, (-m) % tc
     xp = jnp.pad(x, ((0, pad_r), (0, pad_c)))
     np_, mp = xp.shape
-    out = pl.pallas_call(
-        _row_scan_kernel,
-        grid=(np_ // tr, mp // tc),
-        in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((np_, mp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((tr, 1), x.dtype)],
-        interpret=interpret,
-    )(xp)
+    if init is None:
+        out = pl.pallas_call(
+            _row_scan_kernel,
+            grid=(np_ // tr, mp // tc),
+            in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((np_, mp), x.dtype),
+            scratch_shapes=[pltpu.VMEM((tr, 1), x.dtype)],
+            interpret=interpret,
+        )(xp)
+    else:
+        ip = jnp.pad(init.astype(x.dtype), ((0, pad_r), (0, 0)))
+        out = pl.pallas_call(
+            _row_scan_seeded_kernel,
+            grid=(np_ // tr, mp // tc),
+            in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+                      pl.BlockSpec((tr, 1), lambda i, j: (i, 0))],
+            out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((np_, mp), x.dtype),
+            scratch_shapes=[pltpu.VMEM((tr, 1), x.dtype)],
+            interpret=interpret,
+        )(xp, ip)
     return out[:n, :m]
 
 

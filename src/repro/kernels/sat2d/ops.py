@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from .kernel import sat2d, scan_rows
 
-__all__ = ["sat", "sat_moments"]
+__all__ = ["sat", "sat_moments", "delta_sat_moments", "sat_stack"]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -31,3 +31,39 @@ def sat_moments(y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
     rt = r.transpose(0, 2, 1).reshape(3 * m, n)
     c = scan_rows(rt, interpret=interpret).reshape(3, m, n).transpose(0, 2, 1)
     return c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_sat_moments(carry: jnp.ndarray, tail: jnp.ndarray,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Patched integral-image rows (see ``ref.delta_sat_ref``): within-row
+    prefix of the (1, y, y^2) stack of the changed rows, then a row-direction
+    scan seeded from ``carry`` — two kernel launches regardless of how many
+    rows changed."""
+    b, m = tail.shape
+    stk = jnp.stack([jnp.ones_like(tail), tail, tail * tail], axis=0)
+    inner = scan_rows(stk.reshape(3 * b, m),
+                      interpret=interpret).reshape(3, b, m)
+    # row-direction scan: fold channels x columns into the scan rows and
+    # seed the carry with the stored integral-image row above the patch
+    rt = inner.transpose(0, 2, 1).reshape(3 * m, b)
+    init = carry.astype(tail.dtype).reshape(3 * m, 1)
+    out = scan_rows(rt, interpret=interpret, init=init).reshape(3, m, b)
+    return out.transpose(0, 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sat_stack(stk: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """Integral images over the last two axes of a batched stack — the
+    Pallas body of the batched ``streaming_compress`` backend: the moment
+    rasters of all dirty merge-reduce buckets fold into one (L*3*n, m) row
+    scan + one (L*3*m, n) column scan."""
+    *lead, n, m = stk.shape
+    flat = 1
+    for d in lead:
+        flat *= int(d)
+    x = stk.reshape(flat * n, m)
+    r = scan_rows(x, interpret=interpret).reshape(flat, n, m)
+    rt = r.transpose(0, 2, 1).reshape(flat * m, n)
+    c = scan_rows(rt, interpret=interpret).reshape(flat, m, n)
+    return c.transpose(0, 2, 1).reshape(*lead, n, m)

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["sat2d_ref", "sat_moments_ref"]
+__all__ = ["sat2d_ref", "sat_moments_ref", "delta_sat_ref", "sat_stack_ref"]
 
 
 def sat2d_ref(x: jnp.ndarray) -> jnp.ndarray:
@@ -12,6 +12,32 @@ def sat2d_ref(x: jnp.ndarray) -> jnp.ndarray:
 
 
 def sat_moments_ref(y: jnp.ndarray) -> jnp.ndarray:
-    """(3, n, m) integral images of (1, y, y^2) — the coreset's prefix stats."""
+    """(3, n, m) integral images of (1, y, y^2) — the coreset's prefix stats.
+
+    Canonical summation order is columns-within-row first, then down the
+    rows: row i of the result is ``row i-1 + rowprefix(stk[i])``, which is
+    exactly the recurrence ``delta_sat`` continues from a stored carry row.
+    """
     stk = jnp.stack([jnp.ones_like(y), y, y * y], axis=0)
-    return jnp.cumsum(jnp.cumsum(stk, axis=1), axis=2)
+    return jnp.cumsum(jnp.cumsum(stk, axis=2), axis=1)
+
+
+def delta_sat_ref(carry: jnp.ndarray, tail: jnp.ndarray) -> jnp.ndarray:
+    """Patched integral-image rows for replaced/appended suffix rows.
+
+    ``carry`` (3, m) is the integral-image row just above the patch (zeros
+    when the patch starts at row 0); ``tail`` (b, m) holds the raw signal
+    rows from the first changed row to the (new) end.  Returns (3, b, m):
+    the rows of ``sat_moments_ref`` that change.
+    """
+    stk = jnp.stack([jnp.ones_like(tail), tail, tail * tail], axis=0)
+    inner = jnp.cumsum(stk, axis=2)
+    return carry[:, None, :] + jnp.cumsum(inner, axis=1)
+
+
+def sat_stack_ref(stk: jnp.ndarray) -> jnp.ndarray:
+    """Integral images over the last two axes of an arbitrarily-batched
+    stack (columns-within-row first — same order as sat_moments_ref).  Used
+    by the batched ``streaming_compress`` backends: one call integrates the
+    moment rasters of every dirty merge-reduce bucket at once."""
+    return jnp.cumsum(jnp.cumsum(stk, axis=-1), axis=-2)

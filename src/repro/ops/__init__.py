@@ -1,19 +1,25 @@
 """repro.ops — one canonical op surface, three backends per op.
 
-The serving/tuning hot paths reduce to four primitives:
+The serving/tuning hot paths reduce to six primitives:
 
   ``sat_moments(y)``                     (3, n, m) integral images of
                                          (1, y, y²) — PrefixStats' build
+  ``delta_sat(carry, tail)``             the integral-image rows that change
+                                         when a row band is replaced or
+                                         appended — the O(band) ingest patch
   ``fitting_loss(cs, rects, labels)``    Algorithm-5 loss of one tree
   ``fitting_loss_batched(cs, R, L)``     (T,) losses, one fused evaluation
   ``hist_split(codes, w, wy, wy2, B)``   CART split histograms
+  ``streaming_compress(coresets)``       merge-reduce recompress of many
+                                         buckets in one dispatch
 
 Each dispatches through the backend registry (numpy oracle / jitted xla /
 Pallas kernel) with capability+size auto-selection and the
 ``REPRO_OPS_BACKEND`` env override — see ``registry.py`` for the rules.
 Core, trees, and the serving engine all route through this module instead
-of importing kernel modules directly, so a future op (delta ingest,
-streaming compress) plugs in here once and is immediately servable.
+of importing kernel modules directly, so both the read path (losses,
+histograms) and the write path (delta ingest, streaming compress) are
+backend-swappable and benchmarkable through one surface.
 """
 from __future__ import annotations
 
@@ -28,7 +34,8 @@ __all__ = [
     "OPS", "BACKENDS", "ENV_VAR", "BackendError",
     "available_backends", "backend_override", "dispatch", "register",
     "resolve", "select_backend", "selected_backend", "snapshot",
-    "sat_moments", "fitting_loss", "fitting_loss_batched", "hist_split",
+    "sat_moments", "delta_sat", "fitting_loss", "fitting_loss_batched",
+    "hist_split", "streaming_compress",
     "fitting_loss_size", "fitting_loss_batched_size",
 ]
 
@@ -39,6 +46,48 @@ def sat_moments(y, *, backend: str | None = None, **kw) -> np.ndarray:
     if y.ndim != 2:
         raise ValueError(f"signal must be 2D, got shape {y.shape}")
     return dispatch("sat_moments", y, backend=backend, size=3 * y.size, **kw)
+
+
+def delta_sat(carry, tail, *, backend: str | None = None, **kw) -> np.ndarray:
+    """(3, b, m) patched integral-image rows for a replaced/appended band.
+
+    ``carry`` (3, m) is the integral-image row just above the first changed
+    row (zeros when patching from row 0); ``tail`` (b, m) holds the raw
+    signal rows from the first changed row to the (new) end of the signal.
+    The numpy oracle continues the canonical ``sat_moments`` recurrence with
+    the exact same sequential float64 additions, so chained delta patches
+    are bitwise equal to a from-scratch rebuild; like ``sat_moments`` it
+    never size-promotes off the f64 oracle (the rows feed S2 - S1^2/S0).
+    """
+    carry = np.asarray(carry)
+    tail = np.asarray(tail)
+    if tail.ndim != 2 or tail.shape[0] < 1:
+        raise ValueError(f"tail must be a non-empty 2D band, got {tail.shape}")
+    if carry.shape != (3, tail.shape[1]):
+        raise ValueError(f"carry must have shape (3, {tail.shape[1]}), "
+                         f"got {carry.shape}")
+    return dispatch("delta_sat", carry, tail, backend=backend,
+                    size=3 * tail.size, **kw)
+
+
+def streaming_compress(coresets, k: int | None = None,
+                       eps: float | None = None, *,
+                       backend: str | None = None, **kw) -> list:
+    """Merge-reduce "reduce": recompress a list of composed coresets.
+
+    One dispatch recompresses every bucket in ``coresets`` (the dirty
+    buckets of a merge-reduce level); the accelerator backends integrate all
+    per-bucket moment rasters in a single batched call.  ``k``/``eps``
+    default to each coreset's own parameters.  Precision-critical like
+    ``sat_moments``: the rebuilt prefix stats feed the variance identity, so
+    the f64 numpy oracle is never size-promoted away.
+    """
+    coresets = list(coresets)
+    if not coresets:
+        return []
+    size = 3 * sum(int(cs.n) * int(cs.m) for cs in coresets)
+    return dispatch("streaming_compress", coresets, k, eps, backend=backend,
+                    size=size, **kw)
 
 
 def fitting_loss_size(cs, seg_rects) -> int:

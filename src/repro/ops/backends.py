@@ -27,9 +27,13 @@ from .registry import register
 @register("sat_moments", "numpy")
 def _sat_moments_numpy():
     def sat_moments(y):
+        # canonical order: columns-within-row first, then down the rows, so
+        # row i of the result is exactly row i-1 + rowprefix(stk[i]) — the
+        # recurrence the delta_sat patch op continues bitwise from a stored
+        # carry row (np.cumsum is a sequential per-element reduction)
         y = np.asarray(y, np.float64)
         stk = np.stack([np.ones_like(y), y, y * y], axis=0)
-        return np.cumsum(np.cumsum(stk, axis=1), axis=2)
+        return np.cumsum(np.cumsum(stk, axis=2), axis=1)
     return sat_moments
 
 
@@ -54,6 +58,53 @@ def _sat_moments_pallas():
         return np.asarray(kernel_sat_moments(jnp.asarray(y, jnp.float32),
                                              interpret=interpret))
     return sat_moments
+
+
+# --------------------------------------------------------------- delta_sat
+# patched integral-image rows for a replaced/appended row band: carry (3, m)
+# is the integral row just above the patch, tail (b, m) the raw rows from
+# the first changed row to the (new) end.  Output (3, b, m).
+
+
+@register("delta_sat", "numpy")
+def _delta_sat_numpy():
+    def delta_sat(carry, tail):
+        t = np.asarray(tail, np.float64)
+        stk = np.stack([np.ones_like(t), t, t * t], axis=0)
+        inner = np.cumsum(stk, axis=2)
+        # prepend the carry row and let the sequential cumsum continue it:
+        # row i is computed as row i-1 + inner[i], the *same* float ops a
+        # from-scratch sat_moments build performs for these rows, so chained
+        # delta patches stay bitwise equal to a full rebuild
+        full = np.concatenate(
+            [np.asarray(carry, np.float64)[:, None, :], inner], axis=1)
+        return np.cumsum(full, axis=1)[:, 1:, :]
+    return delta_sat
+
+
+@register("delta_sat", "xla")
+def _delta_sat_xla():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.sat2d.ref import delta_sat_ref
+    f = jax.jit(delta_sat_ref)
+
+    def delta_sat(carry, tail):
+        return np.asarray(f(jnp.asarray(carry, jnp.float32),
+                            jnp.asarray(tail, jnp.float32)))
+    return delta_sat
+
+
+@register("delta_sat", "pallas")
+def _delta_sat_pallas():
+    import jax.numpy as jnp
+    from repro.kernels.sat2d.ops import delta_sat_moments
+
+    def delta_sat(carry, tail, interpret=None):
+        return np.asarray(delta_sat_moments(jnp.asarray(carry, jnp.float32),
+                                            jnp.asarray(tail, jnp.float32),
+                                            interpret=interpret))
+    return delta_sat
 
 
 # ------------------------------------------------------------ fitting_loss
@@ -188,3 +239,78 @@ def _hist_split_pallas():
     def hist(codes, w, wy, wy2, n_bins):
         return np.asarray(histograms(codes, w, wy, wy2, n_bins), np.float64)
     return hist
+
+
+# ------------------------------------------------------- streaming_compress
+# the merge-reduce "reduce" step as one dispatch: recompress a LIST of
+# composed coresets (the dirty buckets of a level) into coresets-of-
+# coresets.  The backend-differentiated stage is the integral images of the
+# per-bucket moment rasters; rasterization and the partition/Caratheodory
+# finish are shared host code in core.streaming.
+
+
+def _stack_rasters(preps):
+    """Pad the per-bucket (3, n, m) moment rasters to one (L, 3, nmax, mmax)
+    stack so the accelerator backends integrate every bucket in one call."""
+    nmax = max(p.rasters[0].shape[0] for p in preps)
+    mmax = max(p.rasters[0].shape[1] for p in preps)
+    stk = np.zeros((len(preps), 3, nmax, mmax), np.float32)
+    for i, p in enumerate(preps):
+        n, m = p.rasters[0].shape
+        for c in range(3):
+            stk[i, c, :n, :m] = p.rasters[c]
+    return stk
+
+
+def _finish_from_sats(coresets, preps, sats, k, eps):
+    from repro.core.stats import PrefixStats
+    from repro.core.streaming import _recompress_finish
+    out = []
+    for cs, p, sat in zip(coresets, preps, sats):
+        n, m = p.rasters[0].shape
+        ps = PrefixStats.from_sat(np.asarray(sat[:, :n, :m], np.float64))
+        out.append(_recompress_finish(cs, p, ps, k, eps))
+    return out
+
+
+@register("streaming_compress", "numpy")
+def _streaming_compress_numpy():
+    def sc(coresets, k=None, eps=None):
+        from repro.core.stats import PrefixStats
+        from repro.core.streaming import _recompress_finish, _recompress_prep
+        out = []
+        for cs in coresets:
+            p = _recompress_prep(cs)
+            ps = PrefixStats.build_moments(*p.rasters)
+            out.append(_recompress_finish(cs, p, ps, k, eps))
+        return out
+    return sc
+
+
+@register("streaming_compress", "xla")
+def _streaming_compress_xla():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.sat2d.ref import sat_stack_ref
+    f = jax.jit(sat_stack_ref)
+
+    def sc(coresets, k=None, eps=None):
+        from repro.core.streaming import _recompress_prep
+        preps = [_recompress_prep(cs) for cs in coresets]
+        sats = np.asarray(f(jnp.asarray(_stack_rasters(preps))))
+        return _finish_from_sats(coresets, preps, sats, k, eps)
+    return sc
+
+
+@register("streaming_compress", "pallas")
+def _streaming_compress_pallas():
+    import jax.numpy as jnp
+    from repro.kernels.sat2d.ops import sat_stack
+
+    def sc(coresets, k=None, eps=None, interpret=None):
+        from repro.core.streaming import _recompress_prep
+        preps = [_recompress_prep(cs) for cs in coresets]
+        sats = np.asarray(sat_stack(jnp.asarray(_stack_rasters(preps)),
+                                    interpret=interpret))
+        return _finish_from_sats(coresets, preps, sats, k, eps)
+    return sc

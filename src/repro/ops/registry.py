@@ -45,22 +45,26 @@ __all__ = [
     "backend_override", "snapshot",
 ]
 
-OPS = ("sat_moments", "fitting_loss", "fitting_loss_batched", "hist_split")
+OPS = ("sat_moments", "delta_sat", "fitting_loss", "fitting_loss_batched",
+       "hist_split", "streaming_compress")
 BACKENDS = ("numpy", "xla", "pallas")
 ENV_VAR = "REPRO_OPS_BACKEND"
 
 # auto-selection crossover (problem "size" is op-specific, computed by the
 # public wrappers in __init__): below -> numpy oracle, above -> jitted xla.
-# None = NEVER size-promote: sat_moments and hist_split feed the variance
-# identity S2 - S1^2/S0, which is catastrophically cancellation-sensitive —
-# their float32 xla/pallas backends are only used when explicitly pinned
-# (env/override) or on TPU, where f32 is the documented trade-off.  The two
-# loss ops sum non-negative terms, so f32 promotion is safe.
+# None = NEVER size-promote: sat_moments, delta_sat, hist_split and
+# streaming_compress feed the variance identity S2 - S1^2/S0, which is
+# catastrophically cancellation-sensitive — their float32 xla/pallas
+# backends are only used when explicitly pinned (env/override) or on TPU,
+# where f32 is the documented trade-off.  The two loss ops sum non-negative
+# terms, so f32 promotion is safe.
 XLA_SIZE_THRESHOLD = {
     "sat_moments": None,               # precision-critical (f64 oracle)
+    "delta_sat": None,                 # patches the same integral images
     "fitting_loss": 1 << 16,           # blocks * leaves
     "fitting_loss_batched": 1 << 16,   # trees * blocks * leaves
     "hist_split": None,                # precision-critical (f64 oracle)
+    "streaming_compress": None,        # rebuilds prefix stats (opt1 feed)
 }
 
 
@@ -104,6 +108,13 @@ def _env_choice(op: str) -> str | None:
             continue
         if "=" in part:
             o, b = (s.strip() for s in part.split("=", 1))
+            if o not in OPS:
+                # a typo'd op name must not silently pin nothing — the
+                # operator asked for a precision/backend pin and would get
+                # the auto-selection rules instead
+                raise BackendError(
+                    f"{ENV_VAR}={spec!r} names unknown op {o!r}; "
+                    f"ops are {OPS}")
             if o == op:
                 specific = b
         elif default is None:

@@ -8,9 +8,10 @@ without an async stack (and without any non-baked-in dependency).
 v1 routes (bodies are ``service.protocol`` messages, negotiated between
 JSON and the binary npz frame via ``Content-Type`` / ``Accept``):
 
-  POST /v1/signals            RegisterRequest   -> SignalInfo
-  POST /v1/ingest             IngestRequest     -> SignalInfo
-  POST /v1/build              BuildRequest      -> BuildResponse
+  POST /v1/signals            RegisterRequest    -> SignalInfo
+  POST /v1/ingest             IngestRequest      -> SignalInfo
+  POST /v1/ingest:delta       IngestDeltaRequest -> IngestDeltaResponse
+  POST /v1/build              BuildRequest       -> BuildResponse
   POST /v1/query/loss         LossQuery         -> LossResponse
   POST /v1/query/loss:batch   BatchLossQuery    -> BatchLossResponse
   POST /v1/query/fit          FitRequest        -> FitResponse
@@ -113,6 +114,14 @@ def _h_ingest(eng: CoresetEngine, msg: P.IngestRequest) -> P.SignalInfo:
     return _signal_info(eng.ingest_band(msg.signal.name, band))
 
 
+def _h_ingest_delta(eng: CoresetEngine, msg: P.IngestDeltaRequest,
+                    ) -> P.IngestDeltaResponse:
+    band = _values_from(msg.band, None, "band")
+    row0 = int(msg.row0) if msg.row0 is not None else None
+    r = eng.ingest_delta(msg.signal.name, band, row0=row0)
+    return P.IngestDeltaResponse(**r)
+
+
 def _signal_info(info: dict) -> P.SignalInfo:
     return P.SignalInfo(
         name=info["name"], n=int(info["n"]),
@@ -192,6 +201,7 @@ def _h_compress(eng: CoresetEngine, msg: P.CompressRequest,
 _V1_POST = {
     "/v1/signals": (P.RegisterRequest, _h_register),
     "/v1/ingest": (P.IngestRequest, _h_ingest),
+    "/v1/ingest:delta": (P.IngestDeltaRequest, _h_ingest_delta),
     "/v1/build": (P.BuildRequest, _h_build),
     "/v1/query/loss": (P.LossQuery, _h_loss),
     "/v1/query/loss:batch": (P.BatchLossQuery, _h_loss_batch),
@@ -200,9 +210,11 @@ _V1_POST = {
 }
 _V1_GET = frozenset({"/v1/healthz", "/v1/stats", "/v1/metrics"})
 
-# deprecated unversioned path -> v1 successor
+# deprecated unversioned path -> v1 successor (the ":"-suffixed fused/delta
+# routes are v1-only: no pre-v1 client ever spoke them)
+_V1_ONLY = frozenset({"/v1/query/loss:batch", "/v1/ingest:delta"})
 _LEGACY = {p[len("/v1"):]: p for p in (*_V1_POST, *_V1_GET)
-           if p != "/v1/query/loss:batch"}   # batch is v1-only
+           if p not in _V1_ONLY}
 
 _ROUTES = frozenset((*_V1_POST, *_V1_GET, *_LEGACY))
 

@@ -169,6 +169,14 @@ class DominanceCache:
                 self._drop(victim.key)
                 self.metrics.inc("cache_evictions")
 
+    def specs_for(self, signal: str, version: str) -> list[tuple[int, float]]:
+        """(k, eps) of every live entry for one signal version — the delta
+        ingest path re-caches exactly these under the successor version."""
+        with self._lock:
+            keys = self._by_signal.get(signal, {}).get(version, ())
+            return sorted({(self._entries[k].k, self._entries[k].eps)
+                           for k in keys})
+
     def invalidate_signal(self, signal: str, keep_version: str | None = None) -> int:
         """Drop entries of stale versions (the version key already prevents
         wrong serving; this just frees the bytes eagerly)."""

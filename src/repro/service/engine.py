@@ -58,16 +58,27 @@ class _BuilderSlot:
 
 
 class SignalState:
-    """One named signal: dense matrix and/or append-only band stream.
+    """One named signal: dense matrix and/or band stream.
 
     ``version`` is a running content hash (chained per band), so the cache
     key is well-defined: the same bytes ingested in the same order always
-    map to the same version, and any mutation bumps it.
+    map to the same version, and any mutation bumps it; a band replacement
+    recomputes the same fold over the new band sequence.
 
     Ingest only appends to ``bands`` (O(1) under the lock); the per-(k, eps)
     merge-reduce builders catch up lazily on the build path, outside this
     lock, so /healthz, /stats and concurrent ingests never stall behind a
     coreset build.
+
+    ``stats`` holds the signal's three integral images — dense signals
+    only: materialized once at the first delta write (pinning ~3x the
+    signal's bytes is only worth it for signals that mutate), patched
+    *incrementally* through the ``repro.ops.delta_sat`` op on every later
+    write — O(changed rows) instead of the O(N) from-scratch re-SAT, and
+    bitwise identical to one on the f64 oracle — and reused by dense
+    builds via :meth:`stats_snapshot`.  Streamed signals build through
+    per-band merge-reduce and never read them, so going streamed drops
+    them.
     """
 
     MAX_BUILDERS = 8   # LRU cap: (k, eps) come from client requests, so an
@@ -84,6 +95,7 @@ class SignalState:
         self.builders: "collections.OrderedDict[tuple[int, float], _BuilderSlot]" = \
             collections.OrderedDict()
         self.streamed = False
+        self.stats = None   # lazily-materialized PrefixStats (delta-patched)
 
     def append(self, band: np.ndarray, *, streamed: bool) -> None:
         band = np.ascontiguousarray(band, np.float64)
@@ -94,6 +106,7 @@ class SignalState:
                 self.m = band.shape[1]
             elif band.shape[1] != self.m:
                 raise ValueError(f"band has {band.shape[1]} columns, signal has {self.m}")
+            old_n = self.n
             self.bands.append(band)
             self.n += band.shape[0]
             self.streamed = self.streamed or streamed or len(self.bands) > 1
@@ -101,12 +114,130 @@ class SignalState:
             h.update(self.version.encode())
             h.update(band.tobytes())
             self.version = h.hexdigest()
+            if self.streamed:
+                # only dense builds consume the images; streamed signals
+                # build through per-band merge-reduce, so maintaining (and
+                # pinning) full-signal stats would be pure waste
+                self.stats = None
+            elif self.stats is not None:
+                # O(band) continuation of the integral images (delta_sat)
+                self.stats = self.stats.patch_rows(old_n, band)
+
+    def band_starts(self) -> list[int]:
+        starts, r = [], 0
+        for b in self.bands:
+            starts.append(r)
+            r += b.shape[0]
+        return starts
+
+    def replace_rows(self, row0: int, band: np.ndarray) -> int | None:
+        """Replace rows [row0, row0 + rows) with ``band`` (the delta-ingest
+        write path).  Streamed signals require the replacement to align with
+        an ingested band (whole-band swap — the merge-reduce leaves map 1:1
+        to ingested bands); single-band dense signals accept any in-range
+        row window.  Returns the replaced band's index (None for the dense
+        in-place case).  Raises ValueError on any misalignment — the HTTP
+        layer turns that into the uniform 400 envelope.
+        """
+        band = np.ascontiguousarray(band, np.float64)
+        if band.ndim != 2 or band.size == 0:
+            raise ValueError("band must be a non-empty 2D array")
+        rows = band.shape[0]
+        with self.lock:
+            if self.m is None:
+                raise ValueError(f"signal {self.name!r} holds no data yet")
+            if band.shape[1] != self.m:
+                raise ValueError(f"band has {band.shape[1]} columns, "
+                                 f"signal has {self.m}")
+            if not (0 <= row0 and row0 + rows <= self.n):
+                raise ValueError(f"rows [{row0}, {row0 + rows}) outside "
+                                 f"signal of {self.n} rows")
+            if self.streamed:
+                starts = self.band_starts()
+                try:
+                    idx = starts.index(row0)
+                except ValueError:
+                    raise ValueError(
+                        f"row offset {row0} does not start an ingested band "
+                        f"(starts: {starts})") from None
+                if self.bands[idx].shape[0] != rows:
+                    raise ValueError(
+                        f"band {idx} holds {self.bands[idx].shape[0]} rows, "
+                        f"replacement has {rows}")
+                self.bands[idx] = band
+                band_index = idx
+                self.stats = None   # streamed: nothing reads the images
+            else:
+                # single dense band: patch the row window on a FRESH array,
+                # never in place — a concurrent build snapshots the previous
+                # array under this lock and keeps reading it outside, so an
+                # in-place write would tear its data (same reason the stats
+                # patch below uses copy=True).  The copy + suffix re-SAT +
+                # version refold are the documented dense-replace trade-off
+                # (O(N) bandwidth, no O(N) recompute; streamed replaces
+                # stay O(band)).
+                base = np.array(self.bands[0], np.float64, copy=True)
+                base[row0:row0 + rows] = band
+                self.bands[0] = base
+                band_index = None
+            if band_index is None and self.stats is not None:
+                # dense only — rows below the patch shift their prefixes
+                # too: re-run the delta op over the suffix (copy=True: a
+                # concurrent build may still be reading the previous images)
+                tail = self.bands[0][row0:]
+                self.stats = self.stats.patch_rows(row0, tail, copy=True)
+            # version is the same fold appends maintain, over the new bands
+            h = hashlib.blake2b(self.name.encode(), digest_size=12)
+            version = h.hexdigest()
+            for b in self.bands:
+                h2 = hashlib.blake2b(digest_size=12)
+                h2.update(version.encode())
+                h2.update(b.tobytes())
+                version = h2.hexdigest()
+            self.version = version
+        return band_index
+
+    def dense_locked(self) -> np.ndarray:
+        if len(self.bands) == 1:
+            return self.bands[0]
+        return np.concatenate(self.bands, axis=0)
 
     def dense(self) -> np.ndarray:
         with self.lock:
-            if len(self.bands) == 1:
-                return self.bands[0]
-            return np.concatenate(self.bands, axis=0)
+            return self.dense_locked()
+
+    def stats_snapshot(self, version: str | None = None):
+        """The materialized integral images, or None — never materializes.
+        Dense builds reuse the images only for signals whose first delta
+        write already paid for them: pinning ~3x the signal's bytes on
+        every dense signal just in case would not amortize."""
+        with self.lock:
+            if self.stats is None or self.stats.shape != (self.n, self.m):
+                return None
+            if version is not None and self.version != version:
+                return None
+            return self.stats
+
+    def ensure_stats(self, version: str | None = None):
+        """Materialize the integral images by chaining ``delta_sat`` over
+        the stored bands (bitwise equal to a from-scratch build on the f64
+        oracle).  Returns None when ``version`` no longer matches — the
+        caller's snapshot went stale and must not mix arrays and stats."""
+        with self.lock:
+            if version is not None and self.version != version:
+                return None
+            if self.stats is not None and self.stats.shape == (self.n, self.m):
+                return self.stats
+            bands = list(self.bands)
+            v = self.version
+        from repro.core.stats import PrefixStats
+        ps = None
+        for band in bands:   # outside the lock: O(N) chain, O(band) steps
+            ps = PrefixStats.build(band) if ps is None else ps.append_rows(band)
+        with self.lock:
+            if self.version == v:
+                self.stats = ps
+        return ps if version in (None, v) else None
 
     def info(self) -> dict:
         with self.lock:
@@ -181,6 +312,132 @@ class CoresetEngine:
         self.metrics.inc("bands_ingested")
         return st.info()
 
+    def ingest_delta(self, name: str, band, *, row0: int | None = None) -> dict:
+        """Delta write path: patch an existing signal with only the changed
+        rows (``POST /v1/ingest:delta``).
+
+        * ``row0 is None`` (or == current n): append — the stream's normal
+          growth, O(band) state update.
+        * otherwise: replace rows [row0, row0+rows).  The signal's integral
+          images are patched through the dispatched ``delta_sat`` op, live
+          merge-reduce builders swap just the affected leaf and mark its
+          bucket dirty (``streaming_compress`` recompresses only those), and
+          every cache entry the old version held is re-cached under the new
+          version — synchronously for streamed specs (a cheap dirty-bucket
+          flush), through the BuildScheduler for dense specs (a partition
+          re-run does not belong on the write path) — instead of the legacy
+          full re-ingest that re-SATs and re-compresses from scratch.
+
+        Unknown signals 404 (a delta against nothing is a client bug, not an
+        implicit create); malformed bands raise ValueError -> 400 envelope.
+        """
+        import contextlib
+
+        band = np.ascontiguousarray(band, np.float64)
+        if band.ndim != 2 or band.size == 0:
+            raise ValueError("delta band must be a non-empty 2D array")
+        st = self.signal(name)
+        buckets0 = self._buckets_recompressed(st)
+        recached = 0
+        if row0 is not None and not st.streamed:
+            # first dense delta pays the one-off SAT materialization here
+            # (outside the heavy lock section); every later replace patches
+            # it in O(changed rows) and every later build skips its re-SAT
+            st.ensure_stats()
+        with self.metrics.timed("ingest_delta"):
+            # hold EVERY live builder lock across the mutation + leaf swap
+            # (slot.lock before st.lock, the documented order): a concurrent
+            # _build_streamed must not snapshot the bumped version while a
+            # builder still carries the old leaf — it would cache stale
+            # content under the new version.  Slots created concurrently are
+            # safe either way: they replay the bands they read under st.lock.
+            with st.lock:
+                slots = list(st.builders.values())
+            with contextlib.ExitStack() as stack:
+                for slot in slots:
+                    stack.enter_context(slot.lock)
+                with st.lock:
+                    # mode decision and placement are atomic with the write:
+                    # an explicit row0 == n is an append only if n still is n
+                    if row0 is None or int(row0) == st.n:
+                        mode = "append"
+                        applied_row0 = st.n
+                        band_index = None
+                        prev_specs = []
+                        st.append(band, streamed=True)
+                        # per-(k, eps) builders consume the new band lazily
+                        # at the next build, exactly like /v1/ingest
+                    else:
+                        mode = "replace"
+                        applied_row0 = int(row0)
+                        prev_specs = self.cache.specs_for(name, st.version)
+                        band_index = st.replace_rows(applied_row0, band)
+                if band_index is not None:
+                    # swap the one leaf in every builder that already
+                    # consumed it: each such builder keeps its merge-reduce
+                    # state instead of a from-scratch replay
+                    for slot in slots:
+                        if slot.consumed > band_index:
+                            slot.builder.replace_band(band_index, band)
+                            self.metrics.inc("ingest_delta_rebuilds_avoided")
+                elif mode == "replace" and st.stats is not None:
+                    # dense signal: the patched integral images spare the
+                    # next build its O(N) re-SAT
+                    self.metrics.inc("ingest_delta_rebuilds_avoided")
+            if band_index is not None:
+                # close the slot-creation window: a slot born between the
+                # snapshot above and the version bump may have consumed the
+                # OLD band content (the consumed counter cannot see content
+                # replacement).  One re-list suffices — slots created after
+                # the bump replay the new bands.  Swapping a leaf that
+                # already holds the new content is idempotent.
+                seen = set(map(id, slots))
+                with st.lock:
+                    newcomers = [s for s in st.builders.values()
+                                 if id(s) not in seen]
+                for slot in newcomers:
+                    with slot.lock:
+                        if slot.consumed > band_index:
+                            slot.builder.replace_band(band_index, band)
+            self.cache.invalidate_signal(name, keep_version=st.version)
+            # re-cache what the old version served, under the new version:
+            # streamed specs rebuild synchronously (a cheap dirty-bucket
+            # recompress + compose); dense specs re-run the partition, so
+            # they go through the BuildScheduler off the write path (and
+            # coalesce with any concurrent query for the same coreset)
+            version = st.version
+            for k, eps in prev_specs:
+                with st.lock:
+                    live = (k, _eps_key(eps)) in st.builders
+                if live:
+                    self._build_and_cache(st, version, k, eps)
+                else:
+                    self.scheduler.submit(
+                        (name, version, k, _eps_key(eps)),
+                        lambda k=k, eps=eps: self._build_and_cache(
+                            st, version, k, eps))
+                recached += 1
+        buckets = self._buckets_recompressed(st) - buckets0
+        self.metrics.inc("ingest_delta_bands")
+        self.metrics.inc(f"ingest_delta_{mode}s")
+        if buckets:
+            self.metrics.inc("ingest_delta_buckets_recompressed", buckets)
+        if recached:
+            self.metrics.inc("ingest_delta_recached", recached)
+        info = st.info()
+        return {"name": info["name"], "n": info["n"], "m": info["m"],
+                "bands": info["bands"], "streamed": info["streamed"],
+                "version": info["version"], "mode": mode,
+                "row0": applied_row0, "rows": int(band.shape[0]),
+                "buckets_recompressed": int(buckets),
+                "entries_recached": int(recached)}
+
+    @staticmethod
+    def _buckets_recompressed(st: SignalState) -> int:
+        with st.lock:
+            return sum(s.builder.buckets_recompressed_total
+                       for s in st.builders.values())
+
     def signal(self, name: str) -> SignalState:
         with self._lock:
             st = self._signals.get(name)
@@ -249,13 +506,17 @@ class CoresetEngine:
     def _build_dense(self, st: SignalState, k: int, eps: float,
                      ) -> tuple[SignalCoreset, float, str]:
         with st.lock:
-            y = st.dense()
+            y = st.dense_locked()
             version = st.version
         bands = min(self.num_bands, max(1, y.shape[0] // 32))
+        # reuse the delta-patched integral images when a delta write already
+        # materialized them (None otherwise, or if the snapshot went stale
+        # mid-ingest — then the build derives its own transient stats)
+        ps = st.stats_snapshot(version)
         if bands > 1:
-            cs = sharded_coreset(y, k, eps, num_bands=bands)
+            cs = sharded_coreset(y, k, eps, num_bands=bands, _stats=ps)
         else:
-            cs = signal_coreset(y, k, eps)
+            cs = signal_coreset(y, k, eps, _stats=ps)
         return cs, eps, version  # composition of disjoint bands is exact
 
     @staticmethod

@@ -43,10 +43,11 @@ except ModuleNotFoundError:  # bare containers: stdlib zlib fallback
 __all__ = [
     "PROTOCOL_VERSION", "CONTENT_TYPE_JSON", "CONTENT_TYPE_BINARY",
     "CoresetSpec", "SignalRef", "RegisterRequest", "IngestRequest",
-    "BuildRequest", "LossQuery", "BatchLossQuery", "FitRequest",
-    "CompressRequest", "SignalInfo", "BuildResponse", "LossResponse",
-    "BatchLossResponse", "FitResponse", "CompressResponse", "ErrorInfo",
-    "ErrorResponse", "ProtocolError", "UnsupportedCodec", "decode", "encode",
+    "IngestDeltaRequest", "BuildRequest", "LossQuery", "BatchLossQuery",
+    "FitRequest", "CompressRequest", "SignalInfo", "IngestDeltaResponse",
+    "BuildResponse", "LossResponse", "BatchLossResponse", "FitResponse",
+    "CompressResponse", "ErrorInfo", "ErrorResponse", "ProtocolError",
+    "UnsupportedCodec", "decode", "encode",
 ]
 
 PROTOCOL_VERSION = "v1"
@@ -358,6 +359,18 @@ class IngestRequest(_Wire):
     _COERCE = {"band": _arr(np.float64, ndim=2, allow_none=True)}
 
 
+@_message("ingest_delta")
+class IngestDeltaRequest(_Wire):
+    """Delta write: only the changed rows cross the wire.  ``row0`` is the
+    absolute row offset of the replaced band (must align with an ingested
+    band on streamed signals); None appends at the current end."""
+    signal: SignalRef
+    band: np.ndarray                     # (rows, m) changed rows only
+    row0: int | None = None
+    _NESTED = {"signal": SignalRef}
+    _COERCE = {"band": _arr(np.float64, ndim=2)}
+
+
 @_message("build")
 class BuildRequest(_Wire):
     signal: SignalRef
@@ -424,6 +437,23 @@ class SignalInfo(_Wire):
     streamed: bool
     version: str
     builders: list = dataclasses.field(default_factory=list)
+
+
+@_message("ingest_delta_response")
+class IngestDeltaResponse(_Wire):
+    """Acknowledgement of a delta write, with the incremental-path telemetry
+    (how much merge-reduce state was reused instead of rebuilt)."""
+    name: str
+    n: int
+    m: int
+    bands: int
+    streamed: bool
+    version: str
+    mode: str                 # append | replace
+    row0: int
+    rows: int
+    buckets_recompressed: int
+    entries_recached: int
 
 
 @_message("build_response")

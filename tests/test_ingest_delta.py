@@ -1,0 +1,338 @@
+"""Incremental ingest: delta-patched state must be indistinguishable from a
+from-scratch rebuild — bitwise for the f64 integral images, loss-identical
+for the merge-reduce coresets, and end-to-end through /v1/ingest:delta."""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.client import CoresetAPIError, CoresetClient
+from repro.core import (PrefixStats, StreamingBuilder, fitting_loss,
+                        random_tree_segmentation)
+from repro.data import piecewise_signal
+from repro.service import (CoresetEngine, ServiceMetrics, make_server,
+                           serve_forever_in_thread)
+
+
+def _bitwise_equal(a: PrefixStats, b: PrefixStats) -> bool:
+    return (np.array_equal(a.p0, b.p0) and np.array_equal(a.p1, b.p1)
+            and np.array_equal(a.p2, b.p2))
+
+
+# ---------------------------------------------------- prefix-stats patching
+def test_random_append_replace_sequence_bitwise_equals_rebuild():
+    """Property-style: any interleaving of band appends and in-range row
+    replacements through the delta path produces integral images bitwise
+    equal to PrefixStats.build of the final dense signal."""
+    rng = np.random.default_rng(0)
+    m = 37                                       # off the 128-lane quantum
+    for trial in range(8):
+        first = rng.integers(1, 9)
+        y = rng.normal(size=(first, m))
+        ps = PrefixStats.build(y)
+        for _ in range(rng.integers(3, 9)):
+            if y.shape[0] >= 2 and rng.random() < 0.5:
+                r0 = int(rng.integers(0, y.shape[0]))
+                rows = int(rng.integers(1, y.shape[0] - r0 + 1))
+                y[r0:r0 + rows] = rng.normal(size=(rows, m))
+                ps = ps.patch_rows(r0, y[r0:])
+            else:
+                band = rng.normal(size=(int(rng.integers(1, 7)), m))
+                y = np.vstack([y, band])
+                ps = ps.append_rows(band)
+        assert _bitwise_equal(ps, PrefixStats.build(y)), f"trial {trial}"
+
+
+@pytest.mark.parametrize("r0,rows", [(0, 3), (9, 1), (11, 1), (0, 12), (4, 8)])
+def test_patch_rows_awkward_placements_bitwise(r0, rows):
+    """1-row bands, a band at row 0, a band ending at the last row, and the
+    whole signal at once — every placement is a bitwise-exact patch."""
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=(12, 129))               # m % 128 != 0
+    ps = PrefixStats.build(y)
+    y[r0:r0 + rows] = rng.normal(size=(rows, 129))
+    got = ps.patch_rows(r0, y[r0:])
+    assert _bitwise_equal(got, PrefixStats.build(y))
+
+
+def test_patch_rows_copy_leaves_previous_arrays_untouched():
+    rng = np.random.default_rng(2)
+    y = rng.normal(size=(10, 8))
+    ps = PrefixStats.build(y)
+    before = ps.p1.copy()
+    y2 = y.copy()
+    y2[3:6] = 0.0
+    ps2 = ps.patch_rows(3, y2[3:], copy=True)
+    assert ps2 is not ps
+    np.testing.assert_array_equal(ps.p1, before)     # reader-held arrays safe
+    assert _bitwise_equal(ps2, PrefixStats.build(y2))
+
+
+def test_patch_rows_validates_inputs():
+    ps = PrefixStats.build(np.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        ps.patch_rows(0, np.zeros((2, 7)))           # column mismatch
+    with pytest.raises(ValueError):
+        ps.patch_rows(5, np.zeros((1, 5)))           # offset beyond n
+
+
+# ----------------------------------------------- streaming builder equivalence
+def test_streaming_replace_sequence_equivalent_to_rebuild():
+    """A random sequence of inserts and band replacements must yield a
+    coreset whose Algorithm-5 losses match a from-scratch StreamingBuilder
+    fed the final bands — within 1e-12 on the f64 oracle path (the flush
+    replays the exact cascade, so fingerprints match too)."""
+    rng = np.random.default_rng(3)
+    m = 33
+    sizes = [7, 1, 16, 9, 1, 14]                     # awkward: 1-row bands
+    bands = [rng.normal(size=(s, m)) for s in sizes]
+    sb = StreamingBuilder(m=m, k=4, eps=0.3)
+    for b in bands:
+        sb.insert_band(b)
+    for idx in (0, 3, 5, 3):                          # first/last/repeat
+        bands[idx] = rng.normal(size=bands[idx].shape)
+        sb.replace_band(idx, bands[idx])
+    cs = sb.result()
+
+    fresh = StreamingBuilder(m=m, k=4, eps=0.3)
+    for b in bands:
+        fresh.insert_band(b)
+    want = fresh.result()
+    assert cs.fingerprint() == want.fingerprint()
+    n = sum(sizes)
+    for _ in range(4):
+        q = random_tree_segmentation(n, m, 4, rng)
+        a = fitting_loss(cs, q.rects, q.labels)
+        b = fitting_loss(want, q.rects, q.labels)
+        assert abs(a - b) <= 1e-12 * max(abs(b), 1.0)
+
+
+def test_streaming_insert_after_replace_flushes_first():
+    """Regression: an insert whose cascade would merge a dirty bucket must
+    settle the pending replacement first — otherwise the stale leaf gets
+    baked into a clean higher-level bucket that no flush can repair."""
+    rng = np.random.default_rng(12)
+    m = 20
+    bands = [rng.normal(size=(8, m)) for _ in range(2)]
+    sb = StreamingBuilder(m=m, k=3, eps=0.3)
+    for b in bands:
+        sb.insert_band(b)
+    bands[0] = rng.normal(size=(8, m))
+    sb.replace_band(0, bands[0])          # level-1 bucket goes dirty
+    bands += [rng.normal(size=(8, m)) for _ in range(2)]
+    sb.insert_band(bands[2])
+    sb.insert_band(bands[3])              # cascade absorbs the dirty bucket
+    cs = sb.result()
+    fresh = StreamingBuilder(m=m, k=3, eps=0.3)
+    for b in bands:
+        fresh.insert_band(b)
+    assert cs.fingerprint() == fresh.result().fingerprint()
+
+
+def test_streaming_replace_validates_and_counts_dirty():
+    rng = np.random.default_rng(4)
+    sb = StreamingBuilder(m=10, k=3, eps=0.3)
+    for _ in range(4):
+        sb.insert_band(rng.normal(size=(8, 10)))
+    with pytest.raises(ValueError):
+        sb.replace_band(1, rng.normal(size=(9, 10)))  # wrong row count
+    assert sb.dirty_buckets == 0
+    sb.replace_band(1, rng.normal(size=(8, 10)))
+    assert sb.dirty_buckets == 1                      # one bucket, not all
+    flushed = sb.flush_dirty()
+    assert flushed >= 1 and sb.dirty_buckets == 0
+    assert sb.flush_dirty() == 0                      # idempotent
+    assert sb.buckets_recompressed_total == flushed
+
+
+# ------------------------------------------------------- engine + HTTP layer
+N, M = 80, 40
+
+
+def _server():
+    eng = CoresetEngine(workers=2, metrics=ServiceMetrics())
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    return eng, srv, f"http://127.0.0.1:{srv.server_address[1]}"
+
+
+def test_ingest_delta_streamed_recaches_and_matches_scratch():
+    eng, srv, base = _server()
+    try:
+        rng = np.random.default_rng(5)
+        y = piecewise_signal(N, M, 5, noise=0.15, seed=5)
+        cl = CoresetClient(base)
+        for i in range(0, N, 16):
+            cl.ingest("st", y[i:i + 16])
+        cl.build("st", 5, 0.3)
+        y2 = y.copy()
+        y2[16:32] = rng.normal(size=(16, M))
+        r = cl.ingest_delta("st", y2[16:32], row0=16)
+        assert r.mode == "replace" and r.rows == 16
+        assert r.entries_recached == 1                # old entry re-cached
+        assert r.buckets_recompressed >= 1
+        # the re-cached entry serves the new version without a rebuild
+        b = cl.build("st", 5, 0.3)
+        assert b.served_from == "exact"
+
+        fresh = CoresetEngine(workers=1, metrics=ServiceMetrics())
+        try:
+            for i in range(0, N, 16):
+                fresh.ingest_band("scratch", y2[i:i + 16])
+            want, _, _ = fresh.get_coreset("scratch", 5, 0.3)
+            got, _, how = eng.get_coreset("st", 5, 0.3)
+            assert how == "exact"
+            assert got.fingerprint() == want.fingerprint()
+            q = random_tree_segmentation(N, M, 5, rng)
+            lg = fitting_loss(got, q.rects, q.labels)
+            lw = fitting_loss(want, q.rects, q.labels)
+            assert abs(lg - lw) <= 1e-9 * max(abs(lw), 1.0)
+        finally:
+            fresh.close()
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_ingest_delta_dense_patch_matches_scratch_build():
+    """Replacing an arbitrary row window of a registered (dense) signal
+    patches the integral images via delta_sat; the next build must equal a
+    from-scratch engine's build of the final signal bit for bit."""
+    eng = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    fresh = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    try:
+        rng = np.random.default_rng(6)
+        y = piecewise_signal(N, M, 5, noise=0.15, seed=6)
+        eng.register_signal("d", y)
+        eng.get_coreset("d", 5, 0.3)
+        assert eng.signal("d").stats is None          # builds don't pin stats
+        y2 = y.copy()
+        y2[50:57] = rng.normal(size=(7, M))           # band-unaligned window
+        r = eng.ingest_delta("d", y2[50:57], row0=50)
+        assert r["mode"] == "replace" and not r["streamed"]
+        got, _, _ = eng.get_coreset("d", 5, 0.3)
+        st = eng.signal("d")
+        assert _bitwise_equal(st.stats, PrefixStats.build(y2))
+        fresh.register_signal("d", y2)
+        want, _, _ = fresh.get_coreset("d", 5, 0.3)
+        assert got.fingerprint() == want.fingerprint()
+    finally:
+        eng.close()
+        fresh.close()
+
+
+def test_ingest_delta_dense_recaches_through_scheduler():
+    # dense specs re-run the partition, so they re-cache asynchronously via
+    # the BuildScheduler — the entry must appear without any further query
+    import time
+    eng = CoresetEngine(workers=2, metrics=ServiceMetrics())
+    try:
+        y = piecewise_signal(N, M, 5, noise=0.15, seed=10)
+        eng.register_signal("d", y)
+        eng.get_coreset("d", 5, 0.3)
+        r = eng.ingest_delta("d", np.zeros((8, M)), row0=40)
+        assert r["mode"] == "replace" and r["entries_recached"] == 1
+        version = eng.signal("d").version
+        deadline = time.time() + 30.0
+        while time.time() < deadline:
+            entry, kind = eng.cache.lookup("d", version, 5, 0.3, record=False)
+            if entry is not None:
+                break
+            time.sleep(0.05)
+        assert kind == "exact"
+        _, _, how = eng.get_coreset("d", 5, 0.3)
+        assert how in ("exact", "coalesced")
+    finally:
+        eng.close()
+
+
+def test_ingest_delta_append_equals_ingest():
+    # the version is a content fold seeded by the name: the delta append and
+    # the plain ingest of the same bytes must land on the same version
+    eng = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    other = CoresetEngine(workers=1, metrics=ServiceMetrics())
+    try:
+        y = piecewise_signal(48, M, 4, noise=0.2, seed=7)
+        eng.ingest_band("a", y[:24])
+        r = eng.ingest_delta("a", y[24:])              # row0 omitted: append
+        assert r["mode"] == "append" and r["n"] == 48 and r["row0"] == 24
+        other.ingest_band("a", y[:24])
+        other.ingest_band("a", y[24:])
+        assert eng.signal("a").version == other.signal("a").version
+    finally:
+        eng.close()
+        other.close()
+
+
+def test_ingest_delta_counters_in_stats_and_prometheus():
+    eng, srv, base = _server()
+    try:
+        y = piecewise_signal(64, M, 4, noise=0.2, seed=8)
+        cl = CoresetClient(base)
+        for i in range(0, 64, 16):
+            cl.ingest("st", y[i:i + 16])
+        cl.build("st", 4, 0.3)
+        cl.ingest_delta("st", np.zeros((16, M)), row0=16)
+        counters = cl.stats()["metrics"]["counters"]
+        for key in ("ingest_delta_bands", "ingest_delta_replaces",
+                    "ingest_delta_buckets_recompressed",
+                    "ingest_delta_recached", "ingest_delta_rebuilds_avoided"):
+            assert counters.get(key, 0) >= 1, key
+        text = cl.metrics_text()
+        assert "coreset_ingest_delta_bands" in text
+        assert "coreset_ingest_delta_buckets_recompressed" in text
+        assert "coreset_ingest_delta_seconds" in text   # latency histogram
+        # the new ops are in the /v1/stats backend snapshot
+        snap = cl.stats()["ops_backends"]
+        assert "delta_sat" in snap and "streaming_compress" in snap
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_ingest_delta_http_validation_envelopes():
+    eng, srv, base = _server()
+
+    def post_raw(path, payload):
+        req = urllib.request.Request(
+            base + path, data=json.dumps(payload).encode(),
+            headers={"Content-Type": "application/json"})
+        urllib.request.urlopen(req, timeout=60).close()
+
+    try:
+        cl = CoresetClient(base)
+        y = piecewise_signal(32, 8, 3, noise=0.2, seed=9)
+        cl.ingest("st", y[:16])
+        cl.ingest("st", y[16:])
+        # unknown signal: 404, not an implicit create
+        with pytest.raises(CoresetAPIError) as exc:
+            cl.ingest_delta("nope", np.zeros((2, 8)), row0=0)
+        assert exc.value.http == 404 and exc.value.code == "not_found"
+        # column mismatch / misaligned offset / row overflow: 400 envelope
+        for band, row0 in ((np.zeros((16, 5)), 0),   # wrong column count
+                           (np.zeros((16, 8)), 3),   # not a band start
+                           (np.zeros((20, 8)), 16)):  # runs past the end
+            with pytest.raises(CoresetAPIError) as exc:
+                cl.ingest_delta("st", band, row0=row0)
+            assert exc.value.http == 400 and exc.value.code == "bad_request"
+        # ragged / non-numeric / non-finite straight through HTTP
+        for bad in ([[1.0, 2.0], [3.0]], [["a", "b"]], [[1.0, float("nan")]]):
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                post_raw("/v1/ingest:delta",
+                         {"type": "ingest_delta", "signal": {"name": "st"},
+                          "band": bad, "row0": 0})
+            assert exc.value.code == 400
+            env = json.loads(exc.value.read())
+            assert env["error"]["code"] == "bad_request"
+        # the legacy /ingest shim rejects a mismatched band with 400 too
+        # (never a 500 from deep inside PrefixStats)
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            post_raw("/ingest", {"name": "st", "band": [[1.0, 2.0]]})
+        assert exc.value.code == 400
+        assert json.loads(exc.value.read())["error"]["code"] == "bad_request"
+        assert cl.healthz()["status"] == "ok"
+    finally:
+        srv.shutdown()
+        eng.close()

@@ -30,6 +30,14 @@ def _messages():
         P.RegisterRequest(signal=_ref(), synthetic={"kind": "piecewise",
                                                     "n": 8, "m": 8}),
         P.IngestRequest(signal=_ref(), band=rng.normal(size=(2, 5))),
+        P.IngestDeltaRequest(signal=_ref(), band=rng.normal(size=(2, 5)),
+                             row0=16),
+        P.IngestDeltaRequest(signal=_ref(),
+                             band=rng.normal(size=(1, 5))),   # append form
+        P.IngestDeltaResponse(name="s", n=18, m=5, bands=3, streamed=True,
+                              version="deadbeef", mode="replace", row0=16,
+                              rows=2, buckets_recompressed=3,
+                              entries_recached=1),
         P.BuildRequest(signal=_ref(), spec=_spec()),
         P.LossQuery(signal=_ref(), rects=rects1, labels=labels_nan,
                     spec=_spec()),
