@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.histsplit import ref as h_ref
-from repro.kernels.sat2d import ops as sat_ops, ref as sat_ref
+from repro.kernels.sat2d import ref as sat_ref
 
 from .common import emit, timed
 

@@ -240,6 +240,17 @@ def run(duration: float, clients: int, n: int, m: int, k_max: int,
                         "coalesced": snap.get("builds_coalesced", 0),
                         "forest_hits": snap.get("forest_cache_hit", 0)}
         out["loss_scoring_calls"] = snap.get("loss_scoring_calls", 0)
+        # cross-request query coalescing: how many loss queries rode along
+        # in someone else's dispatch, and the scoring calls the fusion saved
+        loss_served = counts["loss"]
+        out["coalesce"] = {
+            "loss_requests": loss_served,
+            "coalesced_total": snap.get("query_coalesced_total", 0),
+            "fused_dispatches": snap.get("query_fused_dispatches", 0),
+            "flushes_window": snap.get('query_flushes{reason="window"}', 0),
+            "flushes_full": snap.get('query_flushes{reason="full"}', 0),
+            "flushes_deadline": snap.get('query_flushes{reason="deadline"}', 0),
+        }
     if srv is not None:
         srv.shutdown()
     if engine is not None:

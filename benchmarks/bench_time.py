@@ -2,8 +2,6 @@
 compression vs the sweep on full data; reports the x-speedup."""
 from __future__ import annotations
 
-import time
-
 from repro.data import patch_mask, sensor_matrix
 from repro.trees import tune_k
 

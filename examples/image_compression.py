@@ -13,8 +13,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import (PrefixStats, fitting_loss, greedy_tree,
-                        signal_coreset, true_loss)  # noqa: E402
+from repro.core import fitting_loss, signal_coreset, true_loss  # noqa: E402
 from repro.data import smooth_field  # noqa: E402
 from repro.trees import DecisionTreeRegressor  # noqa: E402
 

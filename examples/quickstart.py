@@ -9,8 +9,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import (fitting_loss, random_tree_segmentation, signal_coreset,
-                        true_loss)  # noqa: E402
+from repro.core import (fitting_loss, random_tree_segmentation,  # noqa: E402
+                        signal_coreset, true_loss)
 from repro.data import piecewise_signal  # noqa: E402
 from repro.trees import RandomForestRegressor, signal_to_points  # noqa: E402
 

@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Bench regression gate: fresh results vs committed baselines.
+
+Compares the wall-clock rows of a fresh ``benchmarks/results/*.json`` run
+against the committed snapshots in ``benchmarks/baselines/`` and fails when
+a gated row regressed by more than ``--factor`` (default 1.25 = +25%).
+
+Gated rows (lower is better, all wall-clock):
+
+  bench_ops.json       <op>.numpy.us_per_call   per canonical op
+  bench_service.json   <mode>.register_seconds  per wire mode present
+
+Noise handling — micro-timings on shared boxes swing well past 25% run to
+run, so a single sample proves nothing:
+
+  * rows below an absolute floor are skipped (scheduler noise, not signal);
+  * on failure the gate RE-RUNS the suite's bench (up to ``--retries``
+    times) and compares the per-row MINIMUM across runs — a true
+    regression survives every re-measure, a load spike does not;
+  * ``BENCH_REGRESSION_FACTOR`` loosens the factor for CI runners whose
+    hardware differs from the baseline machine.
+
+``--update`` refreshes the baselines from the fresh results instead of
+comparing (run it after an intentional perf change, commit the diff).
+
+Run:  python scripts/check_bench_regression.py [ops|service|all] [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "benchmarks" / "results"
+BASELINES = ROOT / "benchmarks" / "baselines"
+
+# (file, row path resolver, floor) — a resolver yields (row name, value)
+_OPS_FLOOR_US = 500.0      # numpy per-call timings under 0.5 ms are noise
+_SVC_FLOOR_S = 0.005       # registration under 5 ms likewise
+
+
+def _ops_rows(doc: dict):
+    for op, backends in doc.items():
+        if isinstance(backends, dict) and isinstance(
+                backends.get("numpy"), dict) and \
+                "us_per_call" in backends["numpy"]:
+            yield f"{op}.numpy.us_per_call", float(
+                backends["numpy"]["us_per_call"]), _OPS_FLOOR_US
+
+
+def _service_rows(doc: dict):
+    for mode, res in doc.items():
+        if isinstance(res, dict) and "register_seconds" in res:
+            yield f"{mode}.register_seconds", float(
+                res["register_seconds"]), _SVC_FLOOR_S
+
+
+_SUITES = {
+    "ops": ("bench_ops.json", _ops_rows,
+            [[sys.executable, "-m", "benchmarks.bench_ops", "--fast"]]),
+    "service": ("bench_service.json", _service_rows,
+                [[sys.executable, "benchmarks/bench_service.py", "--smoke",
+                  "--encoding", "json"],
+                 [sys.executable, "benchmarks/bench_service.py", "--smoke",
+                  "--encoding", "binary"]]),
+}
+
+
+def _rerun(suite: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    for cmd in _SUITES[suite][2]:
+        subprocess.run(cmd, cwd=ROOT, env=env, check=True,
+                       stdout=subprocess.DEVNULL)
+
+
+def _check_suite(suite: str, factor: float, best: dict) -> list[str]:
+    """One comparison pass; ``best`` accumulates the per-row minimum over
+    every fresh run seen so far."""
+    fname, rows_of, _ = _SUITES[suite]
+    fresh = json.loads((RESULTS / fname).read_text())
+    for name, val, _ in rows_of(fresh):
+        best[name] = min(val, best.get(name, val))
+    base_rows = dict(
+        (name, (val, floor)) for name, val, floor
+        in rows_of(json.loads((BASELINES / fname).read_text())))
+    failures, compared = [], 0
+    for name, val, floor in rows_of(fresh):
+        if name not in base_rows:
+            continue
+        base_val, _ = base_rows[name]
+        val = best[name]
+        if base_val < floor or val < floor:
+            continue        # below the noise floor on either side
+        compared += 1
+        ratio = val / base_val
+        status = "FAIL" if ratio > factor else "ok"
+        print(f"[bench_regression] {suite}:{name} baseline={base_val:.1f}"
+              f" best-fresh={val:.1f} ({ratio:.2f}x, allowed {factor:.2f}x)"
+              f" {status}")
+        if ratio > factor:
+            failures.append(f"{suite}:{name} {ratio:.2f}x")
+    if compared == 0:
+        print(f"[bench_regression] WARN {suite}: no gated rows above "
+              f"the noise floor — gate vacuous")
+    return failures
+
+
+def check(which: str, factor: float, update: bool, retries: int) -> int:
+    suites = list(_SUITES) if which == "all" else [which]
+    failed = []
+    for suite in suites:
+        fname = _SUITES[suite][0]
+        fresh_p = RESULTS / fname
+        base_p = BASELINES / fname
+        if not fresh_p.exists():
+            print(f"[bench_regression] SKIP {suite}: no fresh {fresh_p}")
+            continue
+        if update:
+            BASELINES.mkdir(parents=True, exist_ok=True)
+            base_p.write_text(fresh_p.read_text())
+            print(f"[bench_regression] baseline updated: {base_p}")
+            continue
+        if not base_p.exists():
+            print(f"[bench_regression] SKIP {suite}: no baseline {base_p} "
+                  f"(run with --update to create it)")
+            continue
+        best: dict = {}
+        failures = _check_suite(suite, factor, best)
+        attempt = 0
+        while failures and attempt < retries:
+            attempt += 1
+            print(f"[bench_regression] {suite}: {len(failures)} row(s) over "
+                  f"budget — re-measuring ({attempt}/{retries}) to rule out "
+                  f"machine load")
+            _rerun(suite)
+            failures = _check_suite(suite, factor, best)
+        failed.extend(failures)
+    if failed:
+        print(f"[bench_regression] FAIL: {len(failed)} row(s) regressed "
+              f"> {factor:.2f}x across every re-measure: {failed}")
+        return 1
+    if not update:
+        print("[bench_regression] PASS")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("which", nargs="?", default="all",
+                    choices=("ops", "service", "all"))
+    ap.add_argument("--update", action="store_true",
+                    help="refresh baselines from fresh results")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("BENCH_REGRESSION_FACTOR",
+                                                 "1.25")),
+                    help="allowed slowdown (default 1.25 = +25%%)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="re-measures before a regression is declared real")
+    args = ap.parse_args()
+    return check(args.which, args.factor, args.update, args.retries)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,29 +1,46 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 suite, the repro.ops backend sweep with its
-# batched-Pallas-vs-dense parity gate (<= 1e-4 relative), the delta-ingest
-# gates (delta-vs-rebuild loss parity <= 1e-9 and the delta write path
-# beating a full re-ingest+re-SAT wall-clock), a deprecation-warning-clean
-# run of the shim-adjacent test modules, the real 2-device-mesh
-# batched-loss parity check, the serve_coresets self-check, and a 2-second
-# closed-loop loadgen per wire encoding, so serving-path regressions fail
-# fast.  The final gate asserts the v1 binary frame beats JSON on 512x512
-# signal registration (the ROADMAP's "JSON array parsing dominates" fix)
-# using the per-mode results both runs merged into
-# benchmarks/results/bench_service.json.
+# CI smoke, split into named stages so the pipeline can matrix them and a
+# failed gate names its stage:
 #
-#   scripts/ci_smoke.sh
+#   scripts/ci_smoke.sh [stage...]      # default: all stages, in order
+#
+#   lint      ruff check (skipped with a notice when ruff is absent)
+#   tests     tier-1 pytest suite
+#   ops       bench_ops backend sweep + batched-Pallas-vs-dense parity gate
+#             (<= 1e-4 relative) + real 2-device-mesh parity + bench_ops
+#             wall-clock regression gate vs benchmarks/baselines
+#   delta     delta-ingest gates (delta-vs-rebuild loss parity <= 1e-9,
+#             delta beats full re-ingest) + deprecation-warning-clean run
+#   service   serve_coresets self-check + 2s closed-loop loadgen per wire
+#             encoding + binary-beats-JSON registration gate + bench_service
+#             regression gate
+#   coalesce  cross-request query coalescing gate: 16 concurrent same-signal
+#             loss queries must fuse into <= 4 scoring dispatches with
+#             per-request losses <= 1e-9 off the uncoalesced path
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -q
+stage_lint() {
+  echo "== lint (ruff) =="
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+  else
+    echo "[ci_smoke] ruff not installed: lint stage skipped"
+  fi
+}
 
-echo "== bench_ops backend sweep (numpy vs xla vs pallas-interpret) =="
-python -m benchmarks.bench_ops --fast
+stage_tests() {
+  echo "== tier-1 tests =="
+  python -m pytest -q
+}
 
-echo "== batched-Pallas vs dense dispatched-path parity gate =="
-python - <<'EOF'
+stage_ops() {
+  echo "== bench_ops backend sweep (numpy vs xla vs pallas-interpret) =="
+  python -m benchmarks.bench_ops --fast
+
+  echo "== batched-Pallas vs dense dispatched-path parity gate =="
+  python - <<'EOF'
 import json, pathlib, sys
 p = pathlib.Path("benchmarks/results/bench_ops.json")
 res = json.loads(p.read_text())
@@ -35,10 +52,25 @@ if rel > 1e-4:
     sys.exit(f"[ci_smoke] FAIL: batched kernel off dense path by {rel:.2e} > 1e-4")
 EOF
 
-echo "== delta-ingest gates: rebuild parity <= 1e-9, delta beats full rebuild =="
-python - <<'EOF'
+  echo "== mesh-sharded batched fitting loss (2 devices, forced host mesh) =="
+  # the parity logic lives once, in the test (it spawns its own subprocess
+  # with XLA_FLAGS); this step just runs it by name so a smoke log shows it
+  python -m pytest -q tests/test_ops.py -k mesh_sharded
+
+  echo "== bench_ops wall-clock regression gate =="
+  # the gate re-measures failing rows itself (per-row min over runs):
+  # micro-timings are load-sensitive and one sample proves nothing
+  python scripts/check_bench_regression.py ops
+}
+
+stage_delta() {
+  echo "== delta-ingest gates: rebuild parity <= 1e-9, delta beats full rebuild =="
+  python - <<'EOF'
 import json, pathlib, sys
-res = json.loads(pathlib.Path("benchmarks/results/bench_ops.json").read_text())
+p = pathlib.Path("benchmarks/results/bench_ops.json")
+if not p.exists():
+    sys.exit("[ci_smoke] FAIL: run the ops stage first (bench_ops.json missing)")
+res = json.loads(p.read_text())
 d = res["ingest_delta"]
 print(f"[ci_smoke] delta ingest {d['band_rows']}x{d['m']} into "
       f"{d['n']}x{d['m']}: delta={d['delta_ms']:.1f}ms "
@@ -51,10 +83,10 @@ if d["delta_ms"] >= d["rebuild_ms"]:
     sys.exit("[ci_smoke] FAIL: delta ingest is not faster than full rebuild")
 EOF
 
-echo "== deprecation-warning-clean (coreset_loss_many shim fully migrated) =="
-# explicitly-named files bypass conftest's hypothesis-absent collect-ignore,
-# so mirror its guard here: drop the property-test module on bare containers
-python - <<'EOF'
+  echo "== deprecation-warning-clean (coreset_loss_many shim fully migrated) =="
+  # explicitly-named files bypass conftest's hypothesis-absent collect-ignore,
+  # so mirror its guard here: drop the property-test module on bare containers
+  python - <<'EOF'
 import subprocess, sys
 mods = ["tests/test_ops.py", "tests/test_streaming.py",
         "tests/test_ingest_delta.py"]
@@ -68,23 +100,20 @@ sys.exit(subprocess.call(
     [sys.executable, "-m", "pytest", "-q", "-W", "error::DeprecationWarning",
      *mods]))
 EOF
+}
 
-echo "== mesh-sharded batched fitting loss (2 devices, forced host mesh) =="
-# the parity logic lives once, in the test (it spawns its own subprocess
-# with XLA_FLAGS); this step just runs it by name so a smoke log shows it
-python -m pytest -q tests/test_ops.py -k mesh_sharded
+stage_service() {
+  echo "== serve_coresets smoke (concurrent SDK clients, both encodings) =="
+  python -m repro.launch.serve_coresets --smoke
 
-echo "== serve_coresets smoke (concurrent SDK clients, both encodings) =="
-python -m repro.launch.serve_coresets --smoke
+  echo "== bench_service loadgen smoke (2s, json encoding) =="
+  python benchmarks/bench_service.py --smoke --encoding json
 
-echo "== bench_service loadgen smoke (2s, json encoding) =="
-python benchmarks/bench_service.py --smoke --encoding json
+  echo "== bench_service loadgen smoke (2s, binary encoding) =="
+  python benchmarks/bench_service.py --smoke --encoding binary
 
-echo "== bench_service loadgen smoke (2s, binary encoding) =="
-python benchmarks/bench_service.py --smoke --encoding binary
-
-echo "== binary-vs-json registration gate =="
-python - <<'EOF'
+  echo "== binary-vs-json registration gate =="
+  python - <<'EOF'
 import json, pathlib, sys
 p = pathlib.Path("benchmarks/results/bench_service.json")
 res = json.loads(p.read_text())
@@ -99,4 +128,30 @@ if b >= j:
     sys.exit("[ci_smoke] FAIL: binary registration is not faster than JSON")
 EOF
 
-echo "== ci_smoke PASS =="
+  echo "== bench_service wall-clock regression gate =="
+  python scripts/check_bench_regression.py service
+}
+
+stage_coalesce() {
+  echo "== cross-request query coalescing gate =="
+  python scripts/coalesce_gate.py
+}
+
+ALL_STAGES=(lint tests ops delta service coalesce)
+# bash 3.2 (macOS) treats an empty array as unbound under set -u, so pick
+# the default stage list off $# instead of the array length
+if [ $# -eq 0 ]; then
+  STAGES=("${ALL_STAGES[@]}")
+else
+  STAGES=("$@")
+fi
+
+for stage in "${STAGES[@]}"; do
+  case "$stage" in
+    lint|tests|ops|delta|service|coalesce) "stage_${stage}" ;;
+    *) echo "[ci_smoke] unknown stage '${stage}' (known: ${ALL_STAGES[*]})" >&2
+       exit 2 ;;
+  esac
+done
+
+echo "== ci_smoke PASS (${STAGES[*]}) =="

@@ -53,7 +53,7 @@ class TransportError(Exception):
 class CoresetClient:
     def __init__(self, base_url: str, *, encoding: str = "binary",
                  timeout: float = 120.0, retries: int = 2,
-                 backoff: float = 0.1):
+                 backoff: float = 0.1, deadline_ms: float | None = None):
         if encoding not in ("binary", "json"):
             raise ValueError(f"encoding must be 'binary' or 'json', "
                              f"got {encoding!r}")
@@ -62,9 +62,20 @@ class CoresetClient:
         self.timeout = float(timeout)
         self.retries = int(retries)
         self.backoff = float(backoff)
+        # default server-side budget attached to every query/build request;
+        # per-call deadline_ms overrides it.  Past the budget the server
+        # fails the request 504 deadline_exceeded (never retried here — the
+        # deadline passing is the definitive answer, and the batch the
+        # request was queued in is unaffected)
+        self.deadline_ms = float(deadline_ms) if deadline_ms is not None \
+            else None
         # request-frame codec: None = best this host encodes; negotiated
         # down to "zlib" if the server 415s a zstd frame
         self._codec: str | None = None
+
+    def _deadline(self, deadline_ms: float | None) -> float | None:
+        ms = deadline_ms if deadline_ms is not None else self.deadline_ms
+        return float(ms) if ms is not None else None
 
     # ------------------------------------------------------------ transport
     def _request(self, method: str, path: str, body: bytes | None,
@@ -117,10 +128,13 @@ class CoresetClient:
                         self.encoding = "json"
                         downgraded = True
                         continue
-                if exc.code >= 500:
+                if exc.code >= 500 and exc.code != 504:
                     last = TransportError(f"HTTP {exc.code} from {path}: "
                                           f"{raw[:256]!r}")
                 else:
+                    # < 500 (structured API error) and 504 deadline_exceeded
+                    # raise immediately: a missed deadline is the answer,
+                    # not a transient fault to retry against a fresh budget
                     self._raise_api_error(
                         exc.code, exc.headers.get("Content-Type", ""), raw)
             except (urllib.error.URLError, TimeoutError, ConnectionError,
@@ -185,23 +199,54 @@ class CoresetClient:
         return self._call("/v1/ingest:delta", msg, P.IngestDeltaResponse,
                           retryable=row0 is not None)
 
+    def ingest_delta_burst(self, name: str, deltas,
+                           ) -> P.IngestDeltaResponse:
+        """MANY delta writes in one request: ``deltas`` is a sequence of
+        ``(row0, band)`` pairs (row0=None appends).  The bands are
+        concatenated on the wire and the server fans their per-band leaf
+        rebuilds out through one batched scheduler submission instead of N
+        sequential builds — the cheap way to apply a burst of band
+        replacements."""
+        deltas = [(None if r0 is None else int(r0),
+                   np.ascontiguousarray(b, np.float64)) for r0, b in deltas]
+        if not deltas:
+            raise ValueError("burst needs at least one (row0, band) delta")
+        msg = P.IngestDeltaRequest(
+            signal=P.SignalRef(name=name),
+            band=np.concatenate([b for _, b in deltas], axis=0),
+            row0s=[r0 for r0, _ in deltas],
+            rows=[int(b.shape[0]) for _, b in deltas])
+        # retryable only when every delta is an idempotent replacement
+        return self._call("/v1/ingest:delta", msg, P.IngestDeltaResponse,
+                          retryable=all(r0 is not None for r0, _ in deltas))
+
     # -------------------------------------------------------------- queries
-    def build(self, name: str, k: int, eps: float = 0.2) -> P.BuildResponse:
+    def build(self, name: str, k: int, eps: float = 0.2, *,
+              deadline_ms: float | None = None) -> P.BuildResponse:
         msg = P.BuildRequest(signal=P.SignalRef(name=name),
-                             spec=P.CoresetSpec(k=k, eps=eps))
+                             spec=P.CoresetSpec(k=k, eps=eps),
+                             deadline_ms=self._deadline(deadline_ms))
         return self._call("/v1/build", msg, P.BuildResponse)
 
     def query_loss(self, name: str, rects, labels, *, k: int | None = None,
-                   eps: float | None = None) -> P.LossResponse:
+                   eps: float | None = None,
+                   deadline_ms: float | None = None,
+                   coalesce: bool = True) -> P.LossResponse:
+        """One tree's loss.  Concurrent same-signal queries (from any
+        connection) fuse server-side into one batched dispatch — the
+        response's ``fused_batch_size`` says how many rode along;
+        ``coalesce=False`` opts this request out."""
         rects = np.asarray(rects, np.int64).reshape(-1, 4)
         msg = P.LossQuery(
             signal=P.SignalRef(name=name), rects=rects,
             labels=np.asarray(labels, np.float64).ravel(),
-            spec=self._spec(k, eps, k_default=max(rects.shape[0], 1)))
+            spec=self._spec(k, eps, k_default=max(rects.shape[0], 1)),
+            deadline_ms=self._deadline(deadline_ms), coalesce=coalesce)
         return self._call("/v1/query/loss", msg, P.LossResponse)
 
     def query_loss_batch(self, name: str, rects, labels, *,
                          k: int | None = None, eps: float | None = None,
+                         deadline_ms: float | None = None,
                          ) -> P.BatchLossResponse:
         """Score T same-signal segmentations in ONE fused request:
         ``rects`` (T, K, 4), ``labels`` (T, K)."""
@@ -211,26 +256,30 @@ class CoresetClient:
             raise ValueError("batch rects must have shape (T, K, 4)")
         msg = P.BatchLossQuery(
             signal=P.SignalRef(name=name), rects=rects, labels=labels,
-            spec=self._spec(k, eps, k_default=max(rects.shape[1], 1)))
+            spec=self._spec(k, eps, k_default=max(rects.shape[1], 1)),
+            deadline_ms=self._deadline(deadline_ms))
         return self._call("/v1/query/loss:batch", msg, P.BatchLossResponse)
 
     def fit(self, name: str, k: int, eps: float = 0.2, *,
             n_estimators: int = 10, max_leaves: int | None = None,
-            predict=None, seed: int = 0) -> P.FitResponse:
+            predict=None, seed: int = 0,
+            deadline_ms: float | None = None) -> P.FitResponse:
         msg = P.FitRequest(
             signal=P.SignalRef(name=name), spec=P.CoresetSpec(k=k, eps=eps),
             n_estimators=n_estimators, max_leaves=max_leaves,
             predict=(np.asarray(predict, np.float64).reshape(-1, 2)
                      if predict is not None else None),
-            seed=seed)
+            seed=seed, deadline_ms=self._deadline(deadline_ms))
         return self._call("/v1/query/fit", msg, P.FitResponse)
 
     def compress(self, name: str, k: int, eps: float = 0.2, *,
                  target_frac: float | None = None, style: str = "mean",
-                 max_points: int = 4096) -> P.CompressResponse:
+                 max_points: int = 4096,
+                 deadline_ms: float | None = None) -> P.CompressResponse:
         msg = P.CompressRequest(
             signal=P.SignalRef(name=name), spec=P.CoresetSpec(k=k, eps=eps),
-            target_frac=target_frac, style=style, max_points=max_points)
+            target_frac=target_frac, style=style, max_points=max_points,
+            deadline_ms=self._deadline(deadline_ms))
         return self._call("/v1/query/compress", msg, P.CompressResponse)
 
     # ------------------------------------------------------------ telemetry

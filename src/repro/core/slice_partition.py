@@ -13,8 +13,6 @@ of O((r1-r0) * m).
 """
 from __future__ import annotations
 
-import numpy as np
-
 from .stats import PrefixStats
 
 __all__ = ["slice_partition", "Rect"]

@@ -268,11 +268,19 @@ class StreamingBuilder:
                 return bucket
         raise ValueError(f"band index {index} not covered by any bucket")
 
-    def replace_band(self, index: int, band_values: np.ndarray) -> None:
+    def replace_band(self, index: int, band_values: np.ndarray, *,
+                     _leaf_cs=None) -> None:
         """Replace ingested band ``index`` with same-shape values: O(band)
         leaf rebuild now, a dirty mark on the one bucket containing it;
         recompression is deferred to ``flush_dirty`` so a burst of updates
-        amortizes into one batched dispatch."""
+        amortizes into one batched dispatch.
+
+        ``_leaf_cs`` (internal) injects a prebuilt ``signal_coreset(band,
+        k, eps)`` of the new content — the serving engine fans a delta
+        burst's leaf builds out over its scheduler pool and hands each
+        builder its finished leaf, so N replaced bands cost one batched
+        submission instead of N sequential builds here.
+        """
         from .coreset import signal_coreset
         band_values = np.asarray(band_values, np.float64)
         leaf = self._leaves[index]
@@ -280,7 +288,8 @@ class StreamingBuilder:
             raise ValueError(
                 f"replacement band must have shape ({leaf.rows}, {self.m}), "
                 f"got {band_values.shape}")
-        leaf.cs = signal_coreset(band_values, self.k, self.eps)
+        leaf.cs = (_leaf_cs if _leaf_cs is not None
+                   else signal_coreset(band_values, self.k, self.eps))
         bucket = self._bucket_of(index)
         if bucket.count == 1:
             bucket.item = leaf.item    # a leaf bucket IS its band coreset

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced_config
-from repro.models import decode_step, forward, init_cache, init_params
+from repro.models import decode_step, init_cache, init_params
 
 __all__ = ["generate", "main"]
 

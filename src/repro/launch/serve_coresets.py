@@ -166,6 +166,13 @@ def main() -> None:
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--num-bands", type=int, default=4)
+    ap.add_argument("--query-window-ms", type=float, default=2.0,
+                    help="cross-request loss-query batching window")
+    ap.add_argument("--query-max-fuse", type=int, default=16,
+                    help="flush a query bucket early once this many trees "
+                         "queue (the batched kernel's T tile)")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable cross-request query coalescing engine-wide")
     ap.add_argument("--smoke", action="store_true",
                     help="self-check with concurrent SDK clients, then exit")
     args = ap.parse_args()
@@ -174,7 +181,10 @@ def main() -> None:
         sys.exit(run_smoke())
 
     engine = CoresetEngine(cache_bytes=args.cache_mb << 20,
-                           workers=args.workers, num_bands=args.num_bands)
+                           workers=args.workers, num_bands=args.num_bands,
+                           query_window=args.query_window_ms / 1e3,
+                           query_max_fuse=args.query_max_fuse,
+                           coalesce=not args.no_coalesce)
     srv = make_server(engine, host=args.host, port=args.port)
     print(f"[serve_coresets] listening on http://{args.host}:"
           f"{srv.server_address[1]}  (v1: POST /v1/signals /v1/ingest "

@@ -12,7 +12,6 @@ configs on this CPU container (``--reduced``), e.g.:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -24,7 +23,7 @@ from repro.data.tokens import TokenStream
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import init_params
 from repro.runtime.fault_tolerance import supervise
-from repro.sharding import (batch_specs, compat_set_mesh, named,
+from repro.sharding import (compat_set_mesh, named,
                             opt_specs, param_specs)
 from repro.train import AdamWConfig, adamw_init, make_train_step
 

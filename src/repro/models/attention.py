@@ -16,7 +16,6 @@ serving.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ patch embeddings concatenated before the text tokens; musicgen sums
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import init_linear, linear, truncated_normal
+from .layers import truncated_normal
 
 __all__ = ["init_moe", "moe_forward"]
 

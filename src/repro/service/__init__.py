@@ -6,6 +6,7 @@
 from .cache import CacheEntry, DominanceCache
 from .engine import CoresetEngine, SignalState, UnknownSignalError
 from .metrics import Histogram, ServiceMetrics
+from .query_scheduler import DeadlineExceeded, QueryScheduler
 from .scheduler import BuildScheduler
 from . import protocol
 from .api import ApiError, make_server, serve_forever_in_thread
@@ -13,5 +14,6 @@ from .api import ApiError, make_server, serve_forever_in_thread
 __all__ = [
     "CacheEntry", "DominanceCache", "CoresetEngine", "SignalState",
     "UnknownSignalError", "Histogram", "ServiceMetrics", "BuildScheduler",
+    "QueryScheduler", "DeadlineExceeded",
     "protocol", "ApiError", "make_server", "serve_forever_in_thread",
 ]

@@ -23,7 +23,9 @@ JSON and the binary npz frame via ``Content-Type`` / ``Accept``):
 Every status >= 400 carries the uniform envelope
 ``{"type": "error", "error": {"code", "message"}}`` with code in
 {bad_request, not_found, conflict, payload_too_large, unsupported_media,
-internal}.
+deadline_exceeded, internal}.  Requests carrying ``deadline_ms`` that miss
+their deadline (build queue wait, query batching window) fail 504
+``deadline_exceeded`` without disturbing the batch they were queued in.
 
 The pre-v1 unversioned routes (``/signals``, ``/ingest``, ``/build``,
 ``/query/*``, ``/healthz``, ``/stats``, ``/metrics``) remain as thin
@@ -48,10 +50,15 @@ import numpy as np
 from . import protocol as P
 from .engine import CoresetEngine, UnknownSignalError
 from .protocol import ProtocolError, UnsupportedCodec
+from .query_scheduler import DeadlineExceeded
 
 __all__ = ["make_server", "serve_forever_in_thread", "ApiError"]
 
 _MAX_BODY = 256 << 20
+
+# concurrent.futures.TimeoutError aliases builtins.TimeoutError on 3.11+,
+# but is a distinct class before — catch whichever this runtime has
+from concurrent.futures import TimeoutError as _FutTimeout  # noqa: E402
 
 
 class ApiError(Exception):
@@ -114,11 +121,24 @@ def _h_ingest(eng: CoresetEngine, msg: P.IngestRequest) -> P.SignalInfo:
     return _signal_info(eng.ingest_band(msg.signal.name, band))
 
 
+def _deadline_of(msg) -> float | None:
+    """Absolute perf_counter deadline from a request's ``deadline_ms``
+    budget (clocked from handler entry, i.e. request receipt)."""
+    ms = getattr(msg, "deadline_ms", None)
+    if ms is None:
+        return None
+    ms = float(ms)
+    if ms <= 0:
+        raise ProtocolError("deadline_ms must be > 0")
+    return time.perf_counter() + ms / 1e3
+
+
 def _h_ingest_delta(eng: CoresetEngine, msg: P.IngestDeltaRequest,
                     ) -> P.IngestDeltaResponse:
     band = _values_from(msg.band, None, "band")
     row0 = int(msg.row0) if msg.row0 is not None else None
-    r = eng.ingest_delta(msg.signal.name, band, row0=row0)
+    r = eng.ingest_delta(msg.signal.name, band, row0=row0,
+                         row0s=msg.row0s, rows=msg.rows)
     return P.IngestDeltaResponse(**r)
 
 
@@ -133,7 +153,8 @@ def _signal_info(info: dict) -> P.SignalInfo:
 
 def _h_build(eng: CoresetEngine, msg: P.BuildRequest) -> P.BuildResponse:
     cs, eps_eff, how = eng.get_coreset(msg.signal.name, msg.spec.k,
-                                       msg.spec.eps)
+                                       msg.spec.eps,
+                                       deadline=_deadline_of(msg))
     return P.BuildResponse(
         fingerprint=cs.fingerprint(), eps_eff=float(eps_eff), served_from=how,
         size=int(cs.size), blocks=int(cs.num_blocks), nbytes=int(cs.nbytes),
@@ -144,11 +165,14 @@ def _h_build(eng: CoresetEngine, msg: P.BuildRequest) -> P.BuildResponse:
 def _h_loss(eng: CoresetEngine, msg: P.LossQuery) -> P.LossResponse:
     eps = msg.spec.eps if msg.spec is not None else 0.2
     k = msg.spec.k if msg.spec is not None else None
-    r = eng.tree_loss(msg.signal.name, msg.rects, msg.labels, eps=eps, k=k)
+    r = eng.tree_loss(msg.signal.name, msg.rects, msg.labels, eps=eps, k=k,
+                      deadline=_deadline_of(msg),
+                      coalesce=bool(msg.coalesce))
     return P.LossResponse(
         loss=r["loss"], k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
         served_from=r["served_from"], fingerprint=r["fingerprint"],
-        coreset_size=r["coreset_size"])
+        coreset_size=r["coreset_size"],
+        fused_batch_size=r["fused_batch_size"], backend=r["backend"])
 
 
 def _h_loss_batch(eng: CoresetEngine, msg: P.BatchLossQuery,
@@ -156,11 +180,12 @@ def _h_loss_batch(eng: CoresetEngine, msg: P.BatchLossQuery,
     eps = msg.spec.eps if msg.spec is not None else 0.2
     k = msg.spec.k if msg.spec is not None else None
     r = eng.tree_loss_batch(msg.signal.name, msg.rects, msg.labels,
-                            eps=eps, k=k)
+                            eps=eps, k=k, deadline=_deadline_of(msg))
     return P.BatchLossResponse(
         losses=r["losses"], k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
         served_from=r["served_from"], fingerprint=r["fingerprint"],
-        coreset_size=r["coreset_size"], scoring_calls=r["scoring_calls"])
+        coreset_size=r["coreset_size"], scoring_calls=r["scoring_calls"],
+        fused_batch_size=r["fused_batch_size"])
 
 
 def _h_fit(eng: CoresetEngine, msg: P.FitRequest) -> P.FitResponse:
@@ -168,7 +193,8 @@ def _h_fit(eng: CoresetEngine, msg: P.FitRequest) -> P.FitResponse:
         msg.signal.name, k=msg.spec.k, eps=msg.spec.eps,
         n_estimators=int(msg.n_estimators),
         max_leaves=int(msg.max_leaves) if msg.max_leaves is not None else None,
-        predict=msg.predict, seed=int(msg.seed))
+        predict=msg.predict, seed=int(msg.seed),
+        deadline=_deadline_of(msg))
     return P.FitResponse(
         k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
         served_from=r["served_from"], fingerprint=r["fingerprint"],
@@ -185,7 +211,8 @@ def _h_compress(eng: CoresetEngine, msg: P.CompressRequest,
         eps=None if msg.target_frac is not None else msg.spec.eps,
         target_frac=(float(msg.target_frac)
                      if msg.target_frac is not None else None),
-        style=msg.style, max_points=int(msg.max_points))
+        style=msg.style, max_points=int(msg.max_points),
+        deadline=_deadline_of(msg))
     pts = r["points"]
     return P.CompressResponse(
         k=r["k"], eps_eff=r["eps_eff"], served_from=r["served_from"],
@@ -414,6 +441,13 @@ class _Handler(BaseHTTPRequestHandler):
             # renegotiate down to JSON, unlike a 400 which means bad request
             eng.metrics.inc("http_415")
             self._error(415, "unsupported_media", str(exc), successor)
+        except (DeadlineExceeded, _FutTimeout) as exc:
+            # the request's deadline_ms budget ran out (build queue wait or
+            # query batching window) — a definite server-side timeout, not
+            # a malformed request; the batch it was queued in still serves
+            eng.metrics.inc("http_504")
+            self._error(504, "deadline_exceeded",
+                        str(exc) or "request deadline exceeded", successor)
         except (ProtocolError, ValueError, TypeError,
                 json.JSONDecodeError) as exc:
             eng.metrics.inc("http_400")

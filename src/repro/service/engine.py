@@ -21,6 +21,7 @@ from __future__ import annotations
 import collections
 import hashlib
 import threading
+import time
 
 import numpy as np
 
@@ -32,6 +33,7 @@ from repro.trees.forest import RandomForestRegressor
 
 from .cache import CacheEntry, DominanceCache, _eps_key
 from .metrics import ServiceMetrics
+from .query_scheduler import QueryScheduler
 from .scheduler import BuildScheduler
 
 __all__ = ["CoresetEngine", "SignalState", "UnknownSignalError"]
@@ -252,12 +254,22 @@ class CoresetEngine:
 
     def __init__(self, *, cache_bytes: int = 256 << 20, workers: int = 4,
                  num_bands: int = 4, batch_window: float = 0.004,
+                 query_window: float = 0.002, query_max_fuse: int = 16,
+                 coalesce: bool = True,
                  metrics: ServiceMetrics | None = None, mesh=None):
         self.metrics = metrics or ServiceMetrics()
         self.cache = DominanceCache(cache_bytes, metrics=self.metrics)
         self.scheduler = BuildScheduler(max_workers=workers,
                                         batch_window=batch_window,
                                         metrics=self.metrics)
+        # cross-request loss-query coalescing (the BuildScheduler pattern
+        # applied to reads); ``coalesce=False`` turns the engine-wide
+        # default off, and every query can opt out per-request
+        self.queries = QueryScheduler(window=query_window,
+                                      max_fuse=query_max_fuse,
+                                      max_workers=workers,
+                                      metrics=self.metrics)
+        self.coalesce_queries = bool(coalesce)
         self.num_bands = int(num_bands)
         self.mesh = mesh   # optional jax mesh for fused batch scoring
         self._signals: dict[str, SignalState] = {}
@@ -312,7 +324,9 @@ class CoresetEngine:
         self.metrics.inc("bands_ingested")
         return st.info()
 
-    def ingest_delta(self, name: str, band, *, row0: int | None = None) -> dict:
+    def ingest_delta(self, name: str, band, *, row0: int | None = None,
+                     row0s: list | None = None,
+                     rows: list | None = None) -> dict:
         """Delta write path: patch an existing signal with only the changed
         rows (``POST /v1/ingest:delta``).
 
@@ -328,6 +342,14 @@ class CoresetEngine:
           re-run does not belong on the write path) — instead of the legacy
           full re-ingest that re-SATs and re-compresses from scratch.
 
+        **Burst form**: ``row0s``/``rows`` describe MANY deltas in one call
+        — ``band`` is then the row-wise concatenation of ``len(row0s)``
+        bands of ``rows[i]`` rows each, and ``row0s[i]`` places band i
+        (None appends).  The per-band leaf ``signal_coreset`` rebuilds of
+        every live merge-reduce builder fan out over the QueryScheduler's
+        worker pool as ONE batched submission instead of N sequential
+        builds, and the whole burst re-caches / recompresses once.
+
         Unknown signals 404 (a delta against nothing is a client bug, not an
         implicit create); malformed bands raise ValueError -> 400 envelope.
         """
@@ -336,14 +358,40 @@ class CoresetEngine:
         band = np.ascontiguousarray(band, np.float64)
         if band.ndim != 2 or band.size == 0:
             raise ValueError("delta band must be a non-empty 2D array")
+        if row0s is not None:
+            if row0 is not None:
+                raise ValueError("pass either row0 or row0s, not both")
+            if rows is None or len(rows) != len(row0s) or not row0s:
+                raise ValueError("burst needs matching non-empty row0s/rows")
+            rows = [int(r) for r in rows]
+            if any(r < 1 for r in rows):
+                raise ValueError("every burst band needs >= 1 rows")
+            if sum(rows) != band.shape[0]:
+                raise ValueError(
+                    f"rows {rows} sum to {sum(rows)}, band has "
+                    f"{band.shape[0]} rows")
+            pieces = np.split(band, np.cumsum(rows)[:-1], axis=0)
+            deltas = [(None if r0 is None else int(r0), b)
+                      for r0, b in zip(row0s, pieces)]
+        elif rows is not None:
+            raise ValueError("rows requires row0s (the burst form needs both)")
+        else:
+            deltas = [(None if row0 is None else int(row0), band)]
         st = self.signal(name)
         buckets0 = self._buckets_recompressed(st)
         recached = 0
-        if row0 is not None and not st.streamed:
+        # only a true replace reads the integral images; an explicit
+        # row0 == n is an append, whose streamed flip would discard them
+        if any(r0 is not None and r0 != st.n
+               for r0, _ in deltas) and not st.streamed:
             # first dense delta pays the one-off SAT materialization here
             # (outside the heavy lock section); every later replace patches
             # it in O(changed rows) and every later build skips its re-SAT
             st.ensure_stats()
+        modes: list[str] = []
+        applied: list[int] = []
+        replaced: list[tuple[int, np.ndarray]] = []   # (band_index, band)
+        dense_replaces = 0
         with self.metrics.timed("ingest_delta"):
             # hold EVERY live builder lock across the mutation + leaf swap
             # (slot.lock before st.lock, the documented order): a concurrent
@@ -357,34 +405,64 @@ class CoresetEngine:
                 for slot in slots:
                     stack.enter_context(slot.lock)
                 with st.lock:
-                    # mode decision and placement are atomic with the write:
-                    # an explicit row0 == n is an append only if n still is n
-                    if row0 is None or int(row0) == st.n:
-                        mode = "append"
-                        applied_row0 = st.n
-                        band_index = None
-                        prev_specs = []
-                        st.append(band, streamed=True)
-                        # per-(k, eps) builders consume the new band lazily
-                        # at the next build, exactly like /v1/ingest
-                    else:
-                        mode = "replace"
-                        applied_row0 = int(row0)
-                        prev_specs = self.cache.specs_for(name, st.version)
-                        band_index = st.replace_rows(applied_row0, band)
-                if band_index is not None:
-                    # swap the one leaf in every builder that already
-                    # consumed it: each such builder keeps its merge-reduce
-                    # state instead of a from-scratch replay
-                    for slot in slots:
-                        if slot.consumed > band_index:
-                            slot.builder.replace_band(band_index, band)
-                            self.metrics.inc("ingest_delta_rebuilds_avoided")
-                elif mode == "replace" and st.stats is not None:
+                    # a malformed delta must reject the WHOLE burst before
+                    # the first mutation: the loop below applies deltas in
+                    # place, so a mid-burst validation failure would commit
+                    # the earlier writes while skipping the leaf swaps and
+                    # cache invalidation that follow (the single-delta path
+                    # validates exactly where it applies, so it needs no
+                    # pre-flight)
+                    if len(deltas) > 1:
+                        self._validate_burst_locked(st, deltas)
+                    # entries live under the signal's PRE-burst version:
+                    # capture their specs before the first mutation bumps it
+                    prev_specs = self.cache.specs_for(name, st.version)
+                    for r0, b in deltas:
+                        # mode decision and placement are atomic with the
+                        # write: an explicit row0 == n is an append only if
+                        # n still is n
+                        if r0 is None or r0 == st.n:
+                            modes.append("append")
+                            applied.append(st.n)
+                            st.append(b, streamed=True)
+                            # per-(k, eps) builders consume the new band
+                            # lazily at the next build, like /v1/ingest
+                        else:
+                            modes.append("replace")
+                            applied.append(r0)
+                            idx = st.replace_rows(r0, b)
+                            if idx is not None:
+                                replaced.append((idx, b))
+                            else:
+                                dense_replaces += 1
+                if replaced:
+                    # swap each replaced leaf in every builder that already
+                    # consumed it — builders keep their merge-reduce state
+                    # instead of a from-scratch replay.  The per-(builder,
+                    # band) leaf signal_coreset builds are pure functions of
+                    # (band bytes, k, eps): fan them out over the query
+                    # scheduler's pool as ONE batched submission, then swap
+                    # the finished leaves in under the held locks.
+                    swaps = [(slot, idx, b)
+                             for slot in slots
+                             for idx, b in replaced
+                             if slot.consumed > idx]
+                    leaves = self.queries.map_fanout(
+                        [lambda s=slot, bb=b: signal_coreset(
+                            bb, s.builder.k, s.builder.eps)
+                         for slot, _, b in swaps])
+                    if swaps:
+                        self.metrics.inc("ingest_delta_leaf_builds_batched",
+                                         len(swaps))
+                    for (slot, idx, b), leaf_cs in zip(swaps, leaves):
+                        slot.builder.replace_band(idx, b, _leaf_cs=leaf_cs)
+                        self.metrics.inc("ingest_delta_rebuilds_avoided")
+                if dense_replaces and st.stats is not None:
                     # dense signal: the patched integral images spare the
                     # next build its O(N) re-SAT
-                    self.metrics.inc("ingest_delta_rebuilds_avoided")
-            if band_index is not None:
+                    self.metrics.inc("ingest_delta_rebuilds_avoided",
+                                     dense_replaces)
+            if replaced:
                 # close the slot-creation window: a slot born between the
                 # snapshot above and the version bump may have consumed the
                 # OLD band content (the consumed counter cannot see content
@@ -397,8 +475,9 @@ class CoresetEngine:
                                  if id(s) not in seen]
                 for slot in newcomers:
                     with slot.lock:
-                        if slot.consumed > band_index:
-                            slot.builder.replace_band(band_index, band)
+                        for idx, b in replaced:
+                            if slot.consumed > idx:
+                                slot.builder.replace_band(idx, b)
             self.cache.invalidate_signal(name, keep_version=st.version)
             # re-cache what the old version served, under the new version:
             # streamed specs rebuild synchronously (a cheap dirty-bucket
@@ -406,20 +485,22 @@ class CoresetEngine:
             # they go through the BuildScheduler off the write path (and
             # coalesce with any concurrent query for the same coreset)
             version = st.version
-            for k, eps in prev_specs:
-                with st.lock:
-                    live = (k, _eps_key(eps)) in st.builders
-                if live:
-                    self._build_and_cache(st, version, k, eps)
-                else:
-                    self.scheduler.submit(
-                        (name, version, k, _eps_key(eps)),
-                        lambda k=k, eps=eps: self._build_and_cache(
-                            st, version, k, eps))
-                recached += 1
+            if "replace" in modes:
+                for k, eps in prev_specs:
+                    with st.lock:
+                        live = (k, _eps_key(eps)) in st.builders
+                    if live:
+                        self._build_and_cache(st, version, k, eps)
+                    else:
+                        self.scheduler.submit(
+                            (name, version, k, _eps_key(eps)),
+                            lambda k=k, eps=eps: self._build_and_cache(
+                                st, version, k, eps))
+                    recached += 1
         buckets = self._buckets_recompressed(st) - buckets0
-        self.metrics.inc("ingest_delta_bands")
-        self.metrics.inc(f"ingest_delta_{mode}s")
+        self.metrics.inc("ingest_delta_bands", len(deltas))
+        for mode in modes:
+            self.metrics.inc(f"ingest_delta_{mode}s")
         if buckets:
             self.metrics.inc("ingest_delta_buckets_recompressed", buckets)
         if recached:
@@ -427,10 +508,49 @@ class CoresetEngine:
         info = st.info()
         return {"name": info["name"], "n": info["n"], "m": info["m"],
                 "bands": info["bands"], "streamed": info["streamed"],
-                "version": info["version"], "mode": mode,
-                "row0": applied_row0, "rows": int(band.shape[0]),
+                "version": info["version"],
+                "mode": modes[0] if len(modes) == 1 else "burst",
+                "row0": applied[0], "rows": int(band.shape[0]),
+                "deltas": len(deltas),
                 "buckets_recompressed": int(buckets),
                 "entries_recached": int(recached)}
+
+    @staticmethod
+    def _validate_burst_locked(st: SignalState, deltas: list) -> None:
+        """Pre-flight every delta of a burst against a *simulated* walk of
+        the signal's geometry (caller holds ``st.lock``), mirroring the
+        checks ``append``/``replace_rows`` make — including appends growing
+        ``n`` and flipping the signal streamed mid-burst — so nothing
+        mutates unless the whole burst is applicable."""
+        n = st.n
+        starts = st.band_starts()
+        band_rows = [b.shape[0] for b in st.bands]
+        streamed = st.streamed
+        for r0, b in deltas:
+            rows = b.shape[0]
+            if st.m is not None and b.shape[1] != st.m:
+                raise ValueError(f"band has {b.shape[1]} columns, "
+                                 f"signal has {st.m}")
+            if r0 is None or r0 == n:
+                starts.append(n)
+                band_rows.append(rows)
+                n += rows
+                streamed = True   # delta appends always stream (see loop)
+            else:
+                if not (0 <= r0 and r0 + rows <= n):
+                    raise ValueError(f"rows [{r0}, {r0 + rows}) outside "
+                                     f"signal of {n} rows")
+                if streamed or len(band_rows) > 1:
+                    try:
+                        idx = starts.index(r0)
+                    except ValueError:
+                        raise ValueError(
+                            f"row offset {r0} does not start an ingested "
+                            f"band (starts: {starts})") from None
+                    if band_rows[idx] != rows:
+                        raise ValueError(
+                            f"band {idx} holds {band_rows[idx]} rows, "
+                            f"replacement has {rows}")
 
     @staticmethod
     def _buckets_recompressed(st: SignalState) -> int:
@@ -451,13 +571,27 @@ class CoresetEngine:
         return [st.info() for st in states]
 
     # ----------------------------------------------------------------- build
+    @staticmethod
+    def _remaining(deadline: float | None,
+                   timeout: float | None = None) -> float | None:
+        """Seconds left until ``deadline`` (absolute perf_counter instant),
+        folded with an optional plain timeout; None = wait forever."""
+        if deadline is None:
+            return timeout
+        rem = max(deadline - time.perf_counter(), 0.0)
+        return rem if timeout is None else min(timeout, rem)
+
     def get_coreset(self, name: str, k: int, eps: float, *,
                     timeout: float | None = None,
+                    deadline: float | None = None,
                     ) -> tuple[SignalCoreset, float, str]:
         """Cached-or-built (k, eps)-coreset of the signal's current version.
 
         Returns (coreset, eps_eff, disposition) with disposition in
-        {"exact", "dominated", "built", "coalesced"}.
+        {"exact", "dominated", "built", "coalesced"}.  ``deadline``
+        propagates into the BuildScheduler: the build is skipped entirely
+        when every waiter's deadline has already expired, and the wait here
+        raises TimeoutError (HTTP 504) at the deadline.
         """
         k = int(k)
         eps = float(eps)
@@ -472,8 +606,9 @@ class CoresetEngine:
             return entry.coreset, entry.eps_eff, kind
         key = (name, version, k, _eps_key(eps))
         fut, created = self.scheduler.submit(
-            key, lambda: self._build_and_cache(st, version, k, eps))
-        entry = fut.result(timeout=timeout)
+            key, lambda: self._build_and_cache(st, version, k, eps),
+            deadline=deadline)
+        entry = fut.result(timeout=self._remaining(deadline, timeout))
         return entry.coreset, entry.eps_eff, "built" if created else "coalesced"
 
     def _build_and_cache(self, st: SignalState, version: str, k: int,
@@ -554,11 +689,19 @@ class CoresetEngine:
     # --------------------------------------------------------------- queries
     def tree_loss(self, name: str, seg_rects, seg_labels, *,
                   eps: float = 0.2, k: int | None = None,
-                  timeout: float | None = None) -> dict:
+                  timeout: float | None = None,
+                  deadline: float | None = None,
+                  coalesce: bool = True) -> dict:
         """Algorithm-5 loss of a k-segmentation, served from cache.
 
         ``k`` defaults to the query's leaf count — the smallest coreset
         parameter whose guarantee covers this tree.
+
+        By default the evaluation routes through the :class:`QueryScheduler`
+        so concurrent same-signal queries from different connections fuse
+        into one ``fitting_loss_batched`` dispatch; ``coalesce=False`` (or
+        an engine built with ``coalesce=False``) is the escape hatch that
+        scores inline, exactly like the pre-coalescing path.
         """
         seg_rects = np.asarray(seg_rects, np.int64).reshape(-1, 4)
         seg_labels = np.asarray(seg_labels, np.float64).ravel()
@@ -566,23 +709,54 @@ class CoresetEngine:
             raise ValueError("rects/labels length mismatch")
         k = int(k) if k is not None else int(seg_rects.shape[0])
         with self.metrics.timed("query_loss"):
-            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
-            # resolve once, dispatch with the same choice: the reported
-            # backend is by construction the one that served the query
-            backend = ops.selected_backend(
-                "fitting_loss", ops.fitting_loss_size(cs, seg_rects))
-            loss = ops.fitting_loss(cs, seg_rects, seg_labels,
-                                    backend=backend)
+            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
+                                                deadline=deadline)
+            fp = cs.fingerprint()   # hashes the coreset arrays: once per query
+            if coalesce and self.coalesce_queries:
+                # fusion key: only queries that score against the SAME
+                # cached coreset on the SAME backend may share a dispatch
+                # (mixed-k queries resolve different coresets — never fused).
+                # The backend is selected at T=1, i.e. what THIS query would
+                # run alone, deliberately: fusing must never size-promote a
+                # query off the f64 numpy oracle onto an f32 path (the
+                # coalesce gate's <=1e-9 parity vs the uncoalesced path
+                # depends on it), and on TPU — where the T axis pays — the
+                # capability rule selects pallas at any size anyway
+                backend = ops.selected_backend(
+                    "fitting_loss_batched",
+                    ops.fitting_loss_batched_size(cs, seg_rects[None]))
+                key = (fp, k, _eps_key(eps), backend)
+
+                def execute(rects3, labels2, _cs=cs, _backend=backend):
+                    self.metrics.inc("loss_scoring_calls")  # ONE per fusion
+                    self.metrics.inc(f"ops_backend_{_backend}")
+                    return ops.fitting_loss_batched(_cs, rects3, labels2,
+                                                    backend=_backend)
+
+                fut = self.queries.submit(key, seg_rects, seg_labels, execute,
+                                          deadline=deadline)
+                loss, fused = fut.result(
+                    timeout=self._remaining(deadline, timeout))
+            else:
+                # resolve once, dispatch with the same choice: the reported
+                # backend is by construction the one that served the query
+                backend = ops.selected_backend(
+                    "fitting_loss", ops.fitting_loss_size(cs, seg_rects))
+                loss = ops.fitting_loss(cs, seg_rects, seg_labels,
+                                        backend=backend)
+                fused = 1
+                self.metrics.inc("loss_scoring_calls")
+                self.metrics.inc(f"ops_backend_{backend}")
         self.metrics.inc("queries_loss")
-        self.metrics.inc("loss_scoring_calls")
-        self.metrics.inc(f"ops_backend_{backend}")
         return {"loss": float(loss), "k": k, "eps": eps, "eps_eff": eps_eff,
-                "served_from": how, "fingerprint": cs.fingerprint(),
-                "coreset_size": cs.size, "backend": backend}
+                "served_from": how, "fingerprint": fp,
+                "coreset_size": cs.size, "backend": backend,
+                "fused_batch_size": int(fused)}
 
     def tree_loss_batch(self, name: str, seg_rects, seg_labels, *,
                         eps: float = 0.2, k: int | None = None,
-                        timeout: float | None = None) -> dict:
+                        timeout: float | None = None,
+                        deadline: float | None = None) -> dict:
         """Fused Algorithm-5 loss for T same-signal segmentations.
 
         ``seg_rects`` (T, K, 4) / ``seg_labels`` (T, K) score against ONE
@@ -603,7 +777,8 @@ class CoresetEngine:
             raise ValueError("batch must contain at least one segmentation")
         k = int(k) if k is not None else int(seg_rects.shape[1])
         with self.metrics.timed("query_loss_batch"):
-            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
+            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
+                                                deadline=deadline)
             if self.mesh is not None:
                 backend = "xla+mesh"
                 losses = fitting_loss_batched(cs, seg_rects, seg_labels,
@@ -622,16 +797,19 @@ class CoresetEngine:
         return {"losses": np.asarray(losses, np.float64),
                 "k": k, "eps": eps, "eps_eff": eps_eff, "served_from": how,
                 "fingerprint": cs.fingerprint(), "coreset_size": cs.size,
-                "scoring_calls": 1, "backend": backend}
+                "scoring_calls": 1, "backend": backend,
+                "fused_batch_size": int(seg_rects.shape[0])}
 
     def fit_forest(self, name: str, *, k: int, eps: float = 0.2,
                    n_estimators: int = 10, max_leaves: int | None = None,
                    predict: np.ndarray | None = None, seed: int = 0,
-                   timeout: float | None = None) -> dict:
+                   timeout: float | None = None,
+                   deadline: float | None = None) -> dict:
         """Train a weighted random forest on the coreset points (§5 solver
         stand-in); optionally evaluate it at ``predict`` (P, 2) grid points."""
         with self.metrics.timed("query_fit"):
-            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout)
+            cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
+                                                deadline=deadline)
             fkey = (cs.fingerprint(), int(n_estimators),
                     int(max_leaves or k), int(seed))
             with self._forests_lock:
@@ -668,7 +846,8 @@ class CoresetEngine:
 
     def compress(self, name: str, *, k: int, eps: float | None = None,
                  target_frac: float | None = None, style: str = "mean",
-                 max_points: int = 4096, timeout: float | None = None) -> dict:
+                 max_points: int = 4096, timeout: float | None = None,
+                 deadline: float | None = None) -> dict:
         """Compression query: the weighted point set itself (paper Fig 4).
 
         ``target_frac`` bisects the block tolerance to a size target (dense
@@ -684,7 +863,8 @@ class CoresetEngine:
                 eps_eff, how = cs.eps, "built"
             else:
                 cs, eps_eff, how = self.get_coreset(name, k, eps or 0.2,
-                                                    timeout=timeout)
+                                                    timeout=timeout,
+                                                    deadline=deadline)
             X, y, w = cs.as_points(style=style)
             out = {"k": k, "eps_eff": eps_eff, "served_from": how, "size": cs.size,
                    "blocks": cs.num_blocks, "nbytes": cs.nbytes,
@@ -700,8 +880,16 @@ class CoresetEngine:
     def stats(self) -> dict:
         return {"signals": self.list_signals(), "cache": self.cache.stats(),
                 "builds_in_flight": self.scheduler.in_flight(),
+                "queries_in_flight": self.queries.in_flight(),
+                "query_coalescing": {
+                    "enabled": self.coalesce_queries,
+                    "window_s": self.queries.window,
+                    "max_fuse": self.queries.max_fuse},
                 "ops_backends": ops.snapshot(),
                 "metrics": self.metrics.snapshot()}
 
     def close(self) -> None:
+        # drain queries first: a queued loss query may still need the cache
+        # and ops dispatch, both of which outlive the schedulers
+        self.queries.shutdown()
         self.scheduler.shutdown()

@@ -19,25 +19,29 @@ _BOUNDS = tuple(1e-4 * 2.0 ** i for i in range(21))
 
 
 class Histogram:
-    """Latency histogram over fixed geometric buckets (seconds)."""
+    """Histogram over fixed bucket bounds.  Defaults to the geometric
+    latency buckets (seconds); pass ``bounds``/``unit`` for other scales —
+    e.g. the fused-batch-size histogram uses powers of two and no unit."""
 
-    __slots__ = ("counts", "count", "sum", "max")
+    __slots__ = ("bounds", "unit", "counts", "count", "sum", "max")
 
-    def __init__(self) -> None:
-        self.counts = [0] * (len(_BOUNDS) + 1)
+    def __init__(self, bounds: tuple = _BOUNDS, unit: str = "seconds") -> None:
+        self.bounds = tuple(bounds)
+        self.unit = unit
+        self.counts = [0] * (len(self.bounds) + 1)
         self.count = 0
         self.sum = 0.0
         self.max = 0.0
 
-    def observe(self, seconds: float) -> None:
+    def observe(self, value: float) -> None:
         i = 0
-        while i < len(_BOUNDS) and seconds > _BOUNDS[i]:
+        while i < len(self.bounds) and value > self.bounds[i]:
             i += 1
         self.counts[i] += 1
         self.count += 1
-        self.sum += seconds
-        if seconds > self.max:
-            self.max = seconds
+        self.sum += value
+        if value > self.max:
+            self.max = value
 
     def quantile(self, q: float) -> float:
         """Bucket-upper-bound estimate of the q-quantile."""
@@ -48,14 +52,17 @@ class Histogram:
         for i, c in enumerate(self.counts):
             acc += c
             if acc >= target:
-                return _BOUNDS[i] if i < len(_BOUNDS) else self.max
+                return self.bounds[i] if i < len(self.bounds) else self.max
         return self.max
 
     def snapshot(self) -> dict:
         mean = self.sum / self.count if self.count else 0.0
-        return {"count": self.count, "mean_s": mean, "p50_s": self.quantile(0.5),
-                "p90_s": self.quantile(0.9), "p99_s": self.quantile(0.99),
-                "max_s": self.max}
+        # suffix the JSON keys with the unit only for the seconds default,
+        # so existing dashboards keep their p50_s fields
+        sfx = "_s" if self.unit == "seconds" else ""
+        return {"count": self.count, f"mean{sfx}": mean,
+                f"p50{sfx}": self.quantile(0.5), f"p90{sfx}": self.quantile(0.9),
+                f"p99{sfx}": self.quantile(0.99), f"max{sfx}": self.max}
 
 
 class ServiceMetrics:
@@ -69,16 +76,30 @@ class ServiceMetrics:
         self.started_at = time.time()
 
     # --------------------------------------------------------------- writers
-    def inc(self, name: str, by: int = 1) -> None:
+    def inc(self, name: str, by: int = 1, **labels) -> None:
+        """Bump a counter.  ``labels`` dimensions the metric the Prometheus
+        way — ``inc("query_flushes", reason="window")`` is stored (and
+        rendered) as ``query_flushes{reason="window"}``."""
+        if labels:
+            body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+            name = f"{name}{{{body}}}"
         with self._lock:
             self._counters[name] = self._counters.get(name, 0) + by
 
-    def observe(self, name: str, seconds: float) -> None:
+    def observe(self, name: str, value: float, *, bounds: tuple | None = None,
+                unit: str | None = None) -> None:
+        """Record a histogram sample.  ``bounds``/``unit`` apply on first
+        observation of ``name`` (latency seconds by default)."""
         with self._lock:
             h = self._hists.get(name)
             if h is None:
-                h = self._hists[name] = Histogram()
-            h.observe(seconds)
+                kw = {}
+                if bounds is not None:
+                    kw["bounds"] = bounds
+                if unit is not None:
+                    kw["unit"] = unit
+                h = self._hists[name] = Histogram(**kw)
+            h.observe(value)
 
     def timed(self, name: str):
         """Context manager: observe the elapsed wall time under ``name``."""
@@ -101,19 +122,27 @@ class ServiceMetrics:
         """Prometheus text exposition format.  Metric names must match
         [a-zA-Z_:][a-zA-Z0-9_:]* — route-derived names ("http GET /healthz")
         are sanitized here so one bad name can't invalidate the whole scrape
-        body; snapshot() keeps the readable originals."""
+        body; snapshot() keeps the readable originals.  Labeled counters
+        (``name{key="value"}``) sanitize only the name part and pass the
+        label body through; all series of one labeled family share a single
+        # TYPE header, as the exposition format requires."""
         san = lambda n: re.sub(r"[^a-zA-Z0-9_:]", "_", n)  # noqa: E731
         lines = []
+        typed: set[str] = set()
         with self._lock:
             for name, v in sorted(self._counters.items()):
-                name = san(name)
-                lines.append(f"# TYPE coreset_{name} counter")
-                lines.append(f"coreset_{name} {v}")
+                base, brace, labels = name.partition("{")
+                base = san(base)
+                if base not in typed:
+                    typed.add(base)
+                    lines.append(f"# TYPE coreset_{base} counter")
+                lines.append(f"coreset_{base}{brace}{labels} {v}")
             for name, h in sorted(self._hists.items()):
-                base = f"coreset_{san(name)}_seconds"
+                sfx = f"_{san(h.unit)}" if h.unit else ""
+                base = f"coreset_{san(name)}{sfx}"
                 lines.append(f"# TYPE {base} histogram")
                 acc = 0
-                for bound, c in zip(_BOUNDS, h.counts):
+                for bound, c in zip(h.bounds, h.counts):
                     acc += c
                     lines.append(f'{base}_bucket{{le="{bound:g}"}} {acc}')
                 lines.append(f'{base}_bucket{{le="+Inf"}} {h.count}')

@@ -363,10 +363,18 @@ class IngestRequest(_Wire):
 class IngestDeltaRequest(_Wire):
     """Delta write: only the changed rows cross the wire.  ``row0`` is the
     absolute row offset of the replaced band (must align with an ingested
-    band on streamed signals); None appends at the current end."""
+    band on streamed signals); None appends at the current end.
+
+    **Burst form**: ``row0s``/``rows`` ship MANY deltas in one request —
+    ``band`` is then the row-wise concatenation of ``len(row0s)`` bands of
+    ``rows[i]`` rows each, placed at ``row0s[i]`` (null entries append).
+    The server fans the per-band leaf rebuilds out through one batched
+    scheduler submission instead of N sequential builds."""
     signal: SignalRef
     band: np.ndarray                     # (rows, m) changed rows only
     row0: int | None = None
+    row0s: list | None = None            # burst: per-band placement
+    rows: list | None = None             # burst: per-band row counts
     _NESTED = {"signal": SignalRef}
     _COERCE = {"band": _arr(np.float64, ndim=2)}
 
@@ -375,17 +383,25 @@ class IngestDeltaRequest(_Wire):
 class BuildRequest(_Wire):
     signal: SignalRef
     spec: CoresetSpec
+    deadline_ms: float | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
 
 
 @_message("loss_query")
 class LossQuery(_Wire):
     """Algorithm-5 loss of one k-segmentation.  ``spec`` is optional: k
-    defaults to the tree's leaf count, eps to 0.2."""
+    defaults to the tree's leaf count, eps to 0.2.
+
+    ``deadline_ms`` bounds the server-side wait (build queue + batching
+    window); past it the request fails 504 ``deadline_exceeded``.
+    ``coalesce=False`` is the escape hatch that skips the cross-request
+    QueryScheduler and scores inline."""
     signal: SignalRef
     rects: np.ndarray                     # (K, 4) half-open block corners
     labels: np.ndarray                    # (K,)
     spec: CoresetSpec | None = None
+    deadline_ms: float | None = None
+    coalesce: bool = True
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"rects": _arr(np.int64, ndim=2),
                "labels": _arr(np.float64, ndim=1)}
@@ -400,6 +416,7 @@ class BatchLossQuery(_Wire):
     rects: np.ndarray                     # (T, K, 4)
     labels: np.ndarray                    # (T, K)
     spec: CoresetSpec | None = None
+    deadline_ms: float | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"rects": _arr(np.int64, ndim=3),
                "labels": _arr(np.float64, ndim=2)}
@@ -413,6 +430,7 @@ class FitRequest(_Wire):
     max_leaves: int | None = None
     predict: np.ndarray | None = None     # (P, 2) grid points to evaluate
     seed: int = 0
+    deadline_ms: float | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"predict": _arr(np.float64, ndim=2, allow_none=True)}
 
@@ -424,6 +442,7 @@ class CompressRequest(_Wire):
     target_frac: float | None = None
     style: str = "mean"
     max_points: int = 4096
+    deadline_ms: float | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
 
 
@@ -449,11 +468,12 @@ class IngestDeltaResponse(_Wire):
     bands: int
     streamed: bool
     version: str
-    mode: str                 # append | replace
+    mode: str                 # append | replace | burst
     row0: int
     rows: int
     buckets_recompressed: int
     entries_recached: int
+    deltas: int = 1           # bands in the burst (1 = single-delta form)
 
 
 @_message("build_response")
@@ -478,6 +498,8 @@ class LossResponse(_Wire):
     served_from: str
     fingerprint: str
     coreset_size: int
+    fused_batch_size: int = 1 # requests sharing the dispatch that served this
+    backend: str = ""         # the repro.ops backend the dispatch ran on
 
 
 @_message("batch_loss_response")
@@ -490,6 +512,7 @@ class BatchLossResponse(_Wire):
     fingerprint: str
     coreset_size: int
     scoring_calls: int        # fused engine evaluations consumed (1 per batch)
+    fused_batch_size: int = 1 # trees the single dispatch scored
     _COERCE = {"losses": _arr(np.float64, ndim=1)}
 
 

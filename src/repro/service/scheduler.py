@@ -28,6 +28,7 @@ import time
 from typing import Callable
 
 from .metrics import ServiceMetrics
+from .query_scheduler import DeadlineExceeded
 
 __all__ = ["BuildScheduler"]
 
@@ -45,28 +46,42 @@ class BuildScheduler:
         self._queue: queue.SimpleQueue = queue.SimpleQueue()
         self._lock = threading.Lock()
         self._pending: dict[tuple, _fut.Future] = {}
+        # key -> latest waiter deadline; absent = at least one forever-waiter
+        self._deadlines: dict[tuple, float] = {}
         self._closed = False
         self._collector = threading.Thread(target=self._collect_loop,
                                            name="coreset-batcher", daemon=True)
         self._collector.start()
 
     # ---------------------------------------------------------------- submit
-    def submit(self, key: tuple, fn: Callable[[], object],
-               ) -> tuple[_fut.Future, bool]:
+    def submit(self, key: tuple, fn: Callable[[], object], *,
+               deadline: float | None = None) -> tuple[_fut.Future, bool]:
         """Enqueue a build; returns (future, created).
 
         ``created`` is False when an identical key was already in flight and
-        the caller was coalesced onto its future.
+        the caller was coalesced onto its future.  ``deadline`` (absolute
+        ``time.perf_counter()``) lets the worker skip a build every waiter
+        has already abandoned: joining an in-flight key extends its deadline
+        to the latest waiter's (None = wait forever), so a build is only
+        dropped when ALL its waiters expired.
         """
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is shut down")
             existing = self._pending.get(key)
             if existing is not None:
+                if key in self._deadlines:
+                    if deadline is None:   # a forever-waiter joined: never drop
+                        del self._deadlines[key]
+                    else:
+                        self._deadlines[key] = max(self._deadlines[key],
+                                                   deadline)
                 self.metrics.inc("builds_coalesced")
                 return existing, False
             fut: _fut.Future = _fut.Future()
             self._pending[key] = fut
+            if deadline is not None:
+                self._deadlines[key] = deadline
             # enqueue under the lock: shutdown() also takes it before posting
             # the sentinel, so an accepted item can never land behind
             # _SHUTDOWN and leave its future forever unresolved
@@ -104,6 +119,22 @@ class BuildScheduler:
             self._pool.submit(self._run_one, key, fn, fut)
 
     def _run_one(self, key: tuple, fn: Callable, fut: _fut.Future) -> None:
+        with self._lock:
+            dl = self._deadlines.get(key)
+            expired = dl is not None and time.perf_counter() > dl
+            if expired:
+                # every waiter's deadline already passed: don't burn a
+                # worker on a build nobody will read.  The key is popped
+                # UNDER the same lock as the check, so a late submit cannot
+                # coalesce onto the doomed future after the drop decision —
+                # it starts a fresh build instead
+                self._pending.pop(key, None)
+                self._deadlines.pop(key, None)
+        if expired:
+            self.metrics.inc("builds_expired")
+            fut.set_exception(DeadlineExceeded(
+                "every waiter's deadline expired before the build started"))
+            return
         if not fut.set_running_or_notify_cancel():
             return
         try:
@@ -118,6 +149,7 @@ class BuildScheduler:
         finally:
             with self._lock:
                 self._pending.pop(key, None)
+                self._deadlines.pop(key, None)
 
     # -------------------------------------------------------------- shutdown
     def in_flight(self) -> int:

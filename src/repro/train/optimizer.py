@@ -7,7 +7,6 @@ is additionally sharded over the data axis, dividing that cost by |data|.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ scheduler); microbatching amortizes it via a lax.scan accumulation.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

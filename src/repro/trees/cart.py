@@ -122,7 +122,6 @@ class DecisionTreeRegressor:
             H = hist_fn(codes[idx], w[idx], wy[idx], wy2[idx], n_bins)
             c0 = np.cumsum(H[:, :, 0], axis=1)
             c1 = np.cumsum(H[:, :, 1], axis=1)
-            c2 = np.cumsum(H[:, :, 2], axis=1)
             l0, l1 = c0[:, :-1], c1[:, :-1]
             r0, r1 = s0 - l0, s1 - l1
             ok = (l0 >= self.min_weight_leaf) & (r0 >= self.min_weight_leaf)

@@ -1,6 +1,5 @@
 """Lemma 5/10: the bi-criteria sigma must lower-bound opt_k(D)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bicriteria, optimal_tree_dp, segment_1d_dp

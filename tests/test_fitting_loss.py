@@ -3,7 +3,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (fitting_loss, overlap_counts, random_tree_segmentation,
-                        signal_coreset, true_loss)
+                        signal_coreset)
 from repro.data import piecewise_signal
 
 

@@ -302,6 +302,8 @@ def test_engine_stats_surface_ops_backends():
 
 
 # ----------------------------------------------------------- real mesh path
+@pytest.mark.slow   # subprocess + forced 8-device host mesh; ci_smoke's ops
+                    # stage still runs it by name
 def test_mesh_sharded_batched_loss_matches_oracle():
     """The ROADMAP's 'exercise the mesh path for real': a forced 8-device
     host, a 2-device mesh, and the dispatched fitting_loss_batched sharded

@@ -1,0 +1,396 @@
+"""Cross-request query coalescing: the QueryScheduler must fuse concurrent
+same-key loss queries into one batched dispatch with bitwise-faithful
+answers, honour per-request deadlines without poisoning the batch, never
+fuse across fusion keys (mixed k), and drain cleanly on engine shutdown."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.client import CoresetAPIError, CoresetClient
+from repro.core import random_tree_segmentation
+from repro.data import piecewise_signal
+from repro.service import (BuildScheduler, CoresetEngine, DeadlineExceeded,
+                           QueryScheduler, ServiceMetrics, make_server,
+                           serve_forever_in_thread)
+
+N, M, K = 96, 64, 5
+
+
+def _engine(**kw):
+    kw.setdefault("workers", 2)
+    kw.setdefault("metrics", ServiceMetrics())
+    return CoresetEngine(**kw)
+
+
+def _trees(n, seed=0, k=K):
+    rng = np.random.default_rng(seed)
+    return [random_tree_segmentation(N, M, k, rng) for _ in range(n)]
+
+
+# --------------------------------------------------------------- unit level
+def test_scheduler_fuses_within_window_and_scatters():
+    sched = QueryScheduler(window=0.05, max_fuse=16)
+    calls = []
+
+    def execute(rects3, labels2):
+        calls.append(rects3.shape)
+        return np.arange(rects3.shape[0], dtype=np.float64)
+
+    futs = [sched.submit(("key",), np.zeros((2, 4), np.int64),
+                         np.zeros(2), execute) for _ in range(5)]
+    out = [f.result(timeout=5) for f in futs]
+    assert calls == [(5, 2, 4)]                 # ONE fused dispatch
+    assert [loss for loss, _ in out] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert all(fused == 5 for _, fused in out)  # every rider sees the batch
+    sched.shutdown()
+
+
+def test_scheduler_pads_mixed_leaf_counts_with_zero_area_rects():
+    sched = QueryScheduler(window=0.05, max_fuse=16)
+    seen = {}
+
+    def execute(rects3, labels2):
+        seen["rects"] = rects3.copy()
+        return np.zeros(rects3.shape[0])
+
+    fa = sched.submit(("k",), np.ones((2, 4), np.int64), np.ones(2), execute)
+    fb = sched.submit(("k",), np.ones((4, 4), np.int64), np.ones(4), execute)
+    fa.result(timeout=5), fb.result(timeout=5)
+    r = seen["rects"]
+    assert r.shape == (2, 4, 4)                 # padded to the max leaf count
+    assert (r[0, 2:] == 0).all()                # zero-area padding rows
+    sched.shutdown()
+
+
+def test_scheduler_full_tile_flushes_early():
+    sched = QueryScheduler(window=30.0, max_fuse=3)   # window would hang
+    execute = lambda r, l: np.zeros(r.shape[0])  # noqa: E731
+    futs = [sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1),
+                         execute) for _ in range(3)]
+    t0 = time.perf_counter()
+    for f in futs:
+        f.result(timeout=5)
+    assert time.perf_counter() - t0 < 5          # flushed on full, not window
+    assert sched.metrics.get('query_flushes{reason="full"}') == 1
+    sched.shutdown()
+
+
+def test_scheduler_deadline_expiry_fails_request_not_batch():
+    sched = QueryScheduler(window=10.0, max_fuse=16, deadline_margin=0.0)
+    execute = lambda r, l: np.full(r.shape[0], 7.0)  # noqa: E731
+    keep = sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1),
+                        execute)
+    doomed = sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1),
+                          execute,
+                          deadline=time.perf_counter() + 0.05)
+    # the doomed request's deadline trims the 10s window down to ~50ms; by
+    # the time the flusher dispatches, its deadline has passed — it fails,
+    # the co-queued request still serves
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=5)
+    loss, fused = keep.result(timeout=5)
+    assert loss == 7.0 and fused == 1
+    assert sched.metrics.get("query_deadline_expired") == 1
+    assert sched.metrics.get('query_flushes{reason="deadline"}') == 1
+    sched.shutdown()
+
+
+def test_scheduler_shutdown_drains_pending_queries():
+    sched = QueryScheduler(window=60.0, max_fuse=16)
+    execute = lambda r, l: np.full(r.shape[0], 3.0)  # noqa: E731
+    fut = sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1),
+                       execute)
+    sched.shutdown()                             # must flush, not strand
+    assert fut.result(timeout=5)[0] == 3.0
+    assert sched.metrics.get('query_flushes{reason="drain"}') == 1
+    with pytest.raises(RuntimeError):
+        sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1), execute)
+
+
+def test_scheduler_dispatches_inline_when_pool_rejects_popped_bucket():
+    """Shutdown racing a full-tile pop must not strand the bucket: if the
+    worker pool refuses the dispatch, it runs inline on the submitting
+    thread and every rider's future still resolves."""
+    sched = QueryScheduler(window=30.0, max_fuse=2)
+    sched._pool.shutdown(wait=True)              # simulate the lost race
+    execute = lambda r, l: np.arange(r.shape[0], dtype=float)  # noqa: E731
+    futs = [sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1),
+                         execute) for _ in range(2)]   # fills the tile
+    assert [f.result(timeout=5)[0] for f in futs] == [0.0, 1.0]
+    sched.shutdown()
+
+
+def test_scheduler_executor_error_propagates_to_all_riders():
+    sched = QueryScheduler(window=0.02, max_fuse=16)
+
+    def execute(rects3, labels2):
+        raise RuntimeError("kernel fell over")
+
+    futs = [sched.submit(("k",), np.zeros((1, 4), np.int64), np.zeros(1),
+                         execute) for _ in range(3)]
+    for f in futs:
+        with pytest.raises(RuntimeError, match="kernel fell over"):
+            f.result(timeout=5)
+    sched.shutdown()
+
+
+def test_build_scheduler_skips_builds_every_waiter_abandoned():
+    metrics = ServiceMetrics()
+    sched = BuildScheduler(max_workers=1, batch_window=0.001, metrics=metrics)
+    ran = []
+    blocker, _ = sched.submit(("a",), lambda: (time.sleep(0.15), ran.append("a")))
+    doomed, _ = sched.submit(("b",), lambda: ran.append("b"),
+                             deadline=time.perf_counter() + 0.05)
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=5)                 # worker was busy past it
+    blocker.result(timeout=5)
+    assert ran == ["a"]                          # the dead build never ran
+    assert metrics.get("builds_expired") == 1
+    sched.shutdown()
+
+
+# ------------------------------------------------------------- engine level
+def test_engine_coalesces_concurrent_same_signal_queries():
+    eng = _engine(query_window=0.05, query_max_fuse=16)
+    eng.register_signal("s", piecewise_signal(N, M, K, noise=0.1, seed=1))
+    eng.get_coreset("s", K, 0.3)
+    trees = _trees(8, seed=2)
+    serial = [eng.tree_loss("s", t.rects, t.labels, eps=0.3,
+                            coalesce=False)["loss"] for t in trees]
+    calls0 = eng.metrics.get("loss_scoring_calls")
+    results = [None] * 8
+    barrier = threading.Barrier(8)
+
+    def worker(i):
+        barrier.wait()
+        t = trees[i]
+        results[i] = eng.tree_loss("s", t.rects, t.labels, eps=0.3)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    dispatches = eng.metrics.get("loss_scoring_calls") - calls0
+    assert dispatches < 8                        # fewer dispatches than queries
+    assert eng.metrics.get("query_coalesced_total") == 8 - dispatches
+    # bitwise: the numpy batched backend scores each tree through the exact
+    # fitting_loss the uncoalesced path runs
+    for i in range(8):
+        assert results[i]["loss"] == serial[i]
+        assert results[i]["fused_batch_size"] >= 1
+    eng.close()
+
+
+def test_engine_mixed_k_same_signal_never_fused():
+    eng = _engine(query_window=0.1, query_max_fuse=16)
+    eng.register_signal("s", piecewise_signal(N, M, K, noise=0.1, seed=3))
+    for k in (4, 5):
+        eng.get_coreset("s", k, 0.3)
+    t = _trees(1, seed=4, k=4)[0]
+    calls0 = eng.metrics.get("loss_scoring_calls")
+    out = [None, None]
+    barrier = threading.Barrier(2)
+
+    def worker(slot, k):
+        barrier.wait()
+        out[slot] = eng.tree_loss("s", t.rects, t.labels, eps=0.3, k=k)
+
+    threads = [threading.Thread(target=worker, args=(i, 4 + i))
+               for i in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    # different k => different coreset => different fusion key: two
+    # dispatches, no cross-contamination of the (k, eps) guarantee
+    assert eng.metrics.get("loss_scoring_calls") - calls0 == 2
+    assert out[0]["fused_batch_size"] == 1
+    assert out[1]["fused_batch_size"] == 1
+    assert out[0]["fingerprint"] != out[1]["fingerprint"]
+    eng.close()
+
+
+def test_engine_close_drains_inflight_queries():
+    eng = _engine(query_window=30.0)             # window alone would strand
+    eng.register_signal("s", piecewise_signal(N, M, K, noise=0.1, seed=5))
+    eng.get_coreset("s", K, 0.3)
+    t = _trees(1, seed=6)[0]
+    box = {}
+
+    def worker():
+        box["r"] = eng.tree_loss("s", t.rects, t.labels, eps=0.3)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    # wait until the query is actually queued, then shut down
+    for _ in range(500):
+        if eng.queries.in_flight():
+            break
+        time.sleep(0.005)
+    eng.close()
+    th.join(timeout=10)
+    assert not th.is_alive()
+    assert box["r"]["fused_batch_size"] == 1
+    ref = eng.metrics                             # engine is closed; counters live on
+    assert ref.get('query_flushes{reason="drain"}') == 1
+
+
+def test_engine_concurrency_hammer_losses_bitwise_vs_serial():
+    """Property-style: threads hammering one signal with random trees and
+    two k values must see bitwise-identical losses to the serial
+    uncoalesced path, no matter how the scheduler batches them."""
+    eng = _engine(query_window=0.004, query_max_fuse=8)
+    eng.register_signal("s", piecewise_signal(N, M, K, noise=0.12, seed=7))
+    for k in (4, 5):
+        eng.get_coreset("s", k, 0.3)
+    rng = np.random.default_rng(8)
+    jobs = []
+    for _ in range(48):
+        k = int(rng.choice([4, 5]))
+        t = random_tree_segmentation(N, M, k, rng)
+        jobs.append((k, t))
+    serial = [eng.tree_loss("s", t.rects, t.labels, eps=0.3, k=k,
+                            coalesce=False)["loss"] for k, t in jobs]
+    results = [None] * len(jobs)
+
+    def worker(idx):
+        k, t = jobs[idx]
+        results[idx] = eng.tree_loss("s", t.rects, t.labels, eps=0.3,
+                                     k=k)["loss"]
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(jobs))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60)
+    assert results == serial                     # bitwise, every single one
+    eng.close()
+
+
+# --------------------------------------------------------------- HTTP level
+def test_http_deadline_expiry_in_window_504_batch_survives():
+    eng = _engine(query_window=0.25, query_max_fuse=16)
+    eng.queries.deadline_margin = 0.0            # flush exactly at deadline
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    try:
+        keeper = CoresetClient(base, retries=0)
+        keeper.register_signal("s", piecewise_signal(N, M, K, seed=9))
+        keeper.build("s", K, 0.3)
+        t = _trees(1, seed=10)[0]
+        box = {}
+
+        def keep_worker():
+            box["ok"] = keeper.query_loss("s", t.rects, t.labels, eps=0.3)
+
+        th = threading.Thread(target=keep_worker)
+        th.start()                               # waits out the 250ms window
+        for _ in range(500):                     # until it is really queued
+            if eng.queries.in_flight():
+                break
+            time.sleep(0.005)
+        doomed = CoresetClient(base, retries=0)
+        with pytest.raises(CoresetAPIError) as ei:
+            # joins the keeper's bucket, trims flush to its own 60ms
+            # deadline, and by dispatch time has expired
+            doomed.query_loss("s", t.rects, t.labels, eps=0.3,
+                              deadline_ms=60)
+        assert ei.value.http == 504
+        assert ei.value.code == "deadline_exceeded"
+        th.join(timeout=30)
+        # the co-batched request was served, not poisoned: same answer the
+        # uncoalesced escape hatch gives
+        ref = keeper.query_loss("s", t.rects, t.labels, eps=0.3,
+                                coalesce=False)
+        assert box["ok"].loss == ref.loss
+        assert box["ok"].fused_batch_size == 1
+        assert eng.metrics.get("query_deadline_expired") == 1
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_http_coalesce_off_and_deadline_ok_roundtrip():
+    eng = _engine(query_window=0.02)
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    try:
+        c = CoresetClient(base, retries=0, deadline_ms=30_000)
+        c.register_signal("s", piecewise_signal(N, M, K, seed=11))
+        t = _trees(1, seed=12)[0]
+        on = c.query_loss("s", t.rects, t.labels, eps=0.3)
+        off = c.query_loss("s", t.rects, t.labels, eps=0.3, coalesce=False)
+        assert on.loss == off.loss               # escape hatch parity
+        assert on.backend and off.backend
+        snap = eng.stats()
+        assert snap["query_coalescing"]["enabled"]
+        assert "queries_in_flight" in snap
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_burst_delta_matches_sequential_deltas_and_batches_leaf_builds():
+    rng = np.random.default_rng(13)
+    bands = [rng.normal(size=(16, 24)) for _ in range(4)]
+    new0, new2 = rng.normal(size=(16, 24)), rng.normal(size=(16, 24))
+
+    eng_a = _engine()
+    eng_b = _engine()
+    for eng in (eng_a, eng_b):
+        for b in bands:
+            eng.ingest_band("s", b)
+        eng.get_coreset("s", 3, 0.3)             # live merge-reduce builder
+    # engine A: one burst; engine B: the same deltas one by one
+    ra = eng_a.ingest_delta("s", np.concatenate([new0, new2]),
+                            row0s=[0, 32], rows=[16, 16])
+    eng_b.ingest_delta("s", new0, row0=0)
+    rb = eng_b.ingest_delta("s", new2, row0=32)
+    assert ra["mode"] == "burst" and ra["deltas"] == 2
+    assert ra["version"] == rb["version"]        # same content fold
+    ca, _, _ = eng_a.get_coreset("s", 3, 0.3)
+    cb, _, _ = eng_b.get_coreset("s", 3, 0.3)
+    assert ca.fingerprint() == cb.fingerprint()  # identical merge-reduce state
+    assert eng_a.metrics.get("ingest_delta_leaf_builds_batched") == 2
+    assert eng_a.metrics.get("query_fanout_batches") == 1
+    eng_a.close()
+    eng_b.close()
+
+
+def test_burst_delta_is_atomic_on_mid_burst_validation_failure():
+    """A malformed delta anywhere in a burst must reject the WHOLE burst:
+    no version bump, no band mutation, and live builders still serve the
+    pre-burst content (the review repro: a committed first delta with a
+    skipped leaf swap served stale losses under the new version)."""
+    rng = np.random.default_rng(14)
+    bands = [rng.normal(size=(16, 24)) for _ in range(2)]
+    eng = _engine()
+    for b in bands:
+        eng.ingest_band("s", b)
+    eng.get_coreset("s", 3, 0.3)                 # live builder
+    rects = np.array([[0, 32, 0, 24]])
+    before = eng.tree_loss("s", rects, [0.1], eps=0.3, k=3)
+    version0 = eng.signal("s").version
+    with pytest.raises(ValueError, match="does not start an ingested band"):
+        eng.ingest_delta("s", np.concatenate([rng.normal(size=(16, 24)),
+                                              rng.normal(size=(16, 24))]),
+                         row0s=[0, 3], rows=[16, 16])   # row0=3 misaligned
+    assert eng.signal("s").version == version0   # nothing committed
+    after = eng.tree_loss("s", rects, [0.1], eps=0.3, k=3)
+    assert after["loss"] == before["loss"]
+    assert after["fingerprint"] == before["fingerprint"]
+    eng.close()
+
+
+def test_burst_delta_rejects_rows_without_row0s():
+    eng = _engine()
+    eng.ingest_band("s", np.ones((16, 8)))
+    with pytest.raises(ValueError, match="rows requires row0s"):
+        eng.ingest_delta("s", np.ones((16, 8)), rows=[8, 8])
+    eng.close()

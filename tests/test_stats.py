@@ -1,9 +1,8 @@
 """PrefixStats: O(1) rectangle moments vs brute force; monotone opt1."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import PrefixStats, opt1_from_sums
+from repro.core import PrefixStats
 
 
 def brute_opt1(y, r0, r1, c0, c1, mask=None):

@@ -25,6 +25,7 @@ def test_adamw_decreases_quadratic():
     assert float(jnp.abs(params["w"]).max()) < 0.5
 
 
+@pytest.mark.slow   # multi-second training soak; `-m "not slow"` skips it
 def test_microbatch_grads_equivalent():
     cfg = dataclasses.replace(reduced_config(ARCHS["qwen2-0.5b"]),
                               dtype="float32", remat=False)
@@ -78,6 +79,7 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
     assert float(out["nested"]["b"]) == 7.0
 
 
+@pytest.mark.slow   # multi-second training soak; `-m "not slow"` skips it
 def test_train_resume_is_deterministic(tmp_path):
     """Crash at step 7, resume, final params == uninterrupted run."""
     from repro.launch.train import train_loop
