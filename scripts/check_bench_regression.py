@@ -10,6 +10,12 @@ Gated rows (lower is better, all wall-clock):
   bench_ops.json       <op>.numpy.us_per_call   per canonical op
   bench_service.json   <mode>.register_seconds  per wire mode present
 
+Absolute rows (gated against a fixed limit, not a baseline ratio):
+
+  bench_service.json   <mode>.tracing.overhead_frac < 0.05 — request
+  tracing must cost under 5% on the loss-query p50 (the A/B probe in
+  bench_service measures tracing-on vs tracing-off on the same server)
+
 Noise handling — micro-timings on shared boxes swing well past 25% run to
 run, so a single sample proves nothing:
 
@@ -41,6 +47,7 @@ BASELINES = ROOT / "benchmarks" / "baselines"
 # (file, row path resolver, floor) — a resolver yields (row name, value)
 _OPS_FLOOR_US = 500.0      # numpy per-call timings under 0.5 ms are noise
 _SVC_FLOOR_S = 0.005       # registration under 5 ms likewise
+_TRACING_OVERHEAD_MAX = 0.05   # spans must stay under 5% of loss-query p50
 
 
 def _ops_rows(doc: dict):
@@ -59,14 +66,27 @@ def _service_rows(doc: dict):
                 res["register_seconds"]), _SVC_FLOOR_S
 
 
+def _service_abs_rows(doc: dict):
+    """(row, value, absolute limit): rows gated by a fixed ceiling rather
+    than a baseline ratio.  Tracing overhead is a *fraction* already, so a
+    relative factor against a near-zero baseline would be meaningless."""
+    for mode, res in doc.items():
+        tracing = res.get("tracing") if isinstance(res, dict) else None
+        if isinstance(tracing, dict) and "overhead_frac" in tracing:
+            yield (f"{mode}.tracing.overhead_frac",
+                   float(tracing["overhead_frac"]), _TRACING_OVERHEAD_MAX)
+
+
 _SUITES = {
     "ops": ("bench_ops.json", _ops_rows,
-            [[sys.executable, "-m", "benchmarks.bench_ops", "--fast"]]),
+            [[sys.executable, "-m", "benchmarks.bench_ops", "--fast"]],
+            None),
     "service": ("bench_service.json", _service_rows,
                 [[sys.executable, "benchmarks/bench_service.py", "--smoke",
                   "--encoding", "json"],
                  [sys.executable, "benchmarks/bench_service.py", "--smoke",
-                  "--encoding", "binary"]]),
+                  "--encoding", "binary"]],
+                _service_abs_rows),
 }
 
 
@@ -82,7 +102,7 @@ def _rerun(suite: str) -> None:
 def _check_suite(suite: str, factor: float, best: dict) -> list[str]:
     """One comparison pass; ``best`` accumulates the per-row minimum over
     every fresh run seen so far."""
-    fname, rows_of, _ = _SUITES[suite]
+    fname, rows_of, _, abs_rows_of = _SUITES[suite]
     fresh = json.loads((RESULTS / fname).read_text())
     for name, val, _ in rows_of(fresh):
         best[name] = min(val, best.get(name, val))
@@ -108,6 +128,16 @@ def _check_suite(suite: str, factor: float, best: dict) -> list[str]:
     if compared == 0:
         print(f"[bench_regression] WARN {suite}: no gated rows above "
               f"the noise floor — gate vacuous")
+    if abs_rows_of is not None:
+        # absolute rows: same best-of-remeasures discipline, fixed ceiling
+        for name, val, limit in abs_rows_of(fresh):
+            best[name] = min(val, best.get(name, val))
+            val = best[name]
+            status = "FAIL" if val > limit else "ok"
+            print(f"[bench_regression] {suite}:{name} best-fresh={val:.4f} "
+                  f"(absolute limit {limit}) {status}")
+            if val > limit:
+                failures.append(f"{suite}:{name} {val:.3f} > {limit}")
     return failures
 
 

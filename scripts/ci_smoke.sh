@@ -17,6 +17,10 @@
 #   coalesce  cross-request query coalescing gate: 16 concurrent same-signal
 #             loss queries must fuse into <= 4 scoring dispatches with
 #             per-request losses <= 1e-9 off the uncoalesced path
+#   trace     end-to-end tracing gate: traceparent propagation, span
+#             taxonomy (http -> scheduler wait -> linked fused dispatch ->
+#             ops.dispatch), >= 80% root coverage, shared fused-trace
+#             linking under a concurrent burst, valid Chrome export
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -137,7 +141,12 @@ stage_coalesce() {
   python scripts/coalesce_gate.py
 }
 
-ALL_STAGES=(lint tests ops delta service coalesce)
+stage_trace() {
+  echo "== end-to-end tracing gate =="
+  python scripts/trace_gate.py
+}
+
+ALL_STAGES=(lint tests ops delta service coalesce trace)
 # bash 3.2 (macOS) treats an empty array as unbound under set -u, so pick
 # the default stage list off $# instead of the array length
 if [ $# -eq 0 ]; then
@@ -148,7 +157,7 @@ fi
 
 for stage in "${STAGES[@]}"; do
   case "$stage" in
-    lint|tests|ops|delta|service|coalesce) "stage_${stage}" ;;
+    lint|tests|ops|delta|service|coalesce|trace) "stage_${stage}" ;;
     *) echo "[ci_smoke] unknown stage '${stage}' (known: ${ALL_STAGES[*]})" >&2
        exit 2 ;;
   esac

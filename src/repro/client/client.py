@@ -16,6 +16,12 @@ exponential backoff up to ``retries`` times; structured API errors
 (status < 500 with the v1 envelope) raise ``CoresetAPIError(http, code,
 message)`` immediately and never retry.
 
+Every request carries a client-minted W3C ``traceparent`` header, so the
+server-side trace of a call IS the client's trace id: after any call,
+``client.last_trace_id`` names the trace ``client.trace(...)`` retrieves,
+and a ``CoresetAPIError`` carries the failing request's ``trace_id`` —
+the server-side story of an error is one GET away.
+
     from repro.client import CoresetClient
     c = CoresetClient("http://127.0.0.1:8787")
     c.register_signal("img", values=y)
@@ -31,19 +37,25 @@ import urllib.request
 
 import numpy as np
 
+from repro import obs
 from repro.service import protocol as P
 
 __all__ = ["CoresetClient", "CoresetAPIError", "TransportError"]
 
 
 class CoresetAPIError(Exception):
-    """Structured error from the service's uniform v1 envelope."""
+    """Structured error from the service's uniform v1 envelope.
+    ``trace_id`` (when the server returned one) names the server-side trace
+    of the failing request — ``client.trace(err.trace_id)`` fetches it."""
 
-    def __init__(self, http: int, code: str, message: str):
-        super().__init__(f"[{http} {code}] {message}")
+    def __init__(self, http: int, code: str, message: str,
+                 trace_id: str | None = None):
+        tail = f" [trace {trace_id}]" if trace_id else ""
+        super().__init__(f"[{http} {code}] {message}{tail}")
         self.http = http
         self.code = code
         self.message = message
+        self.trace_id = trace_id
 
 
 class TransportError(Exception):
@@ -72,6 +84,11 @@ class CoresetClient:
         # request-frame codec: None = best this host encodes; negotiated
         # down to "zlib" if the server 415s a zstd frame
         self._codec: str | None = None
+        # trace propagation: every request carries a minted traceparent,
+        # and these name the LAST request's trace (the server echoes the
+        # trace id back in X-Coreset-Trace-Id, so both sides agree)
+        self.last_traceparent: str | None = None
+        self.last_trace_id: str | None = None
 
     def _deadline(self, deadline_ms: float | None) -> float | None:
         ms = deadline_ms if deadline_ms is not None else self.deadline_ms
@@ -91,18 +108,39 @@ class CoresetClient:
         headers = {"Accept": accept}
         if content_type is not None:
             headers["Content-Type"] = content_type
+        # W3C trace propagation: the server continues THIS trace id, so the
+        # server-side trace of the call is retrievable under an id the
+        # client chose (one fresh id per attempt — retries are new traces)
+        trace_id = obs.mint_trace_id()
+        tp = obs.format_traceparent(trace_id, obs.mint_span_id())
+        headers["traceparent"] = tp
+        self.last_traceparent = tp
+        self.last_trace_id = trace_id
         req = urllib.request.Request(self.base_url + path, data=body,
                                      headers=headers, method=method)
         with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+            self._note_trace(resp.headers)
             return resp.status, resp.headers.get("Content-Type", ""), resp.read()
 
-    def _raise_api_error(self, http: int, ctype: str, raw: bytes):
+    def _note_trace(self, headers) -> str | None:
+        """Record the server's trace id for the last request (it normally
+        equals the minted one; a proxy or non-tracing server may differ)."""
+        tid = headers.get("X-Coreset-Trace-Id") if headers is not None else None
+        if tid:
+            self.last_trace_id = tid
+        return tid
+
+    def _raise_api_error(self, http: int, ctype: str, raw: bytes,
+                         trace_id: str | None = None):
+        trace_id = trace_id or self.last_trace_id
         try:
             env = P.decode(ctype, raw, expect=P.ErrorResponse)
-            raise CoresetAPIError(http, env.error.code, env.error.message)
+            raise CoresetAPIError(http, env.error.code, env.error.message,
+                                  trace_id)
         except P.ProtocolError:
             raise CoresetAPIError(http, "unknown",
-                                  raw[:512].decode("utf-8", "replace")) from None
+                                  raw[:512].decode("utf-8", "replace"),
+                                  trace_id) from None
 
     def _call(self, path: str, msg: P._Wire, expect: type,
               retryable: bool = True):
@@ -116,6 +154,7 @@ class CoresetClient:
                 status, rtype, raw = self._request("POST", path, body, ctype)
             except urllib.error.HTTPError as exc:
                 raw = exc.read()
+                err_tid = self._note_trace(exc.headers)
                 if exc.code == 415 and self.encoding == "binary":
                     # format mismatches are not transient failures, so the
                     # renegotiation retries spend no budget slots: first
@@ -136,7 +175,8 @@ class CoresetClient:
                     # raise immediately: a missed deadline is the answer,
                     # not a transient fault to retry against a fresh budget
                     self._raise_api_error(
-                        exc.code, exc.headers.get("Content-Type", ""), raw)
+                        exc.code, exc.headers.get("Content-Type", ""), raw,
+                        trace_id=err_tid)
             except (urllib.error.URLError, TimeoutError, ConnectionError,
                     OSError) as exc:
                 last = TransportError(f"{type(exc).__name__}: {exc}")
@@ -302,3 +342,18 @@ class CoresetClient:
     def metrics_text(self) -> str:
         _, _, raw = self._request("GET", "/v1/metrics", None, None)
         return raw.decode()
+
+    def traces_recent(self, limit: int = 50) -> list[dict]:
+        """Newest-first summaries of the server's completed traces."""
+        return self._get_json(f"/v1/traces:recent?limit={int(limit)}")["traces"]
+
+    def trace(self, trace_id: str | None = None, *,
+              format: str | None = None) -> dict:
+        """Fetch one server-side trace (default: the LAST request's —
+        ``last_trace_id``).  ``format="chrome"`` returns Chrome trace-event
+        JSON that Perfetto / chrome://tracing load directly."""
+        tid = trace_id or self.last_trace_id
+        if not tid:
+            raise ValueError("no trace_id given and no request made yet")
+        suffix = "?format=chrome" if format == "chrome" else ""
+        return self._get_json(f"/v1/trace/{tid}{suffix}")

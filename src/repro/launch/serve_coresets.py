@@ -173,6 +173,15 @@ def main() -> None:
                          "queue (the batched kernel's T tile)")
     ap.add_argument("--no-coalesce", action="store_true",
                     help="disable cross-request query coalescing engine-wide")
+    ap.add_argument("--no-tracing", action="store_true",
+                    help="disable request tracing (spans, /v1/trace/*)")
+    ap.add_argument("--access-log", metavar="PATH", default=None,
+                    help="JSON-lines access log: one object per request "
+                         "(method, path, status, duration_ms, trace_id); "
+                         "'-' = stderr.  Off by default")
+    ap.add_argument("--slow-ms", type=float, default=None,
+                    help="with --access-log, only log requests taking at "
+                         "least this many milliseconds (slow-request log)")
     ap.add_argument("--smoke", action="store_true",
                     help="self-check with concurrent SDK clients, then exit")
     args = ap.parse_args()
@@ -180,16 +189,28 @@ def main() -> None:
     if args.smoke:
         sys.exit(run_smoke())
 
+    if args.no_tracing:
+        from repro import obs
+        obs.set_enabled(False)
+    access_fp = None
+    if args.access_log is not None:
+        access_fp = (sys.stderr if args.access_log == "-"
+                     else open(args.access_log, "a", buffering=1))
+    elif args.slow_ms is not None:
+        ap.error("--slow-ms requires --access-log")
+
     engine = CoresetEngine(cache_bytes=args.cache_mb << 20,
                            workers=args.workers, num_bands=args.num_bands,
                            query_window=args.query_window_ms / 1e3,
                            query_max_fuse=args.query_max_fuse,
                            coalesce=not args.no_coalesce)
-    srv = make_server(engine, host=args.host, port=args.port)
+    srv = make_server(engine, host=args.host, port=args.port,
+                      access_log=access_fp, slow_ms=args.slow_ms)
     print(f"[serve_coresets] listening on http://{args.host}:"
           f"{srv.server_address[1]}  (v1: POST /v1/signals /v1/ingest "
           f"/v1/build /v1/query/loss /v1/query/loss:batch /v1/query/fit "
-          f"/v1/query/compress; GET /v1/healthz /v1/stats /v1/metrics; "
+          f"/v1/query/compress; GET /v1/healthz /v1/stats /v1/metrics "
+          f"/v1/traces:recent /v1/trace/{{id}}; "
           f"legacy unversioned routes deprecated)")
     try:
         srv.serve_forever()
@@ -198,6 +219,8 @@ def main() -> None:
     finally:
         srv.shutdown()
         engine.close()
+        if access_fp is not None and access_fp is not sys.stderr:
+            access_fp.close()
 
 
 if __name__ == "__main__":

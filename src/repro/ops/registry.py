@@ -37,7 +37,11 @@ import contextlib
 import functools
 import os
 import threading
+import time
 from typing import Callable
+
+from repro.obs import profile as _profile
+from repro.obs import trace as _trace
 
 __all__ = [
     "OPS", "BACKENDS", "ENV_VAR", "BackendError", "register",
@@ -174,8 +178,26 @@ def resolve(op: str, backend: str | None = None,
 
 def dispatch(op: str, *args, backend: str | None = None,
              size: int | None = None, **kw):
-    _, fn = resolve(op, backend, size)
-    return fn(*args, **kw)
+    name, fn = resolve(op, backend, size)
+    # observability seam: every backend call crosses this line, so this is
+    # where per-(op, backend, shape) wall time becomes a span + a profile
+    # sample.  Outside a trace the span is the NOOP singleton and with no
+    # hooks installed the profile branch is one falsy check — the pure-
+    # library hot paths (per-node hist_split) pay two perf_counter reads.
+    span = _trace.TRACER.child_span("ops.dispatch")
+    t0 = time.perf_counter()
+    try:
+        return fn(*args, **kw)
+    finally:
+        dt = time.perf_counter() - t0
+        if span:
+            span.set_attr("op", op)
+            span.set_attr("backend", name)
+            span.set_attr("size", size)
+            span.set_attr("shape_bucket", _profile.shape_bucket(size))
+            span.end()
+        if _profile._HOOKS:
+            _profile.record(op, name, size, dt)
 
 
 @contextlib.contextmanager

@@ -19,6 +19,17 @@ JSON and the binary npz frame via ``Content-Type`` / ``Accept``):
   GET  /v1/healthz            liveness + basic gauges (JSON)
   GET  /v1/stats              full JSON snapshot (signals, cache, latency)
   GET  /v1/metrics            Prometheus text exposition
+  GET  /v1/traces:recent      newest-first completed-trace summaries (?limit=)
+  GET  /v1/trace/{id}         one trace + linked traces (?format=chrome for
+                              Perfetto-loadable trace-event JSON)
+
+Every request runs under a trace: the handler continues the caller's W3C
+``traceparent`` when one arrives (the SDK injects it) or mints a fresh
+trace, and every response carries ``traceparent`` + ``X-Coreset-Trace-Id``
+headers so clients can fetch the server-side trace of any response —
+including errors.  An optional JSON-lines access log (``make_server``'s
+``access_log``/``slow_ms``, off by default) records one line per request
+(or per slow request) with its trace id.
 
 Every status >= 400 carries the uniform envelope
 ``{"type": "error", "error": {"code", "message"}}`` with code in
@@ -44,8 +55,11 @@ import json
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs
 
 import numpy as np
+
+from repro import obs
 
 from . import protocol as P
 from .engine import CoresetEngine, UnknownSignalError
@@ -323,8 +337,14 @@ def _legacy_payload(resp: P._Wire) -> dict:
 class _Handler(BaseHTTPRequestHandler):
     engine: CoresetEngine  # set by make_server on the subclass
     protocol_version = "HTTP/1.1"
+    access_log = None      # file-like; make_server sets it (None = off)
+    slow_ms: float | None = None   # only log requests slower than this
+    _log_lock: threading.Lock = threading.Lock()
+    _span = None           # this request's root span (per-request, set early)
+    _status = 0
 
-    # silence per-request stderr logging; metrics carry the signal
+    # silence per-request stderr logging; the access log (opt-in) and
+    # metrics carry the signal
     def log_message(self, fmt, *args):  # noqa: D102
         pass
 
@@ -336,9 +356,17 @@ class _Handler(BaseHTTPRequestHandler):
             # JSON abort) — reusing the keep-alive connection would parse the
             # leftover bytes as the next request line; close instead
             self.close_connection = True
+        self._status = code
         self.send_response(code)
         self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
+        sp = self._span
+        if sp is not None:
+            # every response — errors included — names its server-side
+            # trace, so a client can always fetch /v1/trace/{id}
+            self.send_header("traceparent",
+                             obs.format_traceparent(sp.trace_id, sp.span_id))
+            self.send_header("X-Coreset-Trace-Id", sp.trace_id)
         if deprecated_for is not None:
             self.send_header("Deprecation", "true")
             self.send_header("Link",
@@ -390,40 +418,55 @@ class _Handler(BaseHTTPRequestHandler):
     # -------------------------------------------------------------- routing
     def _route(self, method: str) -> None:
         eng = self.engine
-        path = self.path.split("?", 1)[0].rstrip("/") or "/"
+        path, _, query = self.path.partition("?")
+        path = path.rstrip("/") or "/"
         t0 = time.perf_counter()
         # latency metric label: client-supplied paths outside the route table
         # collapse to one bucket, else a URL scanner grows a histogram per
-        # probed path and bloats every /metrics scrape
-        metric_route = (f"{method} {path}" if path in _ROUTES
-                        else f"{method} <unmatched>")
+        # probed path and bloats every /metrics scrape; the dynamic trace
+        # route collapses its id for the same reason
+        if path in _ROUTES or path == "/v1/traces:recent":
+            metric_route = f"{method} {path}"
+        elif path.startswith("/v1/trace/"):
+            metric_route = f"{method} /v1/trace/{{id}}"
+        else:
+            metric_route = f"{method} <unmatched>"
         successor = _LEGACY.get(path)      # non-None => deprecated shim
         v1_path = successor or path
         out_enc = self._accept_encoding()
+        # continue the caller's trace (SDK-injected traceparent) or mint one
+        root = obs.start_trace(metric_route,
+                               traceparent=self.headers.get("traceparent"))
+        self._span = root if root else None
+        self._status = 0
         try:
-            if method == "GET" and v1_path in _V1_GET:
-                self._get(eng, v1_path, successor)
-            elif method == "POST" and v1_path in _V1_POST:
-                msg_cls, handler = _V1_POST[v1_path]
-                raw = self._body()
-                if successor is not None:
-                    # legacy flat-dict schema; JSON only, like the old API
-                    msg = _legacy_to_msg(path, json.loads(raw or b"{}"))
-                    resp = handler(eng, msg)
-                    self._reply_json(200, _legacy_payload(resp),
-                                     deprecated_for=successor)
+            with obs.attach(root):
+                if method == "GET" and v1_path in _V1_GET:
+                    self._get(eng, v1_path, successor)
+                elif method == "GET" and (path == "/v1/traces:recent"
+                                          or path.startswith("/v1/trace/")):
+                    self._get_trace(path, query)
+                elif method == "POST" and v1_path in _V1_POST:
+                    msg_cls, handler = _V1_POST[v1_path]
+                    raw = self._body()
+                    if successor is not None:
+                        # legacy flat-dict schema; JSON only, like the old API
+                        msg = _legacy_to_msg(path, json.loads(raw or b"{}"))
+                        resp = handler(eng, msg)
+                        self._reply_json(200, _legacy_payload(resp),
+                                         deprecated_for=successor)
+                    else:
+                        ctype = self.headers.get("Content-Type", "")
+                        if (ctype.split(";")[0].strip().lower() not in
+                                ("", P.CONTENT_TYPE_JSON, P.CONTENT_TYPE_BINARY)):
+                            raise ApiError(415, "unsupported_media",
+                                           f"unsupported Content-Type {ctype!r}")
+                        msg = P.decode(ctype, raw, expect=msg_cls)
+                        self._reply_msg(200, handler(eng, msg), out_enc)
                 else:
-                    ctype = self.headers.get("Content-Type", "")
-                    if (ctype.split(";")[0].strip().lower() not in
-                            ("", P.CONTENT_TYPE_JSON, P.CONTENT_TYPE_BINARY)):
-                        raise ApiError(415, "unsupported_media",
-                                       f"unsupported Content-Type {ctype!r}")
-                    msg = P.decode(ctype, raw, expect=msg_cls)
-                    self._reply_msg(200, handler(eng, msg), out_enc)
-            else:
-                eng.metrics.inc("http_404")
-                self._error(404, "not_found", f"no route {method} {path}")
-                return
+                    eng.metrics.inc("http_404")
+                    self._error(404, "not_found", f"no route {method} {path}")
+                    return
             eng.metrics.inc("http_200")
             if successor is not None:
                 eng.metrics.inc("http_deprecated")
@@ -458,8 +501,72 @@ class _Handler(BaseHTTPRequestHandler):
             self._error(500, "internal", f"{type(exc).__name__}: {exc}",
                         successor)
         finally:
-            eng.metrics.observe(f"http {metric_route}",
-                                time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            if root:
+                root.set_attr("http.status", self._status)
+                root.end()
+            self._span = None
+            # exemplar: a slow bucket in the latency histogram names a
+            # concrete retrievable trace instead of an anonymous aggregate
+            eng.metrics.observe(f"http {metric_route}", dt,
+                                exemplar=root.trace_id if root else None)
+            self._access_log_line(method, path, dt,
+                                  root.trace_id if root else None)
+
+    def _access_log_line(self, method: str, path: str, dt: float,
+                         trace_id: str | None) -> None:
+        """One structured JSON line per request (or per slow request when
+        ``slow_ms`` filters) — opt-in, see ``make_server``."""
+        fp = self.access_log
+        if fp is None:
+            return
+        dur_ms = dt * 1e3
+        slow = self.slow_ms is not None and dur_ms >= self.slow_ms
+        if self.slow_ms is not None and not slow:
+            return
+        rec = {"ts": round(time.time(), 6), "method": method, "path": path,
+               "status": self._status, "duration_ms": round(dur_ms, 3)}
+        if trace_id:
+            rec["trace_id"] = trace_id
+        if slow:
+            rec["slow"] = True
+        line = json.dumps(rec) + "\n"
+        try:
+            with self._log_lock:   # interleaved lines from handler threads
+                fp.write(line)
+                fp.flush()
+        except (OSError, ValueError):   # closed/full log must not 500 requests
+            pass
+
+    def _get_trace(self, path: str, query: str) -> None:
+        """The trace-retrieval routes (JSON only; ids are dynamic path
+        segments, so these live outside the static route table)."""
+        params = parse_qs(query)
+        if path == "/v1/traces:recent":
+            try:
+                limit = int(params.get("limit", ["50"])[0])
+            except ValueError:
+                raise ApiError(400, "bad_request",
+                               "limit must be an integer") from None
+            self._reply_json(200, {"traces": obs.TRACER.recent(limit)})
+            return
+        trace_id = path[len("/v1/trace/"):]
+        fmt = params.get("format", ["json"])[0]
+        if fmt == "chrome":
+            body = obs.TRACER.chrome_json(trace_id)
+            if body is None:
+                raise ApiError(404, "not_found",
+                               f"unknown trace {trace_id!r}")
+            self._reply_json(200, body)
+            return
+        if fmt != "json":
+            raise ApiError(400, "bad_request",
+                           f"unknown trace format {fmt!r} "
+                           "(expected json or chrome)")
+        doc = obs.TRACER.get(trace_id)
+        if doc is None:
+            raise ApiError(404, "not_found", f"unknown trace {trace_id!r}")
+        self._reply_json(200, doc)
 
     def _get(self, eng: CoresetEngine, v1_path: str,
              successor: str | None) -> None:
@@ -488,9 +595,20 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 def make_server(engine: CoresetEngine, host: str = "127.0.0.1",
-                port: int = 0) -> ThreadingHTTPServer:
-    """Bind a ThreadingHTTPServer to (host, port); port 0 = ephemeral."""
-    handler = type("CoresetHandler", (_Handler,), {"engine": engine})
+                port: int = 0, *, access_log=None,
+                slow_ms: float | None = None) -> ThreadingHTTPServer:
+    """Bind a ThreadingHTTPServer to (host, port); port 0 = ephemeral.
+
+    ``access_log`` (a writable text file object, e.g. an opened path or
+    ``sys.stderr``) turns on the JSON-lines access log: one object per
+    request with method, path, status, duration_ms and trace_id.
+    ``slow_ms`` filters it to requests at or above that duration — the
+    slow-request log.  Both default off; the handler never logs otherwise.
+    """
+    handler = type("CoresetHandler", (_Handler,), {
+        "engine": engine, "access_log": access_log,
+        "slow_ms": float(slow_ms) if slow_ms is not None else None,
+        "_log_lock": threading.Lock()})
     srv = ThreadingHTTPServer((host, port), handler)
     srv.daemon_threads = True
     return srv

@@ -25,7 +25,7 @@ import time
 
 import numpy as np
 
-from repro import ops
+from repro import obs, ops
 from repro.core.coreset import SignalCoreset, signal_coreset, signal_coreset_to_size
 from repro.core.sharded import fitting_loss_batched, sharded_coreset
 from repro.core.streaming import StreamingBuilder
@@ -280,6 +280,24 @@ class CoresetEngine:
         self._forests: "collections.OrderedDict[tuple, tuple]" = \
             collections.OrderedDict()
         self._forests_lock = threading.Lock()
+
+        # ops-dispatch profiling: the registry's hook seam feeds per-(op,
+        # backend, shape-bucket) wall time into THIS engine's metrics, so
+        # /metrics and /v1/stats show where dispatches actually go and what
+        # they cost — including dispatches made from library code the engine
+        # never sees directly (per-band builds, streaming recompression)
+        def _on_dispatch(op: str, backend: str, size, seconds: float,
+                         _m=self.metrics) -> None:
+            bucket = obs.profile.shape_bucket(size)
+            _m.inc("ops_dispatch_total", op=op, backend=backend,
+                   bucket=bucket)
+            sp = obs.current_span()
+            _m.observe("ops_dispatch", seconds, op=op, backend=backend,
+                       bucket=bucket,
+                       exemplar=sp.trace_id if sp else None)
+
+        self._profile_hook = _on_dispatch
+        obs.profile.add_hook(self._profile_hook)
 
     # ---------------------------------------------------------------- ingest
     def register_signal(self, name: str, values: np.ndarray, *,
@@ -601,14 +619,28 @@ class CoresetEngine:
             raise ValueError("eps must be in (0,1)")
         st = self.signal(name)
         version = st.version
-        entry, kind = self.cache.lookup(name, version, k, eps)
-        if entry is not None:
-            return entry.coreset, entry.eps_eff, kind
-        key = (name, version, k, _eps_key(eps))
-        fut, created = self.scheduler.submit(
-            key, lambda: self._build_and_cache(st, version, k, eps),
-            deadline=deadline)
-        entry = fut.result(timeout=self._remaining(deadline, timeout))
+        with obs.span("coreset.get", signal=name, k=k) as sp:
+            # cache hits are the hot path: record the lookup as attrs on
+            # coreset.get and only materialize a cache.lookup span on a
+            # miss (the build path, already orders of magnitude slower)
+            t0 = time.perf_counter()
+            entry, kind = self.cache.lookup(name, version, k, eps)
+            if entry is not None:
+                sp.set_attr("disposition", kind)
+                sp.set_attr("lookup_us",
+                            round((time.perf_counter() - t0) * 1e6, 1))
+                return entry.coreset, entry.eps_eff, kind
+            lk = obs.child_span("cache.lookup",
+                                attrs={"outcome": "miss"})
+            if lk:
+                lk.start_pc = t0
+                lk.end()
+            key = (name, version, k, _eps_key(eps))
+            fut, created = self.scheduler.submit(
+                key, lambda: self._build_and_cache(st, version, k, eps),
+                deadline=deadline)
+            entry = fut.result(timeout=self._remaining(deadline, timeout))
+            sp.set_attr("disposition", "built" if created else "coalesced")
         return entry.coreset, entry.eps_eff, "built" if created else "coalesced"
 
     def _build_and_cache(self, st: SignalState, version: str, k: int,
@@ -624,10 +656,12 @@ class CoresetEngine:
         # and returns the version its coreset actually corresponds to
         with st.lock:
             streamed = st.streamed
-        if streamed:
-            cs, eps_eff, version = self._build_streamed(st, k, eps)
-        else:
-            cs, eps_eff, version = self._build_dense(st, k, eps)
+        with obs.span("engine.compress", signal=st.name, k=k,
+                      streamed=streamed):
+            if streamed:
+                cs, eps_eff, version = self._build_streamed(st, k, eps)
+            else:
+                cs, eps_eff, version = self._build_dense(st, k, eps)
         entry = CacheEntry(
             signal=st.name, version=version, k=k, eps=eps, eps_eff=eps_eff,
             coreset=cs, nbytes=cs.nbytes, fingerprint=cs.fingerprint(),
@@ -708,7 +742,9 @@ class CoresetEngine:
         if seg_rects.shape[0] != seg_labels.shape[0]:
             raise ValueError("rects/labels length mismatch")
         k = int(k) if k is not None else int(seg_rects.shape[0])
-        with self.metrics.timed("query_loss"):
+        with obs.span("engine.tree_loss", signal=name, k=k,
+                      coalesce=bool(coalesce and self.coalesce_queries)), \
+                self.metrics.timed("query_loss"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
                                                 deadline=deadline)
             fp = cs.fingerprint()   # hashes the coreset arrays: once per query
@@ -776,7 +812,9 @@ class CoresetEngine:
         if seg_rects.shape[0] < 1:
             raise ValueError("batch must contain at least one segmentation")
         k = int(k) if k is not None else int(seg_rects.shape[1])
-        with self.metrics.timed("query_loss_batch"):
+        with obs.span("engine.tree_loss_batch", signal=name, k=k,
+                      batch=int(seg_rects.shape[0])), \
+                self.metrics.timed("query_loss_batch"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
                                                 deadline=deadline)
             if self.mesh is not None:
@@ -807,7 +845,8 @@ class CoresetEngine:
                    deadline: float | None = None) -> dict:
         """Train a weighted random forest on the coreset points (§5 solver
         stand-in); optionally evaluate it at ``predict`` (P, 2) grid points."""
-        with self.metrics.timed("query_fit"):
+        with obs.span("engine.fit_forest", signal=name, k=int(k)), \
+                self.metrics.timed("query_fit"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
                                                 deadline=deadline)
             fkey = (cs.fingerprint(), int(n_estimators),
@@ -854,7 +893,8 @@ class CoresetEngine:
         signals only — it re-runs the partition, so it bypasses the cache);
         otherwise the cached (k, eps)-coreset is served.
         """
-        with self.metrics.timed("query_compress"):
+        with obs.span("engine.compress_query", signal=name, k=int(k)), \
+                self.metrics.timed("query_compress"):
             if target_frac is not None:
                 st = self.signal(name)
                 with st.lock:
@@ -886,6 +926,7 @@ class CoresetEngine:
                     "window_s": self.queries.window,
                     "max_fuse": self.queries.max_fuse},
                 "ops_backends": ops.snapshot(),
+                "tracing": obs.TRACER.stats(),
                 "metrics": self.metrics.snapshot()}
 
     def close(self) -> None:
@@ -893,3 +934,4 @@ class CoresetEngine:
         # and ops dispatch, both of which outlive the schedulers
         self.queries.shutdown()
         self.scheduler.shutdown()
+        obs.profile.remove_hook(self._profile_hook)

@@ -51,6 +51,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
+
 from .metrics import ServiceMetrics
 
 __all__ = ["QueryScheduler", "DeadlineExceeded", "FUSED_SIZE_BOUNDS"]
@@ -67,9 +69,14 @@ class DeadlineExceeded(TimeoutError):
 
 
 class _Pending:
-    """One enqueued loss query: its tree plus where the answer goes."""
+    """One enqueued loss query: its tree plus where the answer goes.
+    ``span`` is the request trace's ``query.scheduler_wait`` span, opened at
+    enqueue on the submitting thread and ended when the answer (or the
+    deadline error) reaches the future — so the request trace shows exactly
+    how long it sat in the batching window, and carries the link to the
+    fused dispatch span it rode in."""
 
-    __slots__ = ("rects", "labels", "deadline", "future")
+    __slots__ = ("rects", "labels", "deadline", "future", "span")
 
     def __init__(self, rects: np.ndarray, labels: np.ndarray,
                  deadline: float | None):
@@ -77,6 +84,13 @@ class _Pending:
         self.labels = labels
         self.deadline = deadline
         self.future: _fut.Future = _fut.Future()
+        self.span = obs.child_span("query.scheduler_wait")
+
+    def finish_span(self, **attrs) -> None:
+        if self.span:
+            for k, v in attrs.items():
+                self.span.set_attr(k, v)
+            self.span.end()
 
 
 class _Bucket:
@@ -136,6 +150,7 @@ class QueryScheduler:
         item = _Pending(rects, labels, deadline)
         now = time.perf_counter()
         if deadline is not None and deadline <= now:
+            item.finish_span(outcome="deadline_expired_pre_enqueue")
             item.future.set_exception(DeadlineExceeded(
                 "deadline expired before the query was enqueued"))
             self.metrics.inc("query_deadline_expired")
@@ -206,6 +221,7 @@ class QueryScheduler:
         for it in bucket.items:
             if it.deadline is not None and it.deadline <= now:
                 # expired while queued: fail THIS request, serve the rest
+                it.finish_span(outcome="deadline_expired_in_window")
                 it.future.set_exception(DeadlineExceeded(
                     "deadline expired inside the batching window"))
                 self.metrics.inc("query_deadline_expired")
@@ -214,6 +230,20 @@ class QueryScheduler:
         if not live:
             return
         n = len(live)
+        # the fused dispatch is shared work with N parents, which a span
+        # tree cannot express: it gets its OWN trace, cross-linked both
+        # ways — every request's wait span links to the fused span, and the
+        # fused span links back to each request — so /v1/trace/{request}
+        # resolves straight to the batch it rode in (and vice versa)
+        req_ctxs = [it.span.context for it in live if it.span]
+        fused = obs.start_trace(
+            "query.fused_dispatch", links=req_ctxs,
+            attrs={"reason": reason, "batch_size": n}) if req_ctxs \
+            else obs.NOOP
+        if fused:
+            for it in live:
+                it.span.add_link(fused.context, kind="fused_dispatch")
+                it.span.set_attr("fused_trace_id", fused.trace_id)
         try:
             if n == 1:
                 rects3 = live[0].rects[None]
@@ -227,21 +257,32 @@ class QueryScheduler:
                 for i, it in enumerate(live):
                     rects3[i, :it.rects.shape[0]] = it.rects
                     labels2[i, :it.labels.shape[0]] = it.labels
-            losses = np.asarray(bucket.execute(rects3, labels2), np.float64)
+            # attach the fused span so the ops.dispatch span underneath
+            # nests in the fused trace, not in the flusher thread's void
+            with obs.attach(fused):
+                losses = np.asarray(bucket.execute(rects3, labels2),
+                                    np.float64)
             if losses.shape != (n,):
                 raise RuntimeError(
                     f"fused executor returned shape {losses.shape}, "
                     f"expected ({n},)")
         except BaseException as exc:
             self.metrics.inc("query_fused_failed")
+            if fused:
+                fused.set_attr("error", type(exc).__name__)
+                fused.end()
             for it in live:
+                it.finish_span(outcome="fused_dispatch_failed")
                 it.future.set_exception(exc)
             return
+        if fused:
+            fused.end()
         self.metrics.inc("query_fused_dispatches")
         self.metrics.inc("query_coalesced_total", n - 1)
         self.metrics.observe("query_fused_batch_size", n,
                              bounds=FUSED_SIZE_BOUNDS, unit="")
         for i, it in enumerate(live):
+            it.finish_span(outcome="ok", fused_batch_size=n)
             it.future.set_result((float(losses[i]), n))
 
     # ---------------------------------------------------------------- fanout

@@ -27,6 +27,8 @@ import threading
 import time
 from typing import Callable
 
+from repro import obs
+
 from .metrics import ServiceMetrics
 from .query_scheduler import DeadlineExceeded
 
@@ -84,8 +86,11 @@ class BuildScheduler:
                 self._deadlines[key] = deadline
             # enqueue under the lock: shutdown() also takes it before posting
             # the sentinel, so an accepted item can never land behind
-            # _SHUTDOWN and leave its future forever unresolved
-            self._queue.put((key, fn, fut, time.perf_counter()))
+            # _SHUTDOWN and leave its future forever unresolved.  The
+            # submitter's current span rides along: worker threads don't
+            # inherit contextvars, so the build span re-parents explicitly
+            self._queue.put((key, fn, fut, time.perf_counter(),
+                             obs.current_span()))
         self.metrics.inc("builds_enqueued")
         return fut, True
 
@@ -114,11 +119,12 @@ class BuildScheduler:
     def _dispatch(self, batch: list) -> None:
         self.metrics.inc("build_batches")
         self.metrics.inc("build_batch_items", len(batch))  # mean size = items/batches
-        for key, fn, fut, enq_t in batch:
+        for key, fn, fut, enq_t, parent in batch:
             self.metrics.observe("build_queue_wait", time.perf_counter() - enq_t)
-            self._pool.submit(self._run_one, key, fn, fut)
+            self._pool.submit(self._run_one, key, fn, fut, parent)
 
-    def _run_one(self, key: tuple, fn: Callable, fut: _fut.Future) -> None:
+    def _run_one(self, key: tuple, fn: Callable, fut: _fut.Future,
+                 parent=None) -> None:
         with self._lock:
             dl = self._deadlines.get(key)
             expired = dl is not None and time.perf_counter() > dl
@@ -130,23 +136,36 @@ class BuildScheduler:
                 # it starts a fresh build instead
                 self._pending.pop(key, None)
                 self._deadlines.pop(key, None)
+        span = obs.child_span("build.run", parent=parent,
+                              attrs={"key": str(key)})
         if expired:
             self.metrics.inc("builds_expired")
+            if span:
+                span.set_attr("outcome", "deadline_expired")
+                span.end()
             fut.set_exception(DeadlineExceeded(
                 "every waiter's deadline expired before the build started"))
             return
         if not fut.set_running_or_notify_cancel():
+            if span:
+                span.set_attr("outcome", "cancelled")
+                span.end()
             return
         try:
-            with self.metrics.timed("build"):
+            with obs.attach(span), self.metrics.timed("build"):
                 result = fn()
         except BaseException as exc:  # propagate to every coalesced waiter
             self.metrics.inc("builds_failed")
+            if span:
+                span.set_attr("outcome", type(exc).__name__)
             fut.set_exception(exc)
         else:
             self.metrics.inc("builds_completed")
+            if span:
+                span.set_attr("outcome", "ok")
             fut.set_result(result)
         finally:
+            span.end()
             with self._lock:
                 self._pending.pop(key, None)
                 self._deadlines.pop(key, None)

@@ -1,6 +1,8 @@
 """Coreset serving engine: dominance cache, scheduler, streamed ingest, HTTP."""
 import json
+import re
 import threading
+import time
 import urllib.error
 import urllib.request
 
@@ -527,6 +529,185 @@ def test_gdsf_clock_ages_out_untouched_entries():
         cache.lookup(f"c{i}", "v", 4, 0.3)   # keep the newest one hot
     assert cache.lookup("idle", "v", 4, 0.3) == (None, None)
     assert cache.stats()["clock"] > 0.0
+
+
+# ------------------------------------------- observability: /metrics grammar
+_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_LABEL_BODY = (r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\["\\n])*"')
+_TYPE_RE = re.compile(rf"^# TYPE ({_NAME}) (counter|histogram)$")
+_SAMPLE_RE = re.compile(
+    rf"^({_NAME})(\{{{_LABEL_BODY}(?:,{_LABEL_BODY})*\}})?"
+    r" (-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)"
+    rf'( # \{{trace_id="(?:[^"\\\n]|\\["\\n])*"\}}'
+    r" -?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)?$")
+_LE_RE = re.compile(r'le="([^"]*)"')
+
+
+def _check_prometheus_grammar(body: str):
+    """Strict line-by-line parse of a /metrics exposition body.  Returns
+    {family: type} after asserting: every line is a TYPE header or a
+    well-formed sample, one unique TYPE per family, samples contiguous
+    under their family's header, histogram bucket counts cumulative with
+    le="+Inf" equal to the _count sample."""
+    families: dict[str, str] = {}
+    closed: set = set()
+    current = None
+    buckets: dict[tuple, list] = {}
+    counts: dict[tuple, float] = {}
+    assert body.endswith("\n")
+    for line in body.splitlines():
+        m = _TYPE_RE.match(line)
+        if m:
+            fam, typ = m.groups()
+            assert fam not in families, f"duplicate # TYPE for {fam}"
+            if current is not None:
+                closed.add(current)
+            families[fam] = typ
+            current = fam
+            continue
+        m = _SAMPLE_RE.match(line)
+        assert m, f"malformed exposition line: {line!r}"
+        name, labels, value, exemplar = m.groups()
+        fam = name
+        for sfx in ("_bucket", "_sum", "_count"):
+            if name.endswith(sfx) and name[:-len(sfx)] in families:
+                fam = name[:-len(sfx)]
+                break
+        assert fam in families, f"sample {name!r} precedes its # TYPE"
+        assert fam == current, f"sample {name!r} outside its family block"
+        assert fam not in closed, f"family {fam} not contiguous"
+        if families[fam] == "histogram" and name.endswith("_bucket"):
+            assert exemplar is None or "trace_id=" in exemplar
+            le = _LE_RE.search(labels or "")
+            assert le, f"bucket sample without le label: {line!r}"
+            key = (fam, _LE_RE.sub("", labels or ""))
+            buckets.setdefault(key, []).append((le.group(1), float(value)))
+        elif families[fam] == "histogram" and name.endswith("_count"):
+            counts[(fam, labels or "")] = float(value)
+        else:
+            assert exemplar is None, f"exemplar on non-bucket line: {line!r}"
+    for (fam, labels), series in buckets.items():
+        vals = [v for _, v in series]
+        assert vals == sorted(vals), f"{fam}{labels} buckets not cumulative"
+        assert series[-1][0] == "+Inf", f"{fam}{labels} missing +Inf bucket"
+        ckey = (fam, labels.replace("{,", "{").replace(",}", "}")
+                .replace("{}", ""))
+        assert counts[ckey] == vals[-1], \
+            f"{fam}{labels}: +Inf bucket != _count"
+    return families
+
+
+def test_metrics_exposition_grammar_end_to_end():
+    eng, srv, base = _server()
+    try:
+        cl = CoresetClient(base)
+        cl.register_signal("s", values=_signal(15))
+        cl.build("s", 4, 0.3)
+        q = random_tree_segmentation(N, M, 4, np.random.default_rng(5))
+        cl.query_loss("s", q.rects, q.labels, eps=0.3)
+        body = cl.metrics_text()
+        families = _check_prometheus_grammar(body)
+        # the per-(op, backend, shape-bucket) dispatch families are present
+        assert families.get("coreset_ops_dispatch_total") == "counter"
+        assert families.get("coreset_ops_dispatch_seconds") == "histogram"
+        assert re.search(r'coreset_ops_dispatch_total\{[^}]*backend="', body)
+        assert re.search(r'coreset_ops_dispatch_total\{[^}]*bucket="le_2', body)
+        # latency histograms carry OpenMetrics exemplars with trace ids
+        assert re.search(r'_bucket\{[^}]*\} \d+ # \{trace_id="[0-9a-f]{32}"\}',
+                         body)
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_metrics_label_values_are_escaped():
+    m = ServiceMetrics()
+    hostile = 'x"y\\z\nw'
+    m.inc("labelled_total", op=hostile)
+    m.observe("labelled_lat", 0.01, op=hostile)
+    body = m.render()
+    _check_prometheus_grammar(body)     # hostile value must not break parse
+    assert '\\"y' in body and "\\\\z" in body and "\\nw" in body
+    assert "\nw" not in body.replace("\\nw", "")  # no raw newline leaked
+    from repro.service.metrics import escape_label_value
+    assert escape_label_value('a"b') == 'a\\"b'
+    assert escape_label_value("a\\b") == "a\\\\b"
+    assert escape_label_value("a\nb") == "a\\nb"
+    # backslash first: an escaped quote does not double-escape
+    assert escape_label_value('\\"') == '\\\\\\"'
+
+
+def test_uptime_uses_monotonic_clock():
+    m = ServiceMetrics()
+    # a wall-clock step (NTP, DST) must not affect uptime: started_at is
+    # display-only, uptime reads the monotonic clock
+    m.started_at = time.time() + 3600.0
+    u1 = m.uptime_s()
+    assert 0.0 <= u1 < 60.0
+    time.sleep(0.01)
+    u2 = m.snapshot()["uptime_s"]
+    assert u2 > u1
+
+
+# ------------------------------------------------ observability: HTTP traces
+def test_http_trace_retrieval_and_chrome_export():
+    eng, srv, base = _server()
+    try:
+        cl = CoresetClient(base)
+        cl.register_signal("s", values=_signal(16))
+        cl.build("s", 4, 0.3)
+        q = random_tree_segmentation(N, M, 4, np.random.default_rng(6))
+        cl.query_loss("s", q.rects, q.labels, eps=0.3)
+        tid = cl.last_trace_id
+        assert tid and len(tid) == 32
+        # the client's minted traceparent is the server-side trace id
+        assert cl.last_traceparent.split("-")[1] == tid
+        trace = cl.trace(tid)
+        names = [s["name"] for s in trace["spans"]]
+        assert "POST /v1/query/loss" in names
+        assert "engine.tree_loss" in names and "coreset.get" in names
+        # recent listing includes it, newest first
+        recent = cl.traces_recent(limit=5)
+        assert any(t["trace_id"] == tid for t in recent)
+        # chrome export parses and has complete events
+        chrome = cl.trace(tid, format="chrome")
+        assert any(e.get("ph") == "X" for e in chrome["traceEvents"])
+        # unknown id -> 404; bad format -> 400; bad limit -> 400
+        try:
+            cl.trace("0" * 32)
+            raise AssertionError("expected 404")
+        except CoresetAPIError as exc:
+            assert exc.http == 404
+        with urllib.request.urlopen(
+                base + f"/v1/trace/{tid}?format=chrome", timeout=30) as r:
+            assert json.loads(r.read())["traceEvents"]
+        for bad in (f"/v1/trace/{tid}?format=xml", "/v1/traces:recent?limit=x"):
+            try:
+                urllib.request.urlopen(base + bad, timeout=30).close()
+                raise AssertionError(f"expected 400 for {bad}")
+            except urllib.error.HTTPError as exc:
+                assert exc.code == 400
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_client_surfaces_trace_id_on_api_errors():
+    eng, srv, base = _server()
+    try:
+        cl = CoresetClient(base)
+        try:
+            cl.build("missing-signal", 4, 0.3)
+            raise AssertionError("expected CoresetAPIError")
+        except CoresetAPIError as exc:
+            assert exc.http == 404
+            assert exc.trace_id and len(exc.trace_id) == 32
+            assert f"[trace {exc.trace_id}]" in str(exc)
+            # the failed request's trace is itself retrievable
+            assert cl.trace(exc.trace_id)["root"].startswith("POST ")
+    finally:
+        srv.shutdown()
+        eng.close()
 
 
 # ------------------------------------------------- satellite: fingerprint API
