@@ -28,6 +28,12 @@ for CI to compare.
   python benchmarks/bench_service.py                      # binary, 10 s
   python benchmarks/bench_service.py --encoding json
   python benchmarks/bench_service.py --smoke              # 2 s (CI)
+  python benchmarks/bench_service.py --smoke --cluster    # distributed plane
+
+``--cluster`` swaps the single-host engine for the distributed serving
+plane — 3 in-process ShardWorkers behind a ClusterEngine coordinator — so
+the ``cluster`` row measures register-with-band-scatter and builds that
+gather/compose remote band coresets, on the same traffic mix.
 """
 from __future__ import annotations
 
@@ -194,14 +200,33 @@ def _time_registration(client, n: int, m: int, repeats: int = 3) -> float:
 
 def run(duration: float, clients: int, n: int, m: int, k_max: int,
         http: str | None, encoding: str, engine_mode: bool,
-        register_nm: tuple[int, int]) -> dict:
+        register_nm: tuple[int, int], cluster: bool = False) -> dict:
     metrics = ServiceMetrics()
     engine = None
     srv = None
+    worker_srvs: list = []
     if engine_mode:
         engine = CoresetEngine(workers=4, metrics=metrics)
         client_fac = lambda: _EngineClient(engine)  # noqa: E731
         mode = "engine"
+    elif cluster:
+        # the distributed plane: 3 in-process ShardWorkers behind a
+        # ClusterEngine coordinator, driven over HTTP like any other mode —
+        # the measured path includes band scatter on register and the
+        # gather/compose fan-in on every dense build
+        from repro.cluster import ClusterEngine, ShardWorker, make_worker_server
+        for i in range(3):
+            wsrv = make_worker_server(ShardWorker(worker_id=f"bench-w{i}"))
+            threading.Thread(target=wsrv.serve_forever, daemon=True).start()
+            worker_srvs.append(wsrv)
+        peer_urls = [f"http://127.0.0.1:{s.server_address[1]}"
+                     for s in worker_srvs]
+        engine = ClusterEngine(peer_urls, workers=4, metrics=metrics)
+        srv = make_server(engine)
+        serve_forever_in_thread(srv)
+        base = f"http://127.0.0.1:{srv.server_address[1]}"
+        client_fac = lambda: _SdkClient(base, encoding)  # noqa: E731
+        mode = "cluster"
     else:
         if http:
             base = http
@@ -312,6 +337,14 @@ def run(duration: float, clients: int, n: int, m: int, k_max: int,
                         "coalesced": snap.get("builds_coalesced", 0),
                         "forest_hits": snap.get("forest_cache_hit", 0)}
         out["loss_scoring_calls"] = snap.get("loss_scoring_calls", 0)
+        if cluster:
+            out["cluster"] = {
+                "workers": len(worker_srvs),
+                "gathers": snap.get("cluster_gathers", 0),
+                "bands_scattered": snap.get("cluster_bands_scattered", 0),
+                "degraded_builds": snap.get("cluster_degraded_builds", 0),
+                "band_cache_hits": snap.get("cluster_band_cache_hits", 0),
+            }
         # cross-request query coalescing: how many loss queries rode along
         # in someone else's dispatch, and the scoring calls the fusion saved
         loss_served = counts["loss"]
@@ -327,6 +360,9 @@ def run(duration: float, clients: int, n: int, m: int, k_max: int,
         srv.shutdown()
     if engine is not None:
         engine.close()
+    for wsrv in worker_srvs:
+        wsrv.shutdown()
+        wsrv.server_close()
     return out
 
 
@@ -364,6 +400,9 @@ def main() -> None:
                          "instead of booting one in-process")
     ap.add_argument("--engine", action="store_true",
                     help="bypass HTTP and drive the CoresetEngine directly")
+    ap.add_argument("--cluster", action="store_true",
+                    help="drive the distributed plane: 3 in-process "
+                         "ShardWorkers behind a ClusterEngine coordinator")
     ap.add_argument("--register-n", type=int, default=512,
                     help="rows of the registration-latency probe signal")
     ap.add_argument("--register-m", type=int, default=512,
@@ -374,10 +413,12 @@ def main() -> None:
     if args.smoke:
         args.duration, args.clients, args.n, args.m = 2.0, 4, 96, 64
 
+    if args.cluster and (args.engine or args.http):
+        ap.error("--cluster boots its own plane; drop --engine/--http")
     res = run(args.duration, args.clients, args.n, args.m, args.k,
               args.http, args.encoding, args.engine,
-              (args.register_n, args.register_m))
-    if args.http is None:
+              (args.register_n, args.register_m), cluster=args.cluster)
+    if args.http is None and not args.cluster:
         # tracing overhead A/B rides in the mode's result row (the results
         # file is keyed by mode and validated as such on merge)
         res["tracing"] = _tracing_probe(

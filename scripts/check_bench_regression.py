@@ -9,6 +9,10 @@ Gated rows (lower is better, all wall-clock):
 
   bench_ops.json       <op>.numpy.us_per_call   per canonical op
   bench_service.json   <mode>.register_seconds  per wire mode present
+  bench_service.json   cluster.register_seconds + cluster.loss.p50_ms
+                       (the ``cluster`` suite: loadgen over the distributed
+                       plane — register includes the band scatter, loss p50
+                       rides gather/compose-built coresets)
 
 Absolute rows (gated against a fixed limit, not a baseline ratio):
 
@@ -47,6 +51,7 @@ BASELINES = ROOT / "benchmarks" / "baselines"
 # (file, row path resolver, floor) — a resolver yields (row name, value)
 _OPS_FLOOR_US = 500.0      # numpy per-call timings under 0.5 ms are noise
 _SVC_FLOOR_S = 0.005       # registration under 5 ms likewise
+_LOSS_FLOOR_MS = 1.0       # loss p50s under 1 ms are scheduler noise
 _TRACING_OVERHEAD_MAX = 0.05   # spans must stay under 5% of loss-query p50
 
 
@@ -61,9 +66,26 @@ def _ops_rows(doc: dict):
 
 def _service_rows(doc: dict):
     for mode, res in doc.items():
+        if mode == "cluster":
+            continue        # gated by the dedicated cluster suite
         if isinstance(res, dict) and "register_seconds" in res:
             yield f"{mode}.register_seconds", float(
                 res["register_seconds"]), _SVC_FLOOR_S
+
+
+def _cluster_rows(doc: dict):
+    """Distributed-plane rows only: the ``cluster`` mode entry written by
+    ``bench_service.py --cluster``.  Register includes the band scatter to
+    3 workers; loss p50 is the query path over gather-composed coresets."""
+    res = doc.get("cluster")
+    if not isinstance(res, dict):
+        return
+    if "register_seconds" in res:
+        yield ("cluster.register_seconds", float(res["register_seconds"]),
+               _SVC_FLOOR_S)
+    loss = res.get("loss")
+    if isinstance(loss, dict) and "p50_ms" in loss:
+        yield "cluster.loss.p50_ms", float(loss["p50_ms"]), _LOSS_FLOOR_MS
 
 
 def _service_abs_rows(doc: dict):
@@ -87,6 +109,10 @@ _SUITES = {
                  [sys.executable, "benchmarks/bench_service.py", "--smoke",
                   "--encoding", "binary"]],
                 _service_abs_rows),
+    "cluster": ("bench_service.json", _cluster_rows,
+                [[sys.executable, "benchmarks/bench_service.py", "--smoke",
+                  "--cluster"]],
+                None),
 }
 
 
@@ -183,7 +209,7 @@ def check(which: str, factor: float, update: bool, retries: int) -> int:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("which", nargs="?", default="all",
-                    choices=("ops", "service", "all"))
+                    choices=("ops", "service", "cluster", "all"))
     ap.add_argument("--update", action="store_true",
                     help="refresh baselines from fresh results")
     ap.add_argument("--factor", type=float,

@@ -7,7 +7,7 @@
 #   lint      ruff check (skipped with a notice when ruff is absent)
 #   tests     tier-1 pytest suite
 #   ops       bench_ops backend sweep + batched-Pallas-vs-dense parity gate
-#             (<= 1e-4 relative) + real 2-device-mesh parity + bench_ops
+#             (<= 1e-4 relative) + real 8-device-mesh parity + bench_ops
 #             wall-clock regression gate vs benchmarks/baselines
 #   delta     delta-ingest gates (delta-vs-rebuild loss parity <= 1e-9,
 #             delta beats full re-ingest) + deprecation-warning-clean run
@@ -21,6 +21,11 @@
 #             taxonomy (http -> scheduler wait -> linked fused dispatch ->
 #             ops.dispatch), >= 80% root coverage, shared fused-trace
 #             linking under a concurrent burst, valid Chrome export
+#   cluster   distributed serving plane gate: 1 coordinator + 3 subprocess
+#             workers, bitwise fingerprint parity vs the single-host build,
+#             loss parity <= 1e-9, worker-kill -> degraded (200s, same
+#             bytes) -> same-port rejoin; then the cluster loadgen smoke +
+#             its wall-clock regression gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -56,7 +61,7 @@ if rel > 1e-4:
     sys.exit(f"[ci_smoke] FAIL: batched kernel off dense path by {rel:.2e} > 1e-4")
 EOF
 
-  echo "== mesh-sharded batched fitting loss (2 devices, forced host mesh) =="
+  echo "== mesh-sharded batched fitting loss (8 devices, forced host mesh) =="
   # the parity logic lives once, in the test (it spawns its own subprocess
   # with XLA_FLAGS); this step just runs it by name so a smoke log shows it
   python -m pytest -q tests/test_ops.py -k mesh_sharded
@@ -146,7 +151,18 @@ stage_trace() {
   python scripts/trace_gate.py
 }
 
-ALL_STAGES=(lint tests ops delta service coalesce trace)
+stage_cluster() {
+  echo "== distributed serving plane gate (1 coordinator + 3 workers) =="
+  python scripts/cluster_gate.py
+
+  echo "== bench_service cluster loadgen smoke (2s) =="
+  python benchmarks/bench_service.py --smoke --cluster
+
+  echo "== bench_service cluster wall-clock regression gate =="
+  python scripts/check_bench_regression.py cluster
+}
+
+ALL_STAGES=(lint tests ops delta service coalesce trace cluster)
 # bash 3.2 (macOS) treats an empty array as unbound under set -u, so pick
 # the default stage list off $# instead of the array length
 if [ $# -eq 0 ]; then
@@ -157,7 +173,7 @@ fi
 
 for stage in "${STAGES[@]}"; do
   case "$stage" in
-    lint|tests|ops|delta|service|coalesce|trace) "stage_${stage}" ;;
+    lint|tests|ops|delta|service|coalesce|trace|cluster) "stage_${stage}" ;;
     *) echo "[ci_smoke] unknown stage '${stage}' (known: ${ALL_STAGES[*]})" >&2
        exit 2 ;;
   esac

@@ -1,0 +1,199 @@
+#!/usr/bin/env python
+"""ci_smoke ``cluster`` gate: the distributed serving plane, end to end.
+
+Boots the cluster the way an operator would — 1 coordinator + 3 workers as
+SEPARATE PROCESSES via ``python -m repro.launch.serve_coresets --role ...``
+— drives the coordinator's full v1 API through the typed SDK, and asserts
+the invariants the plane is built on:
+
+  * a coreset gathered from 3 remote band builds is **bitwise
+    fingerprint-equal** to the single-host thread-pool build, and every
+    loss answer is within 1e-9 of the single-host engine;
+  * killing a worker degrades gracefully: requests keep answering 200
+    (never a 5xx storm), the composed coreset keeps the SAME fingerprint
+    (the coordinator rebuilds the orphaned band locally with the identical
+    tolerance), and only ``cluster.degraded_builds`` moves;
+  * restarting an EMPTY worker on the same port rejoins it: the
+    content-addressed no_band/stale_band heal re-assigns the slab, no new
+    degraded builds happen, and ``cluster.worker_rejoins`` ticks.
+
+Run:  python scripts/cluster_gate.py [--reprobe 0.5]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import threading
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.client import CoresetClient  # noqa: E402
+from repro.core.segmentation import random_tree_segmentation  # noqa: E402
+from repro.data.signals import piecewise_signal  # noqa: E402
+from repro.service import CoresetEngine  # noqa: E402
+
+N, M, K, EPS = 96, 64, 6, 0.3
+_URL_RE = re.compile(r"listening on (http://[\d.]+:\d+)")
+
+
+class _Proc:
+    """A serve_coresets subprocess plus a drain thread over its stdout."""
+
+    def __init__(self, role_args: list[str]):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                     if env.get("PYTHONPATH") else "")
+        self.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve_coresets", *role_args],
+            cwd=ROOT, env=env, stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True, bufsize=1)
+        self.lines: list[str] = []
+        self.url: str | None = None
+        threading.Thread(target=self._drain, daemon=True).start()
+
+    def _drain(self) -> None:
+        for line in self.proc.stdout:
+            self.lines.append(line)
+            m = _URL_RE.search(line)
+            if m and self.url is None:
+                self.url = m.group(1)
+
+    def wait_url(self, timeout: float = 60.0) -> str:
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < timeout:
+            if self.url:
+                return self.url
+            if self.proc.poll() is not None:
+                break
+            time.sleep(0.02)
+        raise RuntimeError("subprocess never reported its URL:\n"
+                           + "".join(self.lines))
+
+    def kill(self) -> None:
+        if self.proc.poll() is None:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait(timeout=10)
+
+
+def _port(url: str) -> int:
+    return int(url.rsplit(":", 1)[1])
+
+
+def _parity(client: CoresetClient, single: CoresetEngine, name: str,
+            y: np.ndarray, errors: list[str], *, queries: int = 4) -> None:
+    """Register + build + query ``name`` on both planes; any fingerprint or
+    loss divergence is appended to ``errors``."""
+    client.register_signal(name, values=y)
+    single.register_signal(name, y)
+    rb = client.build(name, K, EPS)
+    cs, _, _ = single.get_coreset(name, K, EPS)
+    if rb.fingerprint != cs.fingerprint():
+        errors.append(f"{name}: cluster fingerprint {rb.fingerprint[:12]} != "
+                      f"single-host {cs.fingerprint()[:12]}")
+    rng = np.random.default_rng(hash(name) % (1 << 31))
+    for _ in range(queries):
+        q = random_tree_segmentation(N, M, K, rng)
+        rc = client.query_loss(name, q.rects, q.labels, eps=EPS)
+        ls = single.tree_loss(name, q.rects, q.labels, eps=EPS)["loss"]
+        if abs(rc.loss - ls) > 1e-9:
+            errors.append(f"{name}: loss off single-host by "
+                          f"{abs(rc.loss - ls):.2e} > 1e-9")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reprobe", type=float, default=0.5,
+                    help="coordinator down-worker cooldown seconds")
+    ap.add_argument("--rpc-timeout", type=float, default=15.0)
+    args = ap.parse_args()
+
+    procs: list[_Proc] = []
+    single = CoresetEngine(num_bands=3, workers=4)
+    errors: list[str] = []
+    try:
+        workers = [_Proc(["--role", "worker", "--host", "127.0.0.1",
+                          "--port", "0", "--worker-id", f"gate-w{i}"])
+                   for i in range(3)]
+        procs += workers
+        peer_urls = [w.wait_url() for w in workers]
+        coord = _Proc(["--role", "coordinator", "--host", "127.0.0.1",
+                       "--port", "0", "--peers", ",".join(peer_urls),
+                       "--reprobe-s", str(args.reprobe),
+                       "--rpc-timeout", str(args.rpc_timeout)])
+        procs.append(coord)
+        base = coord.wait_url()
+        client = CoresetClient(base, retries=0)
+        print(f"[cluster_gate] coordinator {base}, workers "
+              f"{[_port(u) for u in peer_urls]}")
+
+        # ---- healthy plane: bitwise fingerprint + 1e-9 loss parity
+        _parity(client, single, "sig", piecewise_signal(N, M, K, seed=7),
+                errors)
+        st = client.stats()["cluster"]
+        if st["degraded_builds"] != 0:
+            errors.append(f"healthy build degraded {st['degraded_builds']}x")
+        if [p["up"] for p in st["peers"]] != [True] * 3:
+            errors.append(f"healthy plane reports down peers: {st['peers']}")
+        print(f"[cluster_gate] healthy: fingerprint parity OK, "
+              f"gathers={st['gathers']} degraded=0")
+
+        # ---- kill a worker: degrade, never 5xx, identical bytes
+        victim = workers[1]
+        victim_port = _port(peer_urls[1])
+        victim.kill()
+        _parity(client, single, "sig-degraded",
+                piecewise_signal(N, M, K, seed=8), errors, queries=6)
+        st = client.stats()["cluster"]
+        degraded = st["degraded_builds"]
+        if degraded < 1:
+            errors.append("worker killed but no degraded build recorded")
+        if all(p["up"] for p in st["peers"]):
+            errors.append("killed worker still reported up")
+        print(f"[cluster_gate] degraded: parity survives worker kill "
+              f"(degraded_builds={degraded}, all requests 200)")
+
+        # ---- rejoin: empty worker on the SAME port heals via re-assign
+        fresh = _Proc(["--role", "worker", "--host", "127.0.0.1",
+                       "--port", str(victim_port), "--worker-id", "gate-w1b"])
+        procs.append(fresh)
+        fresh.wait_url()
+        time.sleep(args.reprobe + 0.2)   # let the cooldown lapse
+        _parity(client, single, "sig-rejoin",
+                piecewise_signal(N, M, K, seed=9), errors)
+        st = client.stats()["cluster"]
+        if st["degraded_builds"] != degraded:
+            errors.append(f"rejoin still degraded: {st['degraded_builds']} "
+                          f"builds vs {degraded} before restart")
+        if st["worker_rejoins"] < 1:
+            errors.append("restarted worker never marked rejoined")
+        if not all(p["up"] for p in st["peers"]):
+            errors.append(f"rejoined plane reports down peers: {st['peers']}")
+        print(f"[cluster_gate] rejoin: worker back on :{victim_port}, "
+              f"rejoins={st['worker_rejoins']}, degraded stayed {degraded}")
+    except Exception as exc:  # noqa: BLE001
+        errors.append(f"{type(exc).__name__}: {exc}")
+    finally:
+        for p in procs:
+            p.kill()
+        single.close()
+
+    for e in errors:
+        print(f"[cluster_gate] FAIL: {e}")
+    print(f"[cluster_gate] {'PASS' if not errors else 'FAIL'}")
+    return 0 if not errors else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

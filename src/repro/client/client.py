@@ -287,9 +287,10 @@ class CoresetClient:
     def query_loss_batch(self, name: str, rects, labels, *,
                          k: int | None = None, eps: float | None = None,
                          deadline_ms: float | None = None,
-                         ) -> P.BatchLossResponse:
+                         coalesce: bool = True) -> P.BatchLossResponse:
         """Score T same-signal segmentations in ONE fused request:
-        ``rects`` (T, K, 4), ``labels`` (T, K)."""
+        ``rects`` (T, K, 4), ``labels`` (T, K).  ``coalesce=False`` skips
+        the server's cross-request fusion and dispatches the batch alone."""
         rects = np.asarray(rects, np.int64)
         labels = np.asarray(labels, np.float64)
         if rects.ndim != 3:
@@ -297,7 +298,7 @@ class CoresetClient:
         msg = P.BatchLossQuery(
             signal=P.SignalRef(name=name), rects=rects, labels=labels,
             spec=self._spec(k, eps, k_default=max(rects.shape[1], 1)),
-            deadline_ms=self._deadline(deadline_ms))
+            deadline_ms=self._deadline(deadline_ms), coalesce=coalesce)
         return self._call("/v1/query/loss:batch", msg, P.BatchLossResponse)
 
     def fit(self, name: str, k: int, eps: float = 0.2, *,

@@ -23,12 +23,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sharding import compat_set_mesh
+from repro.sharding import compat_set_mesh, compat_shard_map
 
 from .coreset import SignalCoreset, signal_coreset
 from .streaming import compose, recompress
 
-__all__ = ["sharded_coreset", "sat_pjit", "fitting_loss_batched"]
+__all__ = ["sharded_coreset", "shared_tolerance", "band_bounds", "sat_pjit",
+           "fitting_loss_batched"]
+
+
+def shared_tolerance(values: np.ndarray, k: int, eps: float,
+                     _stats=None) -> float:
+    """The global per-block opt1 cap (``tolerance_override``) shared across
+    band builds: one cheap greedy k-tree pass estimates sigma, and the
+    Lemma-14 budget ``eps^2 * sigma / k`` is split over intersected blocks
+    globally.  Extracted so every band-parallel caller — the thread-pool
+    path below and the cluster coordinator's scatter/gather — computes the
+    *identical* float (same op order), which is what keeps their composed
+    coresets bitwise fingerprint-equal.
+    """
+    from .segmentation import greedy_tree
+    from .fitting_loss import true_loss
+    from .stats import PrefixStats
+    y = np.asarray(values, np.float64)
+    ps = _stats if _stats is not None else PrefixStats.build(y)
+    g = greedy_tree(ps, k)
+    sigma = max(true_loss(y, g.rects, g.labels, ps=ps) / 4.0, 1e-12)
+    return eps * eps * sigma / max(k, 1)
+
+
+def band_bounds(n: int, num_bands: int) -> list[tuple[int, int]]:
+    """The canonical row-band split: linspace bounds, empty bands dropped.
+    Shared by the thread-pool composer and the cluster's band-ownership map
+    (worker i owns band i) so both partitions are always identical."""
+    bounds = np.linspace(0, n, num_bands + 1).astype(int)
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(num_bands)
+            if bounds[i + 1] > bounds[i]]
 
 
 def sharded_coreset(values: np.ndarray, k: int, eps: float, num_bands: int,
@@ -52,16 +82,8 @@ def sharded_coreset(values: np.ndarray, k: int, eps: float, num_bands: int,
     y = np.asarray(values, np.float64)
     n = y.shape[0]
     if share_tolerance and "tolerance_override" not in kw:
-        from .segmentation import greedy_tree
-        from .fitting_loss import true_loss
-        from .stats import PrefixStats
-        ps = _stats if _stats is not None else PrefixStats.build(y)
-        g = greedy_tree(ps, k)
-        sigma = max(true_loss(y, g.rects, g.labels, ps=ps) / 4.0, 1e-12)
-        kw = dict(kw, tolerance_override=eps * eps * sigma / max(k, 1))
-    bounds = np.linspace(0, n, num_bands + 1).astype(int)
-    bands = [(int(bounds[i]), int(bounds[i + 1])) for i in range(num_bands)
-             if bounds[i + 1] > bounds[i]]
+        kw = dict(kw, tolerance_override=shared_tolerance(y, k, eps, _stats))
+    bands = band_bounds(n, num_bands)
     with _fut.ThreadPoolExecutor(max_workers=max_workers or len(bands)) as ex:
         parts = list(ex.map(lambda b: signal_coreset(y[b[0]:b[1]], k, eps, **kw), bands))
     cs = compose(parts, [b[0] for b in bands], n_total=n)
@@ -93,18 +115,26 @@ def sat_pjit(values, mesh=None, data_axis: str = "data"):
 
 
 # ------------------------------------------------- batched Algorithm 5 eval
+MESH_BACKEND = "pallas+shard_map"
+
+
 def fitting_loss_batched(cs: SignalCoreset, seg_rects: np.ndarray,
                          seg_labels: np.ndarray, mesh=None,
-                         data_axis: str = "data", backend: str | None = None):
+                         data_axis: str = "data", backend: str | None = None,
+                         interpret: bool | None = None):
     """Evaluate T candidate segmentations at once: seg_rects (T, K, 4),
     seg_labels (T, K).  Returns (T,).
 
     Without a mesh this is the dispatched ``repro.ops.fitting_loss_batched``
     (numpy oracle / jitted xla / batched Pallas kernel, by selection rules
     or the explicit ``backend=``).  With a mesh, blocks are sharded over
-    ``data_axis`` and every device scores its shard against all T trees
-    through the same canonical dense math the xla backend jits
-    (``kernels.fitting_loss.ref.fitting_loss_batched_ref``), then one psum.
+    ``data_axis`` via ``shard_map`` and every device runs the *batched
+    Pallas kernel* on its own shard against all T trees, then ONE ``psum``
+    folds the per-shard partial losses — the collective pattern the cluster
+    scoring path rides (previously this branch pjit'ed the dense XLA ref,
+    so on a pod the kernel never saw the mesh).  The dispatch profile
+    records the hop under backend :data:`MESH_BACKEND` through the same
+    hook the ops registry uses.
     """
     if mesh is None:
         from repro import ops
@@ -112,9 +142,17 @@ def fitting_loss_batched(cs: SignalCoreset, seg_rects: np.ndarray,
                                         np.asarray(seg_labels),
                                         backend=backend)
 
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    import time as _time
 
-    from repro.kernels.fitting_loss.ref import fitting_loss_batched_ref
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.common import default_interpret
+    from repro.kernels.fitting_loss.kernel import fitting_loss_batched_call
+    from repro.obs import profile as _profile
+    from repro.obs import span as _span
+
+    if interpret is None:
+        interpret = default_interpret()
 
     rects = jnp.asarray(cs.rects, jnp.float32)
     lab4 = jnp.asarray(cs.labels, jnp.float32)
@@ -122,16 +160,33 @@ def fitting_loss_batched(cs: SignalCoreset, seg_rects: np.ndarray,
     sr = jnp.asarray(seg_rects, jnp.float32)
     sl = jnp.asarray(seg_labels, jnp.float32)
     B = rects.shape[0]
-    shards = int(np.prod([mesh.shape[a] for a in (data_axis,)]))
+    T = sr.shape[0]
+    shards = int(mesh.shape[data_axis])
     pad = (-B) % shards
     if pad:
         # zero-weight padding blocks contribute no loss
         rects = jnp.pad(rects, ((0, pad), (0, 0)))
         lab4 = jnp.pad(lab4, ((0, pad), (0, 0)))
         w4 = jnp.pad(w4, ((0, pad), (0, 0)))
-    sharding = NamedSharding(mesh, P(data_axis, None))
-    with compat_set_mesh(mesh):
-        f = jax.jit(fitting_loss_batched_ref,
-                    in_shardings=(sharding, sharding, sharding, None, None),
-                    out_shardings=NamedSharding(mesh, P()))
-        return np.asarray(f(rects, lab4, w4, sr, sl))
+
+    def _body(r, l4, wt, s_r, s_l):
+        # per-shard (B/shards)-block slab through the fused Pallas kernel,
+        # then the single collective of the whole dispatch
+        part = fitting_loss_batched_call(r, l4, wt, s_r, s_l,
+                                         interpret=interpret)
+        return jax.lax.psum(part, axis_name=data_axis)
+
+    spec = P(data_axis, None)
+    f = compat_shard_map(_body, mesh,
+                         in_specs=(spec, spec, spec, P(), P()),
+                         out_specs=P())
+    size = int(B) * int(T)
+    t0 = _time.perf_counter()
+    with _span("ops.dispatch", op="fitting_loss_batched",
+               backend=MESH_BACKEND, size=size):
+        with compat_set_mesh(mesh):
+            out = np.asarray(jax.jit(f)(rects, lab4, w4, sr, sl))
+    if _profile._HOOKS:
+        _profile.record("fitting_loss_batched", MESH_BACKEND, size,
+                        _time.perf_counter() - t0)
+    return out

@@ -163,6 +163,23 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8787)
+    ap.add_argument("--role", choices=("single", "worker", "coordinator"),
+                    default="single",
+                    help="single = the classic one-process engine; worker = "
+                         "a ShardWorker band server (cluster data plane); "
+                         "coordinator = ClusterEngine scattering dense "
+                         "builds to --peers behind the full v1 API")
+    ap.add_argument("--peers", default="",
+                    help="coordinator only: comma-separated worker base "
+                         "URLs, e.g. http://10.0.0.2:9001,http://10.0.0.3:9001")
+    ap.add_argument("--worker-id", default=None,
+                    help="worker only: stable id reported in acks/metrics "
+                         "(default host:port)")
+    ap.add_argument("--rpc-timeout", type=float, default=30.0,
+                    help="coordinator only: per-band-RPC deadline seconds")
+    ap.add_argument("--reprobe-s", type=float, default=1.0,
+                    help="coordinator only: cooldown before re-probing a "
+                         "down worker")
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--num-bands", type=int, default=4)
@@ -199,11 +216,45 @@ def main() -> None:
     elif args.slow_ms is not None:
         ap.error("--slow-ms requires --access-log")
 
-    engine = CoresetEngine(cache_bytes=args.cache_mb << 20,
-                           workers=args.workers, num_bands=args.num_bands,
-                           query_window=args.query_window_ms / 1e3,
-                           query_max_fuse=args.query_max_fuse,
-                           coalesce=not args.no_coalesce)
+    if args.role == "worker":
+        from repro.cluster import ShardWorker, make_worker_server
+        worker = ShardWorker(worker_id=args.worker_id
+                             or f"{args.host}:{args.port}")
+        srv = make_worker_server(worker, host=args.host, port=args.port)
+        print(f"[serve_coresets] worker {worker.worker_id} listening on "
+              f"http://{args.host}:{srv.server_address[1]}  "
+              f"(POST /v1/worker/band:assign band:delta band:build; "
+              f"GET /v1/healthz /v1/metrics)", flush=True)
+        try:
+            srv.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            srv.shutdown()
+        return
+
+    if args.role == "coordinator":
+        from repro.cluster import ClusterEngine
+        peers = [p.strip() for p in args.peers.split(",") if p.strip()]
+        if not peers:
+            ap.error("--role coordinator requires --peers")
+        engine = ClusterEngine(peers, rpc_timeout=args.rpc_timeout,
+                               reprobe_s=args.reprobe_s,
+                               cache_bytes=args.cache_mb << 20,
+                               workers=args.workers,
+                               query_window=args.query_window_ms / 1e3,
+                               query_max_fuse=args.query_max_fuse,
+                               coalesce=not args.no_coalesce)
+        up = sum("error" not in h for h in engine.probe_workers().values())
+        print(f"[serve_coresets] coordinator: {up}/{len(peers)} workers up",
+              flush=True)
+    else:
+        engine = CoresetEngine(cache_bytes=args.cache_mb << 20,
+                               workers=args.workers,
+                               num_bands=args.num_bands,
+                               query_window=args.query_window_ms / 1e3,
+                               query_max_fuse=args.query_max_fuse,
+                               coalesce=not args.no_coalesce)
     srv = make_server(engine, host=args.host, port=args.port,
                       access_log=access_fp, slow_ms=args.slow_ms)
     print(f"[serve_coresets] listening on http://{args.host}:"

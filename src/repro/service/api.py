@@ -194,7 +194,8 @@ def _h_loss_batch(eng: CoresetEngine, msg: P.BatchLossQuery,
     eps = msg.spec.eps if msg.spec is not None else 0.2
     k = msg.spec.k if msg.spec is not None else None
     r = eng.tree_loss_batch(msg.signal.name, msg.rects, msg.labels,
-                            eps=eps, k=k, deadline=_deadline_of(msg))
+                            eps=eps, k=k, deadline=_deadline_of(msg),
+                            coalesce=bool(msg.coalesce))
     return P.BatchLossResponse(
         losses=r["losses"], k=r["k"], eps=r["eps"], eps_eff=r["eps_eff"],
         served_from=r["served_from"], fingerprint=r["fingerprint"],
@@ -609,9 +610,16 @@ def make_server(engine: CoresetEngine, host: str = "127.0.0.1",
         "engine": engine, "access_log": access_log,
         "slow_ms": float(slow_ms) if slow_ms is not None else None,
         "_log_lock": threading.Lock()})
-    srv = ThreadingHTTPServer((host, port), handler)
-    srv.daemon_threads = True
+    srv = _Server((host, port), handler)
     return srv
+
+
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    # a barrier-released burst of concurrent clients (the coalescing gate,
+    # cluster gathers) overflows socketserver's default listen backlog of 5
+    # into kernel RSTs when the accept loop lags; give the queue real depth
+    request_queue_size = 128
 
 
 def serve_forever_in_thread(srv: ThreadingHTTPServer) -> threading.Thread:

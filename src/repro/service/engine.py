@@ -27,7 +27,8 @@ import numpy as np
 
 from repro import obs, ops
 from repro.core.coreset import SignalCoreset, signal_coreset, signal_coreset_to_size
-from repro.core.sharded import fitting_loss_batched, sharded_coreset
+from repro.core.sharded import (MESH_BACKEND, fitting_loss_batched,
+                                sharded_coreset)
 from repro.core.streaming import StreamingBuilder
 from repro.trees.forest import RandomForestRegressor
 
@@ -792,7 +793,8 @@ class CoresetEngine:
     def tree_loss_batch(self, name: str, seg_rects, seg_labels, *,
                         eps: float = 0.2, k: int | None = None,
                         timeout: float | None = None,
-                        deadline: float | None = None) -> dict:
+                        deadline: float | None = None,
+                        coalesce: bool = True) -> dict:
         """Fused Algorithm-5 loss for T same-signal segmentations.
 
         ``seg_rects`` (T, K, 4) / ``seg_labels`` (T, K) score against ONE
@@ -802,6 +804,11 @@ class CoresetEngine:
         configured): a single engine scoring call replaces T sequential
         ``tree_loss`` evaluations — the tuning-sweep inner loop served as
         one request.
+
+        With coalescing on (and no mesh), the batch enqueues into the SAME
+        QueryScheduler fusion bucket single ``tree_loss`` queries use — a
+        tuning sweep's batch and the interactive singles against the same
+        hot coreset merge into one dispatch instead of two.
         """
         seg_rects = np.asarray(seg_rects, np.int64)
         seg_labels = np.asarray(seg_labels, np.float64)
@@ -811,16 +818,44 @@ class CoresetEngine:
             raise ValueError("batch labels must have shape (T, K)")
         if seg_rects.shape[0] < 1:
             raise ValueError("batch must contain at least one segmentation")
+        T = int(seg_rects.shape[0])
         k = int(k) if k is not None else int(seg_rects.shape[1])
         with obs.span("engine.tree_loss_batch", signal=name, k=k,
-                      batch=int(seg_rects.shape[0])), \
+                      batch=T,
+                      coalesce=bool(coalesce and self.coalesce_queries
+                                    and self.mesh is None)), \
                 self.metrics.timed("query_loss_batch"):
             cs, eps_eff, how = self.get_coreset(name, k, eps, timeout=timeout,
                                                 deadline=deadline)
+            fp = cs.fingerprint()
+            fused = T
             if self.mesh is not None:
-                backend = "xla+mesh"
+                # shard_map'd batched Pallas kernel + one psum (core.sharded)
+                backend = MESH_BACKEND
                 losses = fitting_loss_batched(cs, seg_rects, seg_labels,
                                               mesh=self.mesh)
+                self.metrics.inc("loss_scoring_calls")
+                self.metrics.inc(f"ops_backend_{backend}")
+            elif coalesce and self.coalesce_queries:
+                # same fusion key as tree_loss: backend selected at T=1 so
+                # a batch never lands in a different bucket than the singles
+                # it should fuse with (and never size-promotes co-travelling
+                # singles off the f64 oracle — the coalesce parity gate)
+                backend = ops.selected_backend(
+                    "fitting_loss_batched",
+                    ops.fitting_loss_batched_size(cs, seg_rects[:1]))
+                key = (fp, k, _eps_key(eps), backend)
+
+                def execute(rects3, labels2, _cs=cs, _backend=backend):
+                    self.metrics.inc("loss_scoring_calls")  # ONE per fusion
+                    self.metrics.inc(f"ops_backend_{_backend}")
+                    return ops.fitting_loss_batched(_cs, rects3, labels2,
+                                                    backend=_backend)
+
+                fut = self.queries.submit_batch(key, seg_rects, seg_labels,
+                                                execute, deadline=deadline)
+                losses, fused = fut.result(
+                    timeout=self._remaining(deadline, timeout))
             else:
                 # resolve once, dispatch with the same choice (see tree_loss)
                 backend = ops.selected_backend(
@@ -828,15 +863,15 @@ class CoresetEngine:
                     ops.fitting_loss_batched_size(cs, seg_rects))
                 losses = fitting_loss_batched(cs, seg_rects, seg_labels,
                                               backend=backend)
+                self.metrics.inc("loss_scoring_calls")
+                self.metrics.inc(f"ops_backend_{backend}")
         self.metrics.inc("queries_loss_batch")
-        self.metrics.inc("queries_loss_batch_items", seg_rects.shape[0])
-        self.metrics.inc("loss_scoring_calls")   # ONE fused evaluation
-        self.metrics.inc(f"ops_backend_{backend}")
+        self.metrics.inc("queries_loss_batch_items", T)
         return {"losses": np.asarray(losses, np.float64),
                 "k": k, "eps": eps, "eps_eff": eps_eff, "served_from": how,
-                "fingerprint": cs.fingerprint(), "coreset_size": cs.size,
+                "fingerprint": fp, "coreset_size": cs.size,
                 "scoring_calls": 1, "backend": backend,
-                "fused_batch_size": int(seg_rects.shape[0])}
+                "fused_batch_size": int(fused)}
 
     def fit_forest(self, name: str, *, k: int, eps: float = 0.2,
                    n_estimators: int = 10, max_leaves: int | None = None,

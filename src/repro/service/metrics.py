@@ -112,6 +112,7 @@ class ServiceMetrics:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._counters: dict[str, int] = {}
+        self._gauges: dict[str, float] = {}
         self._hists: dict[str, Histogram] = {}
         self.started_at = time.time()       # wall clock, display only
         self._started_mono = time.monotonic()  # uptime source (NTP-immune)
@@ -126,6 +127,22 @@ class ServiceMetrics:
             name = f"{name}{_labels_key(labels)}"
         with self._lock:
             self._counters[name] = self._counters.get(name, 0) + by
+
+    def set_gauge(self, name: str, value: float, **labels) -> None:
+        """Set a gauge to an absolute value (last write wins) — liveness
+        flags and level readings that go *down* as well as up, e.g.
+        ``set_gauge("cluster_worker_up", 1, worker="w0")``.  Labels
+        dimension the family exactly like :meth:`inc`."""
+        if labels:
+            name = f"{name}{_labels_key(labels)}"
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def get_gauge(self, name: str, **labels) -> float | None:
+        if labels:
+            name = f"{name}{_labels_key(labels)}"
+        with self._lock:
+            return self._gauges.get(name)
 
     def observe(self, name: str, value: float, *, bounds: tuple | None = None,
                 unit: str | None = None, exemplar: str | None = None,
@@ -161,11 +178,14 @@ class ServiceMetrics:
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "uptime_s": time.monotonic() - self._started_mono,
                 "counters": dict(self._counters),
                 "latency": {k: h.snapshot() for k, h in self._hists.items()},
             }
+            if self._gauges:
+                out["gauges"] = dict(self._gauges)
+            return out
 
     def render(self) -> str:
         """Prometheus text exposition format.  Metric names must match
@@ -177,6 +197,7 @@ class ServiceMetrics:
         and label bodies pass through verbatim — values were escaped at
         write time."""
         counter_fams: dict[str, list[tuple[str, int]]] = {}
+        gauge_fams: dict[str, list[tuple[str, float]]] = {}
         hist_fams: dict[str, list[tuple[str, Histogram]]] = {}
         with self._lock:
             for name, v in sorted(self._counters.items()):
@@ -184,6 +205,10 @@ class ServiceMetrics:
                 fam = f"coreset_{_san(base)}"
                 counter_fams.setdefault(fam, []).append(
                     (brace + labels, v))
+            for name, g in sorted(self._gauges.items()):
+                base, brace, labels = name.partition("{")
+                fam = f"coreset_{_san(base)}"
+                gauge_fams.setdefault(fam, []).append((brace + labels, g))
             for name, h in sorted(self._hists.items()):
                 base, brace, labels = name.partition("{")
                 sfx = f"_{_san(h.unit)}" if h.unit else ""
@@ -194,6 +219,10 @@ class ServiceMetrics:
                 lines.append(f"# TYPE {fam} counter")
                 for labels, v in series:
                     lines.append(f"{fam}{labels} {v}")
+            for fam, series in gauge_fams.items():
+                lines.append(f"# TYPE {fam} gauge")
+                for labels, g in series:
+                    lines.append(f"{fam}{labels} {g:g}")
             for fam, series in hist_fams.items():
                 lines.append(f"# TYPE {fam} histogram")
                 for labels, h in series:

@@ -411,12 +411,15 @@ class LossQuery(_Wire):
 class BatchLossQuery(_Wire):
     """T same-signal segmentations scored in ONE fused engine call
     (``core.sharded.fitting_loss_batched``), instead of T sequential
-    /query/loss round trips."""
+    /query/loss round trips.  ``coalesce=False`` skips the cross-request
+    QueryScheduler (the batch then dispatches alone instead of fusing with
+    concurrent same-coreset queries)."""
     signal: SignalRef
     rects: np.ndarray                     # (T, K, 4)
     labels: np.ndarray                    # (T, K)
     spec: CoresetSpec | None = None
     deadline_ms: float | None = None
+    coalesce: bool = True
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"rects": _arr(np.int64, ndim=3),
                "labels": _arr(np.float64, ndim=2)}

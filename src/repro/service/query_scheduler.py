@@ -69,19 +69,28 @@ class DeadlineExceeded(TimeoutError):
 
 
 class _Pending:
-    """One enqueued loss query: its tree plus where the answer goes.
+    """One enqueued loss submission: its tree(s) plus where the answer goes.
+
+    Storage is uniformly 3-D — ``rects`` (C, K, 4) / ``labels`` (C, K) with
+    ``count`` = C trees — so a single query (C=1, the /query/loss path) and
+    a client batch (C=T, the /query/loss:batch path) ride the SAME fusion
+    buckets; ``batch`` only decides the result shape (scalar vs (C,) array).
+
     ``span`` is the request trace's ``query.scheduler_wait`` span, opened at
     enqueue on the submitting thread and ended when the answer (or the
     deadline error) reaches the future — so the request trace shows exactly
     how long it sat in the batching window, and carries the link to the
     fused dispatch span it rode in."""
 
-    __slots__ = ("rects", "labels", "deadline", "future", "span")
+    __slots__ = ("rects", "labels", "count", "batch", "deadline", "future",
+                 "span")
 
     def __init__(self, rects: np.ndarray, labels: np.ndarray,
-                 deadline: float | None):
+                 deadline: float | None, *, batch: bool = False):
         self.rects = rects
         self.labels = labels
+        self.count = int(rects.shape[0])
+        self.batch = batch
         self.deadline = deadline
         self.future: _fut.Future = _fut.Future()
         self.span = obs.child_span("query.scheduler_wait")
@@ -96,7 +105,7 @@ class _Pending:
 class _Bucket:
     """Queries sharing one fusion key, waiting out the batching window."""
 
-    __slots__ = ("key", "execute", "items", "flush_at", "window_at",
+    __slots__ = ("key", "execute", "items", "size", "flush_at", "window_at",
                  "trimmed")
 
     def __init__(self, key: tuple, execute: Callable, window: float,
@@ -104,6 +113,7 @@ class _Bucket:
         self.key = key
         self.execute = execute
         self.items: list[_Pending] = []
+        self.size = 0                   # total TREES queued (sum of counts)
         self.window_at = now + window   # the untrimmed window expiry
         self.flush_at = self.window_at
         self.trimmed = False            # a deadline pulled flush_at forward
@@ -147,8 +157,30 @@ class QueryScheduler:
         """
         rects = np.ascontiguousarray(rects, np.int64).reshape(-1, 4)
         labels = np.ascontiguousarray(labels, np.float64).ravel()
-        item = _Pending(rects, labels, deadline)
+        item = _Pending(rects[None], labels[None], deadline)
+        return self._enqueue(key, execute, item)
+
+    def submit_batch(self, key: tuple, rects: np.ndarray, labels: np.ndarray,
+                     execute: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                     *, deadline: float | None = None) -> _fut.Future:
+        """Enqueue a client batch of T trees — (T, K, 4)/(T, K) — into the
+        SAME fusion bucket single queries use (the key pins coreset
+        fingerprint + backend, so co-travelling singles and batches score
+        identically).  Returns a future resolving to ``((T,) losses,
+        fused_batch_size)`` where ``fused_batch_size`` counts every tree of
+        the fused dispatch this batch rode in."""
+        rects = np.ascontiguousarray(rects, np.int64)
+        labels = np.ascontiguousarray(labels, np.float64)
+        if rects.ndim != 3 or rects.shape[-1] != 4 or \
+                labels.shape != rects.shape[:2]:
+            raise ValueError("batch needs rects (T, K, 4) and labels (T, K)")
+        item = _Pending(rects, labels, deadline, batch=True)
+        return self._enqueue(key, execute, item)
+
+    def _enqueue(self, key: tuple, execute: Callable,
+                 item: _Pending) -> _fut.Future:
         now = time.perf_counter()
+        deadline = item.deadline
         if deadline is not None and deadline <= now:
             item.finish_span(outcome="deadline_expired_pre_enqueue")
             item.future.set_exception(DeadlineExceeded(
@@ -164,12 +196,13 @@ class QueryScheduler:
                 bucket = self._buckets[key] = _Bucket(
                     key, execute, self.window, now)
             bucket.items.append(item)
+            bucket.size += item.count
             if deadline is not None:
                 cutoff = max(now, deadline - self.deadline_margin)
                 if cutoff < bucket.flush_at:
                     bucket.flush_at = cutoff
                     bucket.trimmed = True
-            if len(bucket.items) >= self.max_fuse:
+            if bucket.size >= self.max_fuse:
                 full = self._buckets.pop(key)
             else:
                 self._cond.notify()
@@ -229,7 +262,7 @@ class QueryScheduler:
                 live.append(it)
         if not live:
             return
-        n = len(live)
+        total = sum(it.count for it in live)    # trees in the fused dispatch
         # the fused dispatch is shared work with N parents, which a span
         # tree cannot express: it gets its OWN trace, cross-linked both
         # ways — every request's wait span links to the fused span, and the
@@ -238,34 +271,38 @@ class QueryScheduler:
         req_ctxs = [it.span.context for it in live if it.span]
         fused = obs.start_trace(
             "query.fused_dispatch", links=req_ctxs,
-            attrs={"reason": reason, "batch_size": n}) if req_ctxs \
+            attrs={"reason": reason, "batch_size": total,
+                   "requests": len(live)}) if req_ctxs \
             else obs.NOOP
         if fused:
             for it in live:
                 it.span.add_link(fused.context, kind="fused_dispatch")
                 it.span.set_attr("fused_trace_id", fused.trace_id)
         try:
-            if n == 1:
-                rects3 = live[0].rects[None]
-                labels2 = live[0].labels[None]
+            if len(live) == 1:
+                rects3 = live[0].rects
+                labels2 = live[0].labels
             else:
-                kmax = max(it.rects.shape[0] for it in live)
+                kmax = max(it.rects.shape[1] for it in live)
                 # zero-area padding rects consume no weight in the smoothed
                 # assignment, so padded leaves contribute exactly 0 loss
-                rects3 = np.zeros((n, kmax, 4), np.int64)
-                labels2 = np.zeros((n, kmax), np.float64)
-                for i, it in enumerate(live):
-                    rects3[i, :it.rects.shape[0]] = it.rects
-                    labels2[i, :it.labels.shape[0]] = it.labels
+                rects3 = np.zeros((total, kmax, 4), np.int64)
+                labels2 = np.zeros((total, kmax), np.float64)
+                off = 0
+                for it in live:
+                    rects3[off:off + it.count, :it.rects.shape[1]] = it.rects
+                    labels2[off:off + it.count, :it.labels.shape[1]] = \
+                        it.labels
+                    off += it.count
             # attach the fused span so the ops.dispatch span underneath
             # nests in the fused trace, not in the flusher thread's void
             with obs.attach(fused):
                 losses = np.asarray(bucket.execute(rects3, labels2),
                                     np.float64)
-            if losses.shape != (n,):
+            if losses.shape != (total,):
                 raise RuntimeError(
                     f"fused executor returned shape {losses.shape}, "
-                    f"expected ({n},)")
+                    f"expected ({total},)")
         except BaseException as exc:
             self.metrics.inc("query_fused_failed")
             if fused:
@@ -278,12 +315,20 @@ class QueryScheduler:
         if fused:
             fused.end()
         self.metrics.inc("query_fused_dispatches")
-        self.metrics.inc("query_coalesced_total", n - 1)
-        self.metrics.observe("query_fused_batch_size", n,
+        # co-travelling REQUESTS (not trees): a lone client batch of T trees
+        # coalesced nothing; a batch joined by one single coalesced one
+        self.metrics.inc("query_coalesced_total", len(live) - 1)
+        self.metrics.observe("query_fused_batch_size", total,
                              bounds=FUSED_SIZE_BOUNDS, unit="")
-        for i, it in enumerate(live):
-            it.finish_span(outcome="ok", fused_batch_size=n)
-            it.future.set_result((float(losses[i]), n))
+        off = 0
+        for it in live:
+            it.finish_span(outcome="ok", fused_batch_size=total)
+            if it.batch:
+                it.future.set_result(
+                    (losses[off:off + it.count].copy(), total))
+            else:
+                it.future.set_result((float(losses[off]), total))
+            off += it.count
 
     # ---------------------------------------------------------------- fanout
     def map_fanout(self, fns: Sequence[Callable[[], object]]) -> list:

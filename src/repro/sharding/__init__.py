@@ -5,7 +5,7 @@ from .rules import (batch_specs, cache_specs, data_axes, named, opt_specs,
 
 __all__ = ["batch_specs", "cache_specs", "data_axes", "named", "opt_specs",
            "param_specs", "compat_set_mesh", "compat_abstract_mesh",
-           "compat_get_abstract_mesh"]
+           "compat_get_abstract_mesh", "compat_shard_map"]
 
 
 def compat_get_abstract_mesh():
@@ -27,6 +27,26 @@ def compat_abstract_mesh(axis_sizes, axis_names):
         return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
     except TypeError:
         return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions.
+
+    Newer jax exports ``jax.shard_map`` (replication check keyword
+    ``check_vma``); older versions keep it in ``jax.experimental.shard_map``
+    (keyword ``check_rep``).  The replication check is disabled either way:
+    the bodies this repo maps contain a Pallas call, whose replication rule
+    the checker cannot see through.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
 
 
 def compat_set_mesh(mesh):

@@ -1,0 +1,260 @@
+"""Distributed serving plane (repro.cluster): a ClusterEngine scattering
+row-band builds to ShardWorkers must compose coresets **bitwise
+fingerprint-equal** to the single-host thread-pool path, forward deltas in
+O(changed rows), survive a worker kill by degrading to local band builds
+(200s, not 5xx), heal/rejoin through the content-addressed no_band /
+stale_band path, and carry ONE trace id across every RPC hop with the
+gather span linking each worker's root (S3).  Workers run in-process with
+PRIVATE tracers — two roots continuing one trace id in the same ring
+buffer would collide — which also lets the tests inspect the worker side
+of a propagated trace directly."""
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.cluster import (ClusterEngine, ShardWorker, WorkerClient,
+                           WorkerRPCError, make_worker_server)
+from repro.core import random_tree_segmentation
+from repro.data import piecewise_signal
+from repro.service import CoresetEngine, ServiceMetrics
+
+N, M, K, EPS = 96, 64, 5, 0.3
+
+
+def _start_worker(i: int, port: int = 0):
+    w = ShardWorker(worker_id=f"w{i}")
+    tracer = obs.Tracer()
+    srv = make_worker_server(w, port=port, tracer=tracer)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return SimpleNamespace(worker=w, tracer=tracer, server=srv,
+                           port=srv.server_address[1],
+                           url=f"http://127.0.0.1:{srv.server_address[1]}")
+
+
+@pytest.fixture
+def cluster():
+    nodes = [_start_worker(i) for i in range(3)]
+    coord = ClusterEngine([n.url for n in nodes], workers=2, reprobe_s=0.2,
+                          rpc_timeout=10.0, metrics=ServiceMetrics())
+    # the single-host reference: same band count -> same layout, same bytes
+    single = CoresetEngine(num_bands=3, workers=2, metrics=ServiceMetrics())
+    c = SimpleNamespace(nodes=nodes, coord=coord, single=single)
+    yield c
+    coord.close()
+    single.close()
+    for n in nodes:
+        _stop(n)
+
+
+def _stop(node) -> None:
+    node.server.shutdown()
+    node.server.server_close()   # release the port (kill/rejoin reuses it)
+
+
+def _y(seed=7):
+    return piecewise_signal(N, M, K, noise=0.15, seed=seed)
+
+
+# ------------------------------------------------------------------- parity
+def test_cluster_fingerprint_and_loss_parity(cluster):
+    y = _y()
+    cluster.coord.register_signal("sig", y)
+    cluster.single.register_signal("sig", y)
+    cs_c, _, _ = cluster.coord.get_coreset("sig", K, EPS)
+    cs_s, _, _ = cluster.single.get_coreset("sig", K, EPS)
+    assert cs_c.fingerprint() == cs_s.fingerprint()   # bitwise composition
+    # every worker served (no degraded fallback hid a dead worker)
+    assert cluster.coord.metrics.get("cluster_degraded_builds") == 0
+    assert cluster.coord.metrics.get("cluster_gathers") == 1
+    for n in cluster.nodes:
+        assert n.worker.metrics.get("worker_band_builds") == 1
+    # loss answers ride the identical coreset -> bitwise equal
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        q = random_tree_segmentation(N, M, K, rng)
+        lc = cluster.coord.tree_loss("sig", q.rects, q.labels, eps=EPS)
+        ls = cluster.single.tree_loss("sig", q.rects, q.labels, eps=EPS)
+        assert abs(lc["loss"] - ls["loss"]) <= 1e-9
+        assert lc["fingerprint"] == ls["fingerprint"]
+
+
+def test_cluster_batch_query_parity(cluster):
+    y = _y(8)
+    cluster.coord.register_signal("sig", y)
+    cluster.single.register_signal("sig", y)
+    rng = np.random.default_rng(12)
+    segs = [random_tree_segmentation(N, M, K, rng) for _ in range(6)]
+    br = np.stack([s.rects for s in segs])
+    bl = np.stack([s.labels for s in segs])
+    rc = cluster.coord.tree_loss_batch("sig", br, bl, eps=EPS)
+    rs = cluster.single.tree_loss_batch("sig", br, bl, eps=EPS)
+    assert np.max(np.abs(rc["losses"] - rs["losses"])) <= 1e-9
+    assert rc["fingerprint"] == rs["fingerprint"]
+
+
+def test_worker_build_cache_serves_repeat_gathers(cluster):
+    cluster.coord.register_signal("sig", _y(9))
+    cluster.coord.get_coreset("sig", K, EPS)
+    # drop only the coordinator's cache; worker band caches must answer
+    cluster.coord.cache.invalidate_signal("sig", keep_version=None)
+    cluster.coord.get_coreset("sig", K, EPS)
+    assert cluster.coord.metrics.get("cluster_band_cache_hits") == 3
+    for n in cluster.nodes:
+        assert n.worker.metrics.get("worker_build_cache_hits") == 1
+
+
+# ------------------------------------------------------------- delta writes
+def test_delta_forward_patches_workers_and_keeps_parity(cluster):
+    y = _y(10)
+    cluster.coord.register_signal("sig", y)
+    cluster.single.register_signal("sig", y)
+    cluster.coord.get_coreset("sig", K, EPS)
+    patch = np.full((8, M), 2.5)
+    cluster.coord.ingest_delta("sig", patch, row0=40)   # band 1 rows
+    cluster.single.ingest_delta("sig", patch, row0=40)
+    assert cluster.coord.metrics.get("cluster_deltas_forwarded") == 1
+    # only the owning worker saw rows; its slab hash now matches the
+    # coordinator's post-patch band (content-addressed consistency)
+    deltas = [n.worker.metrics.get("worker_deltas_applied")
+              for n in cluster.nodes]
+    assert deltas == [0, 1, 0]
+    time.sleep(0.6)    # the dense re-cache build is async (BuildScheduler)
+    cs_c, _, _ = cluster.coord.get_coreset("sig", K, EPS)
+    cs_s, _, _ = cluster.single.get_coreset("sig", K, EPS)
+    assert cs_c.fingerprint() == cs_s.fingerprint()
+    assert cluster.coord.metrics.get("cluster_degraded_builds") == 0
+
+
+def test_stale_worker_heals_by_reassign(cluster):
+    y = _y(11)
+    cluster.coord.register_signal("sig", y)
+    # corrupt one worker's slab behind the coordinator's back
+    from repro.cluster.rpc import BandAssignRequest
+    from repro.service import protocol as P
+    cluster.nodes[0].worker.assign(BandAssignRequest(
+        signal=P.SignalRef(name="sig"), row0=0,
+        band=np.ones((32, M)), band_hash=""))
+    cs_c, _, _ = cluster.coord.get_coreset("sig", K, EPS)
+    single = cluster.single
+    single.register_signal("sig", y)
+    cs_s, _, _ = single.get_coreset("sig", K, EPS)
+    assert cs_c.fingerprint() == cs_s.fingerprint()
+    assert cluster.coord.metrics.get(
+        'cluster_band_heals{code="stale_band"}') == 1
+    assert cluster.coord.metrics.get("cluster_degraded_builds") == 0
+
+
+# ------------------------------------------------- kill / degrade / rejoin
+def test_worker_kill_degrades_then_rejoins(cluster):
+    y = _y(12)
+    coord = cluster.coord
+    coord.register_signal("sig", y)
+    cluster.single.register_signal("sig", y)
+    cs0, _, _ = coord.get_coreset("sig", K, EPS)
+
+    victim = cluster.nodes[1]
+    _stop(victim)
+    coord.cache.invalidate_signal("sig", keep_version=None)
+    cs1, _, _ = coord.get_coreset("sig", K, EPS)      # 200-path, no raise
+    assert cs1.fingerprint() == cs0.fingerprint()     # degraded == identical
+    assert coord.metrics.get("cluster_degraded_builds") == 1
+    assert coord.metrics.get_gauge("cluster_worker_up",
+                                   worker=victim.url) == 0.0
+
+    # inside the cooldown the dead worker is skipped without a socket wait
+    coord.cache.invalidate_signal("sig", keep_version=None)
+    t0 = time.perf_counter()
+    coord.get_coreset("sig", K, EPS)
+    assert time.perf_counter() - t0 < coord.rpc_timeout / 2
+    assert coord.metrics.get("cluster_degraded_builds") == 2
+
+    # restart EMPTY on the same port: rejoin = no_band 404 -> assign -> serve
+    fresh = _start_worker(99, port=victim.port)
+    try:
+        time.sleep(coord.reprobe_s + 0.05)
+        coord.cache.invalidate_signal("sig", keep_version=None)
+        cs2, _, _ = coord.get_coreset("sig", K, EPS)
+        assert cs2.fingerprint() == cs0.fingerprint()
+        assert coord.metrics.get("cluster_degraded_builds") == 2  # no new
+        assert coord.metrics.get("cluster_worker_rejoins") == 1
+        assert coord.metrics.get(
+            'cluster_band_heals{code="no_band"}') == 1
+        assert coord.metrics.get_gauge("cluster_worker_up",
+                                       worker=victim.url) == 1.0
+        assert fresh.worker.metrics.get("worker_band_builds") == 1
+    finally:
+        _stop(fresh)
+
+
+# -------------------------------------------------------- trace hops (S3)
+def test_trace_id_spans_coordinator_and_worker_hops(cluster):
+    coord = cluster.coord
+    coord.register_signal("sig", _y(13))
+    root = obs.start_trace("test.build")
+    with obs.TRACER.attach(root):
+        coord.get_coreset("sig", K, EPS)
+    root.end()
+    t = obs.TRACER.get(root.trace_id)
+    assert t is not None
+    gathers = [s for s in t["spans"] if s["name"] == "cluster.gather"]
+    assert len(gathers) == 1
+    rpcs = [s for s in t["spans"] if s["name"] == "cluster.rpc"]
+    assert len(rpcs) == 3
+    # every worker continued the SAME trace id: its private tracer finished
+    # a trace under root.trace_id whose root is the band:build route
+    linked_ids = {li["span_id"] for li in gathers[0].get("links", ())}
+    assert len(linked_ids) == 3                      # gather fan-in links
+    for n in cluster.nodes:
+        wt = n.tracer.get(root.trace_id)
+        assert wt is not None
+        names = {s["name"] for s in wt["spans"]}
+        assert "POST /v1/worker/band:build" in names
+        assert "worker.band_build" in names
+        # the response traceparent the coordinator linked IS a worker span
+        worker_span_ids = {s["span_id"] for s in wt["spans"]}
+        assert linked_ids & worker_span_ids
+
+
+def test_worker_error_envelope_carries_trace_headers(cluster):
+    client = WorkerClient(cluster.nodes[0].url)
+    root = obs.start_trace("test.err")
+    with obs.TRACER.attach(root):
+        with pytest.raises(WorkerRPCError) as ei:
+            client.build("ghost", 0, 32, "deadbeef", K, EPS, 1e-3)
+    root.end()
+    assert ei.value.code == "no_band"
+    assert ei.value.http == 404
+    # X-Coreset-Trace-Id on the ERROR envelope names the propagated trace
+    assert ei.value.trace_id == root.trace_id
+
+
+# ----------------------------------------------------------- telemetry (S6)
+def test_cluster_metrics_gauges_histograms_and_stats(cluster):
+    coord = cluster.coord
+    coord.register_signal("sig", _y(14))
+    root = obs.start_trace("test.metrics")
+    with obs.TRACER.attach(root):
+        coord.get_coreset("sig", K, EPS)
+    root.end()
+    text = coord.metrics.render()
+    assert "# TYPE coreset_cluster_worker_up gauge" in text
+    for n in cluster.nodes:
+        assert f'coreset_cluster_worker_up{{worker="{n.url}"}} 1' in text
+    # per-worker RPC latency histograms + the gather histogram, with the
+    # traced build attached as an exemplar
+    assert "coreset_cluster_rpc_seconds_bucket" in text
+    assert "coreset_cluster_gather_seconds_bucket" in text
+    assert f'trace_id="{root.trace_id}"' in text
+    snap = coord.stats()
+    assert snap["cluster"]["role"] == "coordinator"
+    assert [p["up"] for p in snap["cluster"]["peers"]] == [True] * 3
+    assert snap["cluster"]["gathers"] == 1
+    assert snap["metrics"]["gauges"]   # gauges surfaced in /v1/stats
+    # worker-side: its own /metrics exposition works too
+    wtext = cluster.nodes[0].worker.metrics.render()
+    assert "coreset_worker_band_builds" in wtext
+    assert "# TYPE coreset_worker_bands_held gauge" in wtext

@@ -306,27 +306,36 @@ def test_engine_stats_surface_ops_backends():
                     # stage still runs it by name
 def test_mesh_sharded_batched_loss_matches_oracle():
     """The ROADMAP's 'exercise the mesh path for real': a forced 8-device
-    host, a 2-device mesh, and the dispatched fitting_loss_batched sharded
-    over it — parity against the numpy oracle.  Runs in a subprocess so
-    XLA_FLAGS takes effect before jax initializes."""
+    host mesh and fitting_loss_batched shard_map'd over it — parity against
+    the numpy oracle, AND the dispatch profile must attribute the hop to the
+    batched Pallas kernel (backend ``pallas+shard_map``), not the dense ref
+    the old pjit path ran.  Runs in a subprocess so XLA_FLAGS takes effect
+    before jax initializes."""
     script = textwrap.dedent("""
         import numpy as np, jax
-        assert jax.device_count() >= 2, jax.devices()
+        assert jax.device_count() >= 8, jax.devices()
         from repro.launch.mesh import compat_make_mesh
         from repro.core import (fitting_loss, fitting_loss_batched,
                                 random_tree_segmentation, signal_coreset)
+        from repro.core.sharded import MESH_BACKEND
         from repro.data import piecewise_signal
+        from repro.obs import profile
         y = piecewise_signal(48, 40, 5, noise=0.2, seed=0)
         cs = signal_coreset(y, 5, 0.3)
         rng = np.random.default_rng(0)
         segs = [random_tree_segmentation(48, 40, 4, rng) for _ in range(3)]
         sr = np.stack([s.rects for s in segs]).astype(np.float64)
         sl = np.stack([s.labels for s in segs])
-        mesh = compat_make_mesh((2,), ("data",), jax.devices()[:2])
+        samples = []
+        profile.add_hook(lambda op, b, size, dt: samples.append((op, b)))
+        mesh = compat_make_mesh((8,), ("data",), jax.devices())
         got = fitting_loss_batched(cs, sr, sl, mesh=mesh)
         want = np.array([fitting_loss(cs, s.rects, s.labels) for s in segs])
         assert np.allclose(got, want, rtol=2e-3, atol=1e-3), (got, want)
-        print("MESH-PARITY-OK devices=%d" % jax.device_count())
+        assert ("fitting_loss_batched", MESH_BACKEND) in samples, samples
+        assert MESH_BACKEND == "pallas+shard_map", MESH_BACKEND
+        print("MESH-PARITY-OK devices=%d backend=%s"
+              % (jax.device_count(), MESH_BACKEND))
     """)
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",

@@ -394,3 +394,101 @@ def test_burst_delta_rejects_rows_without_row0s():
     with pytest.raises(ValueError, match="rows requires row0s"):
         eng.ingest_delta("s", np.ones((16, 8)), rows=[8, 8])
     eng.close()
+
+
+# ------------------------------------------------- batched submissions (S2)
+def test_scheduler_batch_submission_fuses_with_singles():
+    """A client batch and a single query under one key must ride ONE fused
+    dispatch; the batch future scatters its (T,) slice, the single its
+    scalar, and every rider reports the total tree count."""
+    sched = QueryScheduler(window=0.05, max_fuse=16)
+    calls = []
+
+    def execute(rects3, labels2):
+        calls.append(rects3.shape)
+        return np.arange(rects3.shape[0], dtype=np.float64)
+
+    fb = sched.submit_batch(("k",), np.zeros((3, 2, 4), np.int64),
+                            np.zeros((3, 2)), execute)
+    fs = sched.submit(("k",), np.zeros((2, 4), np.int64), np.zeros(2),
+                      execute)
+    losses, fused_b = fb.result(timeout=5)
+    loss, fused_s = fs.result(timeout=5)
+    assert calls == [(4, 2, 4)]                  # ONE dispatch, 3+1 trees
+    assert list(losses) == [0.0, 1.0, 2.0] and loss == 3.0
+    assert fused_b == fused_s == 4
+    # coalesced counts co-travelling REQUESTS (2 riders -> 1 coalesced)
+    assert sched.metrics.get("query_coalesced_total") == 1
+    sched.shutdown()
+
+
+def test_scheduler_batch_fills_tile_and_flushes_early():
+    sched = QueryScheduler(window=30.0, max_fuse=4)   # window would hang
+    execute = lambda r, l: np.zeros(r.shape[0])  # noqa: E731
+    fut = sched.submit_batch(("k",), np.zeros((4, 1, 4), np.int64),
+                             np.zeros((4, 1)), execute)
+    t0 = time.perf_counter()
+    losses, fused = fut.result(timeout=5)
+    assert time.perf_counter() - t0 < 5          # tree count filled the tile
+    assert fused == 4 and losses.shape == (4,)
+    assert sched.metrics.get('query_flushes{reason="full"}') == 1
+    sched.shutdown()
+
+
+def test_engine_batch_query_coalesces_with_concurrent_single():
+    """/v1/query/loss:batch routed through the QueryScheduler: bitwise the
+    uncoalesced answers, and a concurrent single against the same coreset
+    fuses into the SAME dispatch (query_coalesced_total moves)."""
+    y = piecewise_signal(N, M, K, noise=0.1, seed=5)
+    eng = _engine(query_window=0.05)
+    eng.register_signal("s", y)
+    segs = _trees(6, seed=21)
+    br = np.stack([s.rects for s in segs])
+    bl = np.stack([s.labels for s in segs])
+    ref = eng.tree_loss_batch("s", br, bl, eps=0.3, coalesce=False)
+    c0 = eng.metrics.get("query_coalesced_total")
+    d0 = eng.metrics.get("query_fused_dispatches")
+    out = {}
+
+    def batch():
+        out["b"] = eng.tree_loss_batch("s", br, bl, eps=0.3)
+
+    def single():
+        out["s"] = eng.tree_loss("s", segs[0].rects, segs[0].labels, eps=0.3)
+
+    threads = [threading.Thread(target=batch),
+               threading.Thread(target=single)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert np.array_equal(out["b"]["losses"], ref["losses"])   # bitwise
+    assert out["s"]["loss"] == ref["losses"][0]
+    assert eng.metrics.get("query_fused_dispatches") - d0 == 1
+    assert eng.metrics.get("query_coalesced_total") - c0 == 1
+    assert out["b"]["fused_batch_size"] == out["s"]["fused_batch_size"] == 7
+    eng.close()
+
+
+def test_http_batch_coalesce_flag_round_trips():
+    """The wire-level coalesce=False escape hatch on /v1/query/loss:batch
+    still answers identically (it scores inline, off the scheduler)."""
+    y = piecewise_signal(N, M, K, noise=0.1, seed=6)
+    eng = _engine()
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    try:
+        cl = CoresetClient(base, encoding="binary")
+        cl.register_signal("s", values=y)
+        segs = _trees(4, seed=31)
+        br = np.stack([s.rects for s in segs])
+        bl = np.stack([s.labels for s in segs])
+        r_on = cl.query_loss_batch("s", br, bl, eps=0.3)
+        f0 = eng.metrics.get("query_fused_dispatches")
+        r_off = cl.query_loss_batch("s", br, bl, eps=0.3, coalesce=False)
+        assert np.array_equal(r_on.losses, r_off.losses)
+        assert eng.metrics.get("query_fused_dispatches") == f0  # inline
+    finally:
+        srv.shutdown()
+        eng.close()
