@@ -1,4 +1,13 @@
-"""Jit'd public wrappers for the sat2d kernel."""
+"""Jit'd public wrappers for the sat2d kernel.
+
+Each wrapper exists in two jitted flavours: the plain one, and — on
+accelerator platforms only — one with **buffer donation** on the scan
+inputs.  The ``repro.ops`` backends ship fresh host arrays to the device on
+every call and never touch them again, so the carry/stack buffers can be
+donated to XLA and their HBM reused for the outputs (free on CPU, where
+donation is unimplemented and would only warn).  Callers that keep their
+arrays (tests, the mesh scorer) use the default non-donating path.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,6 +19,13 @@ from .kernel import sat2d, scan_rows
 
 __all__ = ["sat", "sat_moments", "delta_sat_moments", "sat_stack"]
 
+_DEFAULT_TILE = 256
+
+
+@functools.cache
+def _donation_supported() -> bool:
+    return jax.default_backend() in ("tpu", "gpu")
+
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sat(x: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
@@ -17,53 +33,97 @@ def sat(x: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
     return sat2d(x, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sat_moments(y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+def _sat_moments(y, tile, interpret):
+    n, m = y.shape
+    stk = jnp.stack([jnp.ones_like(y), y, y * y], axis=0)   # (3, n, m)
+    r = scan_rows(stk.reshape(3 * n, m), tile, tile,
+                  interpret=interpret).reshape(3, n, m)
+    # column pass: transpose each channel, fold channels into rows again
+    rt = r.transpose(0, 2, 1).reshape(3 * m, n)
+    c = scan_rows(rt, tile, tile,
+                  interpret=interpret).reshape(3, m, n).transpose(0, 2, 1)
+    return c
+
+
+_sat_moments_jit = functools.partial(jax.jit,
+                                     static_argnames=("tile", "interpret"))
+_sat_moments_plain = _sat_moments_jit(_sat_moments)
+_sat_moments_donate = _sat_moments_jit(_sat_moments, donate_argnums=(0,))
+
+
+def sat_moments(y: jnp.ndarray, tile: int = _DEFAULT_TILE,
+                interpret: bool | None = None,
+                donate: bool = False) -> jnp.ndarray:
     """(3, n, m) integral images of (1, y, y^2): the coreset prefix stats.
 
     The three channels are folded into the row axis so both scan passes run
     as single kernel launches ((3n, m) row scan; (m, 3n) per-channel column
-    scan via a channel-blocked layout)."""
-    n, m = y.shape
-    stk = jnp.stack([jnp.ones_like(y), y, y * y], axis=0)   # (3, n, m)
-    r = scan_rows(stk.reshape(3 * n, m), interpret=interpret).reshape(3, n, m)
-    # column pass: transpose each channel, fold channels into rows again
-    rt = r.transpose(0, 2, 1).reshape(3 * m, n)
-    c = scan_rows(rt, interpret=interpret).reshape(3, m, n).transpose(0, 2, 1)
-    return c
+    scan via a channel-blocked layout).  ``tile`` is the Pallas block edge
+    the autotuner searches over; ``donate=True`` releases ``y``'s device
+    buffer to XLA (accelerator platforms only — the caller must not reuse
+    it)."""
+    fn = (_sat_moments_donate if donate and _donation_supported()
+          else _sat_moments_plain)
+    return fn(y, tile=tile, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def delta_sat_moments(carry: jnp.ndarray, tail: jnp.ndarray,
-                      interpret: bool | None = None) -> jnp.ndarray:
-    """Patched integral-image rows (see ``ref.delta_sat_ref``): within-row
-    prefix of the (1, y, y^2) stack of the changed rows, then a row-direction
-    scan seeded from ``carry`` — two kernel launches regardless of how many
-    rows changed."""
+def _delta_sat_moments(carry, tail, tile, interpret):
     b, m = tail.shape
     stk = jnp.stack([jnp.ones_like(tail), tail, tail * tail], axis=0)
-    inner = scan_rows(stk.reshape(3 * b, m),
+    inner = scan_rows(stk.reshape(3 * b, m), tile, tile,
                       interpret=interpret).reshape(3, b, m)
     # row-direction scan: fold channels x columns into the scan rows and
     # seed the carry with the stored integral-image row above the patch
     rt = inner.transpose(0, 2, 1).reshape(3 * m, b)
     init = carry.astype(tail.dtype).reshape(3 * m, 1)
-    out = scan_rows(rt, interpret=interpret, init=init).reshape(3, m, b)
+    out = scan_rows(rt, tile, tile, interpret=interpret,
+                    init=init).reshape(3, m, b)
     return out.transpose(0, 2, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sat_stack(stk: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
-    """Integral images over the last two axes of a batched stack — the
-    Pallas body of the batched ``streaming_compress`` backend: the moment
-    rasters of all dirty merge-reduce buckets fold into one (L*3*n, m) row
-    scan + one (L*3*m, n) column scan."""
+_delta_jit = functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+_delta_plain = _delta_jit(_delta_sat_moments)
+_delta_donate = _delta_jit(_delta_sat_moments, donate_argnums=(0, 1))
+
+
+def delta_sat_moments(carry: jnp.ndarray, tail: jnp.ndarray,
+                      tile: int = _DEFAULT_TILE,
+                      interpret: bool | None = None,
+                      donate: bool = False) -> jnp.ndarray:
+    """Patched integral-image rows (see ``ref.delta_sat_ref``): within-row
+    prefix of the (1, y, y^2) stack of the changed rows, then a row-direction
+    scan seeded from ``carry`` — two kernel launches regardless of how many
+    rows changed.  ``donate=True`` hands the carry/tail buffers to XLA."""
+    fn = (_delta_donate if donate and _donation_supported()
+          else _delta_plain)
+    return fn(carry, tail, tile=tile, interpret=interpret)
+
+
+def _sat_stack(stk, tile, interpret):
     *lead, n, m = stk.shape
     flat = 1
     for d in lead:
         flat *= int(d)
     x = stk.reshape(flat * n, m)
-    r = scan_rows(x, interpret=interpret).reshape(flat, n, m)
+    r = scan_rows(x, tile, tile, interpret=interpret).reshape(flat, n, m)
     rt = r.transpose(0, 2, 1).reshape(flat * m, n)
-    c = scan_rows(rt, interpret=interpret).reshape(flat, m, n)
+    c = scan_rows(rt, tile, tile, interpret=interpret).reshape(flat, m, n)
     return c.transpose(0, 2, 1).reshape(*lead, n, m)
+
+
+_stack_jit = functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+_stack_plain = _stack_jit(_sat_stack)
+_stack_donate = _stack_jit(_sat_stack, donate_argnums=(0,))
+
+
+def sat_stack(stk: jnp.ndarray, tile: int = _DEFAULT_TILE,
+              interpret: bool | None = None,
+              donate: bool = False) -> jnp.ndarray:
+    """Integral images over the last two axes of a batched stack — the
+    Pallas body of the batched ``streaming_compress`` backend: the moment
+    rasters of all dirty merge-reduce buckets fold into one (L*3*n, m) row
+    scan + one (L*3*m, n) column scan.  ``donate=True`` hands the padded
+    raster stack to XLA (it is rebuilt per call by the backend)."""
+    fn = (_stack_donate if donate and _donation_supported()
+          else _stack_plain)
+    return fn(stk, tile=tile, interpret=interpret)

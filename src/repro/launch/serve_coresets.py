@@ -159,6 +159,50 @@ def run_smoke(*, clients: int = 4, rounds: int = 6, verbose: bool = True) -> int
     return 0 if not errors else 1
 
 
+def _runtime_hygiene(verbose: bool = True) -> None:
+    """Best-effort serving-process hygiene (the process-level half —
+    tcmalloc preload, TF log silencing — lives in ``scripts/run.sh``):
+
+      * persistent XLA compilation cache: jit recompiles of the same
+        kernels across restarts are pure waste on a serving box
+        (``JAX_COMPILATION_CACHE_DIR`` overrides the location);
+      * pre-load the kernel autotune cache so the first dispatch does not
+        pay the disk read + fingerprint check mid-request.
+
+    Every step degrades to a no-op on failure: hygiene must never stop a
+    server from booting.
+    """
+    import os
+    try:
+        import jax
+        cache_dir = (os.environ.get("JAX_COMPILATION_CACHE_DIR")
+                     or os.path.expanduser("~/.cache/repro/jax_cache"))
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        try:    # not present on every jax version shipped in the image
+            jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                              0.5)
+        except Exception:  # noqa: BLE001
+            pass
+        if verbose:
+            print(f"[serve_coresets] XLA compilation cache: {cache_dir}",
+                  flush=True)
+    except Exception as exc:  # noqa: BLE001
+        print(f"[serve_coresets] XLA compilation cache unavailable: "
+              f"{type(exc).__name__}: {exc}", flush=True)
+    try:
+        from repro.ops import autotune
+        snap = autotune.snapshot()
+        if verbose:
+            print(f"[serve_coresets] autotune cache: {snap['entries']} "
+                  f"entries from {snap['cache_path']} "
+                  f"(loaded={snap['cache_loaded']}, "
+                  f"fingerprint {snap['fingerprint']}, "
+                  f"precision={snap['precision_mode']})", flush=True)
+    except Exception as exc:  # noqa: BLE001
+        print(f"[serve_coresets] autotune cache unavailable: "
+              f"{type(exc).__name__}: {exc}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--host", default="127.0.0.1")
@@ -199,9 +243,15 @@ def main() -> None:
     ap.add_argument("--slow-ms", type=float, default=None,
                     help="with --access-log, only log requests taking at "
                          "least this many milliseconds (slow-request log)")
+    ap.add_argument("--no-runtime-hygiene", action="store_true",
+                    help="skip startup hygiene (persistent XLA compilation "
+                         "cache, autotune-cache preload)")
     ap.add_argument("--smoke", action="store_true",
                     help="self-check with concurrent SDK clients, then exit")
     args = ap.parse_args()
+
+    if not args.no_runtime_hygiene:
+        _runtime_hygiene(verbose=not args.smoke)
 
     if args.smoke:
         sys.exit(run_smoke())

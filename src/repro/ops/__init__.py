@@ -25,13 +25,14 @@ from __future__ import annotations
 
 import numpy as np
 
+from . import autotune  # noqa: F401  (tuning cache + precision promotion)
 from . import backends as _backends  # noqa: F401  (registers implementations)
 from .registry import (BACKENDS, ENV_VAR, OPS, BackendError,
                        available_backends, backend_override, dispatch,
                        register, resolve, select_backend, snapshot)
 
 __all__ = [
-    "OPS", "BACKENDS", "ENV_VAR", "BackendError",
+    "OPS", "BACKENDS", "ENV_VAR", "BackendError", "autotune",
     "available_backends", "backend_override", "dispatch", "register",
     "resolve", "select_backend", "selected_backend", "snapshot",
     "sat_moments", "delta_sat", "fitting_loss", "fitting_loss_batched",

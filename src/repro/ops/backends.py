@@ -9,15 +9,26 @@ kernel packages.  Conventions:
     host-level; device-resident pipelines (the mesh-sharded scorer in
     ``core.sharded``) use the kernel/ref modules directly;
   * the ``pallas`` implementations accept ``interpret=`` so tests can pin
-    interpret mode explicitly.
+    interpret mode explicitly;
+  * every implementation accepts ``config=`` — a tuning configuration dict
+    (tile sizes, lowering variant, compensated-summation flag).  ``None``
+    means "consult the autotune cache for this problem size" (a cold cache
+    yields ``{}`` and the built-in defaults below); the tuner passes
+    explicit configs while measuring.  The numpy oracle ignores it.
 
 The dense jnp math exists exactly once, in ``repro.kernels.*.ref`` — the
-xla backends jit those oracles; nothing here re-derives a formula.
+xla backends jit those oracles; nothing here re-derives a formula.  The
+``compensated`` configs run the two-float (TwoSum) twins of the same refs
+and recombine the (hi, lo) pairs in f64 on the host: accelerator-resident
+f32 arithmetic whose result matches the f64 oracle to ~1e-10 scaled
+relative error — the path that lets the autotuner lift a precision pin
+(see ``autotune.py``).
 """
 from __future__ import annotations
 
 import numpy as np
 
+from . import autotune
 from .registry import register
 
 # ------------------------------------------------------------- sat_moments
@@ -26,7 +37,7 @@ from .registry import register
 
 @register("sat_moments", "numpy")
 def _sat_moments_numpy():
-    def sat_moments(y):
+    def sat_moments(y, config=None):
         # canonical order: columns-within-row first, then down the rows, so
         # row i of the result is exactly row i-1 + rowprefix(stk[i]) — the
         # recurrence the delta_sat patch op continues bitwise from a stored
@@ -41,10 +52,17 @@ def _sat_moments_numpy():
 def _sat_moments_xla():
     import jax
     import jax.numpy as jnp
-    from repro.kernels.sat2d.ref import sat_moments_ref
+    from repro.kernels.sat2d.ref import (sat_moments_comp_ref,
+                                         sat_moments_ref, split_hi_lo)
     f = jax.jit(sat_moments_ref)
+    f_comp = jax.jit(sat_moments_comp_ref)
 
-    def sat_moments(y):
+    def sat_moments(y, config=None):
+        cfg = config if config is not None else autotune.plan(
+            "sat_moments", "xla", 3 * np.asarray(y).size)
+        if cfg.get("compensated"):
+            hi, lo = f_comp(*split_hi_lo(y))
+            return np.asarray(hi, np.float64) + np.asarray(lo, np.float64)
         return np.asarray(f(jnp.asarray(y, jnp.float32)))
     return sat_moments
 
@@ -54,9 +72,13 @@ def _sat_moments_pallas():
     import jax.numpy as jnp
     from repro.kernels.sat2d.ops import sat_moments as kernel_sat_moments
 
-    def sat_moments(y, interpret=None):
-        return np.asarray(kernel_sat_moments(jnp.asarray(y, jnp.float32),
-                                             interpret=interpret))
+    def sat_moments(y, interpret=None, config=None):
+        cfg = config if config is not None else autotune.plan(
+            "sat_moments", "pallas", 3 * np.asarray(y).size)
+        # donate: the device copy made here is never reused on the host
+        return np.asarray(kernel_sat_moments(
+            jnp.asarray(y, jnp.float32), tile=int(cfg.get("tile", 256)),
+            interpret=interpret, donate=True))
     return sat_moments
 
 
@@ -68,7 +90,7 @@ def _sat_moments_pallas():
 
 @register("delta_sat", "numpy")
 def _delta_sat_numpy():
-    def delta_sat(carry, tail):
+    def delta_sat(carry, tail, config=None):
         t = np.asarray(tail, np.float64)
         stk = np.stack([np.ones_like(t), t, t * t], axis=0)
         inner = np.cumsum(stk, axis=2)
@@ -86,10 +108,19 @@ def _delta_sat_numpy():
 def _delta_sat_xla():
     import jax
     import jax.numpy as jnp
-    from repro.kernels.sat2d.ref import delta_sat_ref
+    from repro.kernels.sat2d.ref import (delta_sat_comp_ref, delta_sat_ref,
+                                         split_hi_lo)
     f = jax.jit(delta_sat_ref)
+    f_comp = jax.jit(delta_sat_comp_ref)
 
-    def delta_sat(carry, tail):
+    def delta_sat(carry, tail, config=None):
+        cfg = config if config is not None else autotune.plan(
+            "delta_sat", "xla", 3 * np.asarray(tail).size)
+        if cfg.get("compensated"):
+            # the stored carry enters as its own (hi, lo) pair, so chained
+            # patches keep full two-float precision across calls
+            hi, lo = f_comp(*split_hi_lo(carry), *split_hi_lo(tail))
+            return np.asarray(hi, np.float64) + np.asarray(lo, np.float64)
         return np.asarray(f(jnp.asarray(carry, jnp.float32),
                             jnp.asarray(tail, jnp.float32)))
     return delta_sat
@@ -100,10 +131,12 @@ def _delta_sat_pallas():
     import jax.numpy as jnp
     from repro.kernels.sat2d.ops import delta_sat_moments
 
-    def delta_sat(carry, tail, interpret=None):
-        return np.asarray(delta_sat_moments(jnp.asarray(carry, jnp.float32),
-                                            jnp.asarray(tail, jnp.float32),
-                                            interpret=interpret))
+    def delta_sat(carry, tail, interpret=None, config=None):
+        cfg = config if config is not None else autotune.plan(
+            "delta_sat", "pallas", 3 * np.asarray(tail).size)
+        return np.asarray(delta_sat_moments(
+            jnp.asarray(carry, jnp.float32), jnp.asarray(tail, jnp.float32),
+            tile=int(cfg.get("tile", 256)), interpret=interpret, donate=True))
     return delta_sat
 
 
@@ -115,7 +148,7 @@ def _delta_sat_pallas():
 def _fitting_loss_numpy():
     from repro.core.fitting_loss import fitting_loss
 
-    def fl(cs, seg_rects, seg_labels):
+    def fl(cs, seg_rects, seg_labels, config=None):
         return float(fitting_loss(cs, seg_rects, seg_labels))
     return fl
 
@@ -127,7 +160,7 @@ def _fitting_loss_xla():
     from repro.kernels.fitting_loss.ref import fitting_loss_ref
     f = jax.jit(fitting_loss_ref)
 
-    def fl(cs, seg_rects, seg_labels):
+    def fl(cs, seg_rects, seg_labels, config=None):
         return float(f(
             jnp.asarray(cs.rects, jnp.float32),
             jnp.asarray(cs.labels, jnp.float32),
@@ -141,8 +174,13 @@ def _fitting_loss_xla():
 def _fitting_loss_pallas():
     from repro.kernels.fitting_loss.ops import coreset_loss
 
-    def fl(cs, seg_rects, seg_labels, interpret=None):
+    def fl(cs, seg_rects, seg_labels, interpret=None, config=None):
+        cfg = config if config is not None else autotune.plan(
+            "fitting_loss", "pallas",
+            cs.num_blocks * max(np.asarray(seg_rects).reshape(-1, 4).shape[0],
+                                1))
         return float(coreset_loss(cs, seg_rects, seg_labels,
+                                  tile_b=int(cfg.get("tile_b", 1024)),
                                   interpret=interpret))
     return fl
 
@@ -155,7 +193,7 @@ def _fitting_loss_pallas():
 def _fitting_loss_batched_numpy():
     from repro.core.fitting_loss import fitting_loss
 
-    def fb(cs, seg_rects, seg_labels):
+    def fb(cs, seg_rects, seg_labels, config=None):
         return np.array([fitting_loss(cs, r, l)
                          for r, l in zip(seg_rects, seg_labels)], np.float64)
     return fb
@@ -168,7 +206,7 @@ def _fitting_loss_batched_xla():
     from repro.kernels.fitting_loss.ref import fitting_loss_batched_ref
     f = jax.jit(fitting_loss_batched_ref)
 
-    def fb(cs, seg_rects, seg_labels):
+    def fb(cs, seg_rects, seg_labels, config=None):
         return np.asarray(f(
             jnp.asarray(cs.rects, jnp.float32),
             jnp.asarray(cs.labels, jnp.float32),
@@ -182,10 +220,16 @@ def _fitting_loss_batched_xla():
 def _fitting_loss_batched_pallas():
     from repro.kernels.fitting_loss.ops import coreset_loss_batched
 
-    def fb(cs, seg_rects, seg_labels, interpret=None):
-        return np.asarray(coreset_loss_batched(cs, seg_rects, seg_labels,
-                                               interpret=interpret),
-                          np.float64)
+    def fb(cs, seg_rects, seg_labels, interpret=None, config=None):
+        sr = np.asarray(seg_rects)
+        cfg = config if config is not None else autotune.plan(
+            "fitting_loss_batched", "pallas",
+            cs.num_blocks * sr.shape[0] * max(sr.shape[1], 1))
+        return np.asarray(coreset_loss_batched(
+            cs, seg_rects, seg_labels,
+            tile_b=int(cfg.get("tile_b", 512)),
+            tile_t=int(cfg.get("tile_t", 8)),
+            interpret=interpret), np.float64)
     return fb
 
 
@@ -195,7 +239,7 @@ def _fitting_loss_batched_pallas():
 
 @register("hist_split", "numpy")
 def _hist_split_numpy():
-    def hist(codes, w, wy, wy2, n_bins):
+    def hist(codes, w, wy, wy2, n_bins, config=None):
         codes = np.asarray(codes)
         out = np.empty((codes.shape[1], n_bins, 3), np.float64)
         for f in range(codes.shape[1]):
@@ -213,22 +257,70 @@ def _hist_split_xla():
 
     import jax
     import jax.numpy as jnp
+    from repro.kernels.sat2d.ref import split_hi_lo
+
+    # compensated variant: P-axis chunk combined in f64.  Short chunks keep
+    # the *within*-chunk f32 accumulation (which the hi/lo split does not
+    # compensate — only the input cast error) to ~32 adds per bin, an order
+    # of magnitude inside the 1e-6 certificate bound.
+    _CHUNK = 8192
 
     # segment-sum per feature: O(P*F) work and memory, unlike the one-hot
     # einsum oracle in kernels/histsplit/ref.py whose (P, F, n_bins) one-hot
     # would blow up host memory at training sizes
     @functools.partial(jax.jit, static_argnames=("n_bins",))
-    def _hist(codes, vals, n_bins):
+    def _hist_vmap(codes, vals, n_bins):
         def one(c):
             return jax.ops.segment_sum(vals, c, num_segments=n_bins)
-        return jax.vmap(one, in_axes=1)(codes)          # (F, n_bins, 3)
+        return jax.vmap(one, in_axes=1)(codes)          # (F, n_bins, S)
 
-    def hist(codes, w, wy, wy2, n_bins):
-        codes = jnp.asarray(np.asarray(codes), jnp.int32)
+    # one flat segment-sum over F*n_bins fused ids instead of a vmap of F
+    # scatters — algorithmically the same sums, a different XLA lowering
+    @functools.partial(jax.jit, static_argnames=("n_bins",))
+    def _hist_flat(codes, vals, n_bins):
+        P, F = codes.shape
+        ids = (codes + jnp.arange(F, dtype=codes.dtype)[None, :] * n_bins)
+        out = jax.ops.segment_sum(
+            jnp.broadcast_to(vals[:, None, :], (P, F, vals.shape[1]))
+            .reshape(P * F, vals.shape[1]),
+            ids.reshape(P * F), num_segments=F * n_bins)
+        return out.reshape(F, n_bins, vals.shape[1])
+
+    # compensated: per-chunk f32 segment sums of the (hi, lo) channel pairs,
+    # combined across chunks (and hi+lo) in f64 on the host
+    @functools.partial(jax.jit, static_argnames=("n_bins",))
+    def _hist_chunked(codes, vals, n_bins):
+        def one_chunk(c, v):
+            def one(cf):
+                return jax.ops.segment_sum(v, cf, num_segments=n_bins)
+            return jax.vmap(one, in_axes=1)(c)
+        return jax.vmap(one_chunk)(codes, vals)         # (C, F, n_bins, 6)
+
+    def hist(codes, w, wy, wy2, n_bins, config=None):
+        codes = np.asarray(codes)
+        cfg = config if config is not None else autotune.plan(
+            "hist_split", "xla", codes.size)
+        if cfg.get("compensated"):
+            pairs = [split_hi_lo(a) for a in (w, wy, wy2)]
+            vals = jnp.stack([p[0] for p in pairs]
+                             + [p[1] for p in pairs], axis=1)   # (P, 6)
+            P = codes.shape[0]
+            pad = (-P) % _CHUNK
+            cj = jnp.asarray(codes, jnp.int32)
+            if pad:
+                cj = jnp.pad(cj, ((0, pad), (0, 0)))    # bin 0, zero weights
+                vals = jnp.pad(vals, ((0, pad), (0, 0)))
+            C = cj.shape[0] // _CHUNK
+            out = np.asarray(_hist_chunked(
+                cj.reshape(C, _CHUNK, -1), vals.reshape(C, _CHUNK, 6),
+                n_bins), np.float64)
+            return out[..., :3].sum(axis=0) + out[..., 3:].sum(axis=0)
+        f = _hist_flat if cfg.get("variant") == "flat" else _hist_vmap
         vals = jnp.stack([jnp.asarray(w, jnp.float32),
                           jnp.asarray(wy, jnp.float32),
                           jnp.asarray(wy2, jnp.float32)], axis=1)
-        return np.asarray(_hist(codes, vals, n_bins), np.float64)
+        return np.asarray(f(jnp.asarray(codes, jnp.int32), vals, n_bins),
+                          np.float64)
     return hist
 
 
@@ -236,8 +328,14 @@ def _hist_split_xla():
 def _hist_split_pallas():
     from repro.kernels.histsplit.ops import histograms
 
-    def hist(codes, w, wy, wy2, n_bins):
-        return np.asarray(histograms(codes, w, wy, wy2, n_bins), np.float64)
+    def hist(codes, w, wy, wy2, n_bins, interpret=None, config=None):
+        cfg = config if config is not None else autotune.plan(
+            "hist_split", "pallas", np.asarray(codes).size)
+        return np.asarray(histograms(
+            codes, w, wy, wy2, n_bins,
+            tile_p=int(cfg.get("tile_p", 2048)),
+            variant=cfg.get("variant", "fused"),
+            interpret=interpret), np.float64)
     return hist
 
 
@@ -249,12 +347,12 @@ def _hist_split_pallas():
 # finish are shared host code in core.streaming.
 
 
-def _stack_rasters(preps):
+def _stack_rasters(preps, dtype=np.float32):
     """Pad the per-bucket (3, n, m) moment rasters to one (L, 3, nmax, mmax)
     stack so the accelerator backends integrate every bucket in one call."""
     nmax = max(p.rasters[0].shape[0] for p in preps)
     mmax = max(p.rasters[0].shape[1] for p in preps)
-    stk = np.zeros((len(preps), 3, nmax, mmax), np.float32)
+    stk = np.zeros((len(preps), 3, nmax, mmax), dtype)
     for i, p in enumerate(preps):
         n, m = p.rasters[0].shape
         for c in range(3):
@@ -273,9 +371,13 @@ def _finish_from_sats(coresets, preps, sats, k, eps):
     return out
 
 
+def _compress_size(coresets) -> int:
+    return 3 * sum(int(cs.n) * int(cs.m) for cs in coresets)
+
+
 @register("streaming_compress", "numpy")
 def _streaming_compress_numpy():
-    def sc(coresets, k=None, eps=None):
+    def sc(coresets, k=None, eps=None, config=None):
         from repro.core.stats import PrefixStats
         from repro.core.streaming import _recompress_finish, _recompress_prep
         out = []
@@ -291,13 +393,21 @@ def _streaming_compress_numpy():
 def _streaming_compress_xla():
     import jax
     import jax.numpy as jnp
-    from repro.kernels.sat2d.ref import sat_stack_ref
+    from repro.kernels.sat2d.ref import (sat_stack_comp_ref, sat_stack_ref,
+                                         split_hi_lo)
     f = jax.jit(sat_stack_ref)
+    f_comp = jax.jit(sat_stack_comp_ref)
 
-    def sc(coresets, k=None, eps=None):
+    def sc(coresets, k=None, eps=None, config=None):
         from repro.core.streaming import _recompress_prep
+        cfg = config if config is not None else autotune.plan(
+            "streaming_compress", "xla", _compress_size(coresets))
         preps = [_recompress_prep(cs) for cs in coresets]
-        sats = np.asarray(f(jnp.asarray(_stack_rasters(preps))))
+        if cfg.get("compensated"):
+            hi, lo = f_comp(*split_hi_lo(_stack_rasters(preps, np.float64)))
+            sats = (np.asarray(hi, np.float64) + np.asarray(lo, np.float64))
+        else:
+            sats = np.asarray(f(jnp.asarray(_stack_rasters(preps))))
         return _finish_from_sats(coresets, preps, sats, k, eps)
     return sc
 
@@ -307,10 +417,13 @@ def _streaming_compress_pallas():
     import jax.numpy as jnp
     from repro.kernels.sat2d.ops import sat_stack
 
-    def sc(coresets, k=None, eps=None, interpret=None):
+    def sc(coresets, k=None, eps=None, interpret=None, config=None):
         from repro.core.streaming import _recompress_prep
+        cfg = config if config is not None else autotune.plan(
+            "streaming_compress", "pallas", _compress_size(coresets))
         preps = [_recompress_prep(cs) for cs in coresets]
         sats = np.asarray(sat_stack(jnp.asarray(_stack_rasters(preps)),
-                                    interpret=interpret))
+                                    tile=int(cfg.get("tile", 256)),
+                                    interpret=interpret, donate=True))
         return _finish_from_sats(coresets, preps, sats, k, eps)
     return sc

@@ -18,8 +18,12 @@ directly.  Selection order:
      name for every op (``REPRO_OPS_BACKEND=pallas``) or a comma list of
      ``op=backend`` pairs with an optional bare default
      (``REPRO_OPS_BACKEND=xla,hist_split=numpy``);
-  4. capability: on a TPU host, ``pallas`` (the kernels are written for it);
-  5. size: below the per-op ``XLA_SIZE_THRESHOLD`` the numpy oracle wins
+  4. the **autotune cache** (see ``autotune.py``): a persisted, measured
+     winner for this (op, device, shape bucket) — only consulted when it
+     beat the numpy oracle at tune time, and for precision-pinned ops only
+     with a passing compensated-parity certificate;
+  5. capability: on a TPU host, ``pallas`` (the kernels are written for it);
+  6. size: below the per-op ``XLA_SIZE_THRESHOLD`` the numpy oracle wins
      (no dispatch/compile overhead), above it the jitted xla path.
      Precision-critical ops (``XLA_SIZE_THRESHOLD[op] is None``) never
      size-promote to the float32 accelerator backends, and interpret-mode
@@ -149,6 +153,10 @@ def select_backend(op: str, size: int | None = None) -> str:
     env = _env_choice(op)
     if env is not None:
         return env
+    from . import autotune
+    tuned = autotune.tuned_backend(op, size)
+    if tuned is not None:
+        return tuned
     if _platform_is_tpu():
         return "pallas"
     thr = XLA_SIZE_THRESHOLD[op]

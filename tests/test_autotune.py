@@ -1,0 +1,266 @@
+"""repro.ops.autotune — tuning-cache lifecycle (round-trip; corrupt, wrong
+schema version, and stale kernel fingerprint all fall back to heuristics),
+promotion rules (a tuned backend must have beaten the numpy oracle, pinned
+ops additionally need a compensated-parity certificate, interpret-mode
+Pallas never auto-promotes off-TPU), selection precedence (override and env
+beat tuned entries, ``REPRO_OPS_PRECISION=f64`` holds the pin), dispatch
+counters, and compensated-f32 parity at awkward shapes (off tile/chunk
+quantum, single-bin histograms, zero-weight rows through padded blocks)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import ops
+from repro.ops import autotune
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture()
+def tune_cache(tmp_path, monkeypatch):
+    """A private cache file per test; the module cache reloads on repoint."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV_VAR, str(path))
+    autotune.reset_cache()
+    yield path
+    autotune.reset_cache()
+
+
+def _seed_entry(op, backend, size, *, us=10.0, numpy_us=100.0, config=None,
+                rel_err=None):
+    """Plant a measured-looking entry at size's bucket; returns the bucket."""
+    bucket = autotune.shape_bucket(size)
+    entry = {"config": config or {}, "us": us, "numpy_us": numpy_us,
+             "size": int(size), "bucket": bucket}
+    if rel_err is not None:
+        entry["rel_err"] = rel_err
+    autotune.get_cache().put(op, backend, bucket, entry)
+    return bucket
+
+
+# fitting_loss_batched is NOT precision-pinned and its static threshold is
+# 1 << 16, so at this size the heuristics say numpy — any accelerator
+# selection below can only have come from the tuning cache
+_OP, _SIZE = "fitting_loss_batched", 1024
+
+
+# --------------------------------------------------------------- lifecycle
+def test_cache_round_trip(tune_cache):
+    _seed_entry(_OP, "xla", _SIZE, config={"tile_b": 256})
+    saved = autotune.get_cache().save()
+    assert saved == tune_cache
+    autotune.reset_cache()
+    cache = autotune.get_cache()
+    assert cache.loaded_from_disk
+    entry = cache.get(_OP, "xla", autotune.shape_bucket(_SIZE))
+    assert entry is not None and entry["config"] == {"tile_b": 256}
+
+
+def test_corrupt_cache_falls_back_cleanly(tune_cache):
+    tune_cache.write_text("{corrupt json")
+    before = autotune.counters_snapshot()["cache_load_errors"]
+    autotune.reset_cache()
+    cache = autotune.get_cache()
+    assert not cache.entries and not cache.loaded_from_disk
+    assert autotune.counters_snapshot()["cache_load_errors"] == before + 1
+    # dispatch must survive on heuristics
+    assert ops.select_backend(_OP, _SIZE) == "numpy"
+    np.testing.assert_allclose(
+        ops.sat_moments([[1.0, 2.0], [3.0, 4.0]])[0, -1, -1], 4.0)
+
+
+@pytest.mark.parametrize("doc", [
+    {"version": 999, "fingerprint": None, "entries": {}},       # wrong schema
+    {"version": autotune.SCHEMA_VERSION, "fingerprint": "0" * 12,
+     "entries": {}},                                            # stale kernels
+], ids=["schema-version", "kernel-fingerprint"])
+def test_stale_cache_discarded(tune_cache, doc):
+    if doc["fingerprint"] is None:
+        doc["fingerprint"] = autotune.kernel_fingerprint()
+    doc["entries"] = {autotune.TuneCache.key(
+        _OP, "xla", autotune.device_kind(), autotune.shape_bucket(_SIZE)):
+        {"config": {}, "us": 1.0, "numpy_us": 100.0}}
+    tune_cache.write_text(json.dumps(doc))
+    before = autotune.counters_snapshot()["cache_load_errors"]
+    autotune.reset_cache()
+    assert not autotune.get_cache().entries
+    assert autotune.counters_snapshot()["cache_load_errors"] == before + 1
+    assert ops.select_backend(_OP, _SIZE) == "numpy"
+
+
+# ---------------------------------------------------------------- promotion
+def test_promotion_requires_beating_numpy(tune_cache):
+    _seed_entry(_OP, "xla", _SIZE, us=500.0, numpy_us=100.0)   # oracle won
+    assert ops.select_backend(_OP, _SIZE) == "numpy"
+    _seed_entry(_OP, "xla", _SIZE, us=10.0, numpy_us=100.0)    # tuned win
+    before = autotune.counters_snapshot()["tuned_dispatch"]
+    assert ops.select_backend(_OP, _SIZE) == "xla"
+    assert autotune.counters_snapshot()["tuned_dispatch"] == before + 1
+    # a different bucket is a cold miss: heuristics again
+    assert ops.select_backend(_OP, 1 << 20) == "xla"   # static threshold
+    assert ops.select_backend(_OP, 64) == "numpy"
+
+
+def test_interpret_pallas_never_promoted_off_tpu(tune_cache):
+    _seed_entry(_OP, "pallas", _SIZE, us=1.0, numpy_us=100.0)
+    want = "pallas" if autotune.device_kind() == "tpu" else "numpy"
+    assert ops.select_backend(_OP, _SIZE) == want
+
+
+def test_override_and_env_beat_tuned(tune_cache, monkeypatch):
+    _seed_entry(_OP, "xla", _SIZE, us=10.0, numpy_us=100.0)
+    assert ops.select_backend(_OP, _SIZE) == "xla"
+    monkeypatch.setenv(ops.ENV_VAR, "numpy")
+    assert ops.select_backend(_OP, _SIZE) == "numpy"
+    monkeypatch.delenv(ops.ENV_VAR)
+    with ops.backend_override("numpy"):
+        assert ops.select_backend(_OP, _SIZE) == "numpy"
+    assert ops.select_backend(_OP, _SIZE) == "xla"
+
+
+def test_disable_env_kills_tuned_selection(tune_cache, monkeypatch):
+    _seed_entry(_OP, "xla", _SIZE, us=10.0, numpy_us=100.0)
+    monkeypatch.setenv(autotune.DISABLE_ENV_VAR, "0")
+    assert autotune.tuned_backend(_OP, _SIZE) is None
+    assert ops.select_backend(_OP, _SIZE) == "numpy"
+    assert autotune.plan(_OP, "xla", _SIZE) == {}
+
+
+def test_pinned_promotion_needs_parity_certificate(tune_cache):
+    # hist_split is precision-pinned: a win alone must NOT lift the pin
+    size = 40_000 * 4
+    _seed_entry("hist_split", "xla", size, us=10.0, numpy_us=100.0,
+                config={"variant": "flat", "compensated": False})
+    assert ops.select_backend("hist_split", size) == "numpy"
+    # compensated but failing the certificate: pin still holds
+    _seed_entry("hist_split", "xla", size, us=10.0, numpy_us=100.0,
+                config={"variant": "chunked", "compensated": True},
+                rel_err=5e-6)
+    assert ops.select_backend("hist_split", size) == "numpy"
+    # compensated with a passing certificate: promoted, and counted
+    before = autotune.counters_snapshot()["promoted_f32"]
+    _seed_entry("hist_split", "xla", size, us=10.0, numpy_us=100.0,
+                config={"variant": "chunked", "compensated": True},
+                rel_err=2e-8)
+    assert ops.select_backend("hist_split", size) == "xla"
+    assert autotune.counters_snapshot()["promoted_f32"] == before + 1
+
+
+def test_precision_mode_f64_and_fast(tune_cache, monkeypatch):
+    size = 40_000 * 4
+    _seed_entry("hist_split", "xla", size, us=10.0, numpy_us=100.0,
+                config={"variant": "chunked", "compensated": True},
+                rel_err=2e-8)
+    assert ops.select_backend("hist_split", size) == "xla"
+    monkeypatch.setenv(autotune.PRECISION_ENV_VAR, "f64")   # escape hatch
+    assert ops.select_backend("hist_split", size) == "numpy"
+    # fast mode waives the certificate entirely (documented TPU trade-off)
+    monkeypatch.setenv(autotune.PRECISION_ENV_VAR, "fast")
+    _seed_entry("hist_split", "xla", size, us=10.0, numpy_us=100.0,
+                config={"variant": "flat", "compensated": False})
+    assert ops.select_backend("hist_split", size) == "xla"
+
+
+def test_plan_serves_config_and_counts(tune_cache):
+    before = autotune.counters_snapshot()
+    assert autotune.plan(_OP, "xla", _SIZE) == {}           # cold miss
+    _seed_entry(_OP, "xla", _SIZE, config={"tile_b": 512})
+    assert autotune.plan(_OP, "xla", _SIZE) == {"tile_b": 512}
+    assert autotune.plan(_OP, "numpy", _SIZE) == {}         # oracle untouched
+    after = autotune.counters_snapshot()
+    assert after["cache_miss"] == before["cache_miss"] + 1
+    assert after["cache_hit"] == before["cache_hit"] + 1
+
+
+def test_tune_op_records_winner_and_certificate(tune_cache):
+    winners = autotune.tune_op("sat_moments", budget="quick")
+    assert "xla" in winners
+    entry = winners["xla"]
+    assert entry["us"] > 0 and entry["numpy_us"] > 0
+    assert "rel_err" in entry and "config" in entry
+    bucket = entry["bucket"]
+    assert autotune.get_cache().get("sat_moments", "xla", bucket) == entry
+    # the quick budget must include a compensated candidate measurement
+    # somewhere in the recorded winner or its search space
+    assert any(c.get("compensated") for c in
+               autotune.SEARCH_SPACE["sat_moments"]["xla"])
+
+
+# -------------------------------------------- compensated-f32 parity, edges
+def _rel(got, want):
+    return autotune._scaled_rel_err(got, want)
+
+
+def test_compensated_sat_parity_off_tile_quantum():
+    # 131 x 67: off the 128-row tile quantum, large offset so plain f32
+    # cumsum error is visible while the two-float path stays certified
+    y = RNG.normal(size=(131, 67)) + 1e6
+    want = ops.sat_moments(y, backend="numpy")
+    got = ops.sat_moments(y, backend="xla", config={"compensated": True})
+    assert _rel(got, want) <= autotune.PARITY_RTOL
+
+
+def test_compensated_delta_sat_parity():
+    y = RNG.normal(size=(34, 257)) + 1e5      # odd band, off-quantum width
+    carry = ops.sat_moments(y[:1], backend="numpy")[:, 0, :]
+    want = ops.delta_sat(carry, y[1:], backend="numpy")
+    got = ops.delta_sat(carry, y[1:], backend="xla",
+                        config={"compensated": True})
+    assert _rel(got, want) <= autotune.PARITY_RTOL
+
+
+def _hist_problem(P, F, B, zero_frac=0.0):
+    codes = RNG.integers(0, B, size=(P, F)).astype(np.uint8)
+    w = RNG.uniform(0.5, 1.5, P)
+    if zero_frac:
+        w[RNG.random(P) < zero_frac] = 0.0    # zero-weight rows must vanish
+    yv = RNG.normal(size=P) + 100.0
+    return codes, w, w * yv, w * yv * yv
+
+
+@pytest.mark.parametrize("config", [
+    {"variant": "chunked", "compensated": True},
+    {"variant": "partials", "compensated": True, "tile_p": 512},
+], ids=["xla-chunked", "pallas-partials"])
+def test_compensated_hist_parity_awkward_shapes(config):
+    backend = "pallas" if config["variant"] == "partials" else "xla"
+    # P=4097: off both the 512 Pallas tile and the 8192 XLA chunk quantum,
+    # so the padded tail blocks (zero-weight by construction) are exercised
+    codes, w, wy, wy2 = _hist_problem(4097, 3, 16, zero_frac=0.1)
+    want = ops.hist_split(codes, w, wy, wy2, 16, backend="numpy")
+    got = ops.hist_split(codes, w, wy, wy2, 16, backend=backend,
+                         config=config)
+    assert _rel(got, want) <= autotune.PARITY_RTOL
+
+
+@pytest.mark.parametrize("config", [
+    {"variant": "chunked", "compensated": True},
+    {"variant": "partials", "compensated": True, "tile_p": 512},
+], ids=["xla-chunked", "pallas-partials"])
+def test_compensated_hist_parity_single_bin(config):
+    backend = "pallas" if config["variant"] == "partials" else "xla"
+    codes, w, wy, wy2 = _hist_problem(1023, 2, 1)    # n_bins=1 degenerate
+    want = ops.hist_split(codes, w, wy, wy2, 1, backend="numpy")
+    got = ops.hist_split(codes, w, wy, wy2, 1, backend=backend,
+                         config=config)
+    assert _rel(got, want) <= autotune.PARITY_RTOL
+
+
+# ------------------------------------------------------------ service plane
+def test_engine_stats_surface_autotune(tune_cache):
+    from repro.service.engine import CoresetEngine
+    _seed_entry(_OP, "xla", _SIZE, us=10.0, numpy_us=100.0)
+    assert ops.select_backend(_OP, _SIZE) == "xla"   # bump tuned_dispatch
+    eng = CoresetEngine(cache_bytes=1 << 20, workers=1)
+    try:
+        st = eng.stats()
+        assert st["ops_autotune"]["entries"] == 1
+        assert st["ops_autotune"]["enabled"] is True
+        counters = st["metrics"]["counters"]
+        assert counters.get("ops_autotune_tuned_dispatch", 0) >= 1
+        # render must expose the family for Prometheus scrapes
+        eng.sync_autotune_metrics()
+        assert "ops_autotune_tuned_dispatch" in eng.metrics.render()
+    finally:
+        eng.close()
