@@ -29,11 +29,19 @@ for CI to compare.
   python benchmarks/bench_service.py --encoding json
   python benchmarks/bench_service.py --smoke              # 2 s (CI)
   python benchmarks/bench_service.py --smoke --cluster    # distributed plane
+  python benchmarks/bench_service.py --smoke --delta-mix 0.3  # re-anchor probe
+  python benchmarks/bench_service.py --smoke --stream     # v2 streaming probe
 
 ``--cluster`` swaps the single-host engine for the distributed serving
 plane — 3 in-process ShardWorkers behind a ClusterEngine coordinator — so
 the ``cluster`` row measures register-with-band-scatter and builds that
 gather/compose remote band coresets, on the same traffic mix.
+``--delta-mix`` and ``--stream`` are dedicated probe runs (they replace
+the loadgen): the first measures the delta-write path split by whether it
+re-anchored and the build latency served off a re-anchored entry, the
+second the v2 chunked streaming encoder's peak memory and compress p50s
+vs the buffered v1 body.  Both merge their own mode row into
+``bench_service.json`` for the ``stream`` regression suite.
 """
 from __future__ import annotations
 
@@ -184,6 +192,174 @@ def _tracing_probe(n: int, m: int, k_max: int, *, queries: int = 150,
     return {"on_p50_ms": 1e3 * best[True], "off_p50_ms": 1e3 * best[False],
             "overhead_frac": best_frac,
             "queries_per_arm": queries, "reps": reps}
+
+
+def _delta_mix_probe(duration: float, m: int, k_max: int,
+                     replace_frac: float, encoding: str = "binary") -> dict:
+    """Delta-write workload: a streamed signal absorbing a mix of appends
+    and in-place replaces, with a build after every delta.
+
+    Appends alternate naturally between the metadata-only re-anchor path
+    (even prior band count) and the invalidate+rebuild fallback (odd), and
+    every replace invalidates — so one run measures both sides:
+
+      * ``reanchor_ingest_p50_ms`` / ``rebuild_ingest_p50_ms``: the delta
+        write itself, split by whether it re-anchored;
+      * ``reanchor_hit_p50_ms``: the build AFTER a re-anchoring delta —
+        the gated number; it must be a pure cache hit;
+      * ``post_reanchor_miss_rate``: fraction of those builds NOT served
+        ``exact`` — the zero-rebuild guarantee, gated at ~0.
+    """
+    metrics = ServiceMetrics()
+    engine = CoresetEngine(workers=4, metrics=metrics)
+    srv = make_server(engine)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    cl = CoresetClient(base, encoding=encoding)
+    rows, gen = 8, 0
+    rng = np.random.default_rng(7)
+
+    def band(seed):
+        return piecewise_signal(rows, m, 4, noise=0.15, seed=seed)
+
+    def seed_signal():
+        nonlocal gen
+        gen += 1
+        name = f"bench-delta-{gen}"
+        cl.ingest(name, band=band(gen))
+        cl.ingest(name, band=band(gen + 1))
+        cl.build(name, k_max, 0.3)
+        return name, 2
+
+    name, nbands = seed_signal()
+    counts = {"append": 0, "replace": 0, "reanchored": 0}
+    ingest_lat = {"reanchor": [], "rebuild": []}
+    hit_lat: list[float] = []
+    misses = hits = 0
+    deadline = time.perf_counter() + duration
+    while time.perf_counter() < deadline:
+        if nbands >= 64:                      # keep the signal bounded
+            name, nbands = seed_signal()
+        do_replace = rng.uniform() < replace_frac
+        t0 = time.perf_counter()
+        if do_replace:
+            r0 = int(rng.integers(0, nbands)) * rows
+            r = cl.ingest_delta(name, band(int(rng.integers(1 << 30))),
+                                row0=r0)
+            counts["replace"] += 1
+        else:
+            r = cl.ingest_delta(name, band(int(rng.integers(1 << 30))))
+            counts["append"] += 1
+            nbands += 1
+        dt = time.perf_counter() - t0
+        reanchored = r.entries_reanchored > 0
+        counts["reanchored"] += int(reanchored)
+        ingest_lat["reanchor" if reanchored else "rebuild"].append(dt)
+        t0 = time.perf_counter()
+        b = cl.build(name, k_max, 0.3)
+        dt = time.perf_counter() - t0
+        if reanchored:
+            hit_lat.append(dt)
+            if b.served_from == "exact":
+                hits += 1
+            else:
+                misses += 1
+    snap = metrics.snapshot()["counters"]
+    srv.shutdown()
+    engine.close()
+
+    def p50(xs):
+        return 1e3 * float(np.sort(xs)[len(xs) // 2]) if xs else None
+
+    return {"mode": "delta_mix", "duration_s": duration,
+            "replace_frac": replace_frac, "deltas": counts,
+            "reanchor_ingest_p50_ms": p50(ingest_lat["reanchor"]),
+            "rebuild_ingest_p50_ms": p50(ingest_lat["rebuild"]),
+            "reanchor_hit_p50_ms": p50(hit_lat),
+            "post_reanchor_miss_rate": misses / max(hits + misses, 1),
+            "cache": {"reanchored": snap.get("cache_reanchored", 0),
+                      "reanchor_candidates":
+                          snap.get("cache_reanchor_candidates", 0),
+                      "builds": snap.get("coreset_builds", 0)}}
+
+
+def _stream_probe(points: int, reps: int = 15) -> dict:
+    """v2 streaming vs v1 buffered on one block-rich compress response.
+
+    Encode-side peak memory is the gated number: the buffered v1 body
+    materializes raw npz + compressed frame at once, the v2 generator
+    holds one chunk — ``encode_peak_ratio`` (tracemalloc peaks, stream
+    over buffered) must stay well under 1.  HTTP p50s ride along from a
+    small in-process server with a sub-chunk-size override so the
+    latency row exercises real multi-segment transfers.
+    """
+    import tracemalloc
+
+    from repro.service import protocol as P
+
+    rng = np.random.default_rng(3)
+    resp = P.CompressResponse(
+        k=5, eps_eff=0.2, served_from="exact", fingerprint="cd" * 16,
+        size=points, blocks=points // 4, nbytes=points * 32,
+        compression_ratio=0.5, truncated=False,
+        X=rng.random((points, 2)) * 512, y=rng.random(points),
+        w=rng.random(points) + 0.5)
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    t0 = time.perf_counter()
+    _, frame = resp.to_wire("binary")
+    buffered_encode_s = time.perf_counter() - t0
+    buffered_bytes = len(frame)
+    buffered_peak = tracemalloc.get_traced_memory()[1]
+    del frame
+    tracemalloc.reset_peak()
+    t0 = time.perf_counter()
+    stream_peak = max_segment = wire_bytes = chunks = 0
+    for seg in P.compress_stream_segments(resp):
+        wire_bytes += len(seg)
+        max_segment = max(max_segment, len(seg))
+        chunks += 1
+        stream_peak = max(stream_peak, tracemalloc.get_traced_memory()[1])
+        tracemalloc.reset_peak()
+    stream_encode_s = time.perf_counter() - t0
+    tracemalloc.stop()
+    chunks -= 2                               # magic+header and trailer
+
+    # HTTP p50s: cached compress served buffered (v1) vs streamed (v2)
+    engine = CoresetEngine(workers=4, metrics=ServiceMetrics())
+    srv = make_server(engine, stream_chunk_points=2048)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    y = np.random.default_rng(5).random((128, 128)) * 8.0
+    v1 = CoresetClient(base, encoding="binary", stream=False)
+    v2 = CoresetClient(base, encoding="binary")
+    v1.register_signal("bench-stream-probe", y, replace=True)
+    kw = dict(eps=0.03, max_points=1 << 20)
+    v1.compress("bench-stream-probe", 4, **kw)     # warm the cache
+    lats = {"buffered": [], "stream": []}
+    for _ in range(reps):
+        for arm, c in (("buffered", v1), ("stream", v2)):
+            t0 = time.perf_counter()
+            c.compress("bench-stream-probe", 4, **kw)
+            lats[arm].append(time.perf_counter() - t0)
+    http_chunks = v2.last_stream_chunks
+    srv.shutdown()
+    engine.close()
+
+    def p50(xs):
+        return 1e3 * float(np.sort(xs)[len(xs) // 2])
+
+    return {"mode": "stream", "points": points, "chunks": chunks,
+            "wire_bytes": wire_bytes, "buffered_bytes": buffered_bytes,
+            "max_segment_bytes": max_segment,
+            "encode_peak_bytes": {"buffered": buffered_peak,
+                                  "stream": stream_peak},
+            "encode_peak_ratio": stream_peak / max(buffered_peak, 1),
+            "buffered_encode_ms": 1e3 * buffered_encode_s,
+            "stream_encode_ms": 1e3 * stream_encode_s,
+            "http_reps": reps, "http_stream_chunks": http_chunks,
+            "stream_compress_p50_ms": p50(lats["stream"]),
+            "buffered_compress_p50_ms": p50(lats["buffered"])}
 
 
 def _time_registration(client, n: int, m: int, repeats: int = 3) -> float:
@@ -407,6 +583,14 @@ def main() -> None:
                     help="rows of the registration-latency probe signal")
     ap.add_argument("--register-m", type=int, default=512,
                     help="cols of the registration-latency probe signal")
+    ap.add_argument("--delta-mix", type=float, default=None, metavar="FRAC",
+                    nargs="?", const=0.3,
+                    help="run the delta-write probe instead of the loadgen: "
+                         "FRAC of deltas are in-place replaces (invalidate), "
+                         "the rest appends (re-anchor-eligible)")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the v2-streaming probe instead of the loadgen "
+                         "(encode peak memory + chunked compress p50)")
     ap.add_argument("--smoke", action="store_true",
                     help="2-second CI run: 4 clients, small signal")
     args = ap.parse_args()
@@ -415,6 +599,44 @@ def main() -> None:
 
     if args.cluster and (args.engine or args.http):
         ap.error("--cluster boots its own plane; drop --engine/--http")
+    if args.delta_mix is not None and args.stream:
+        ap.error("--delta-mix and --stream are separate probe runs")
+    if (args.delta_mix is not None or args.stream) and \
+            (args.engine or args.http or args.cluster):
+        ap.error("the probes boot their own server; drop "
+                 "--engine/--http/--cluster")
+
+    if args.delta_mix is not None:
+        if not 0.0 <= args.delta_mix <= 1.0:
+            ap.error("--delta-mix FRAC must be in [0, 1]")
+        res = _delta_mix_probe(args.duration, args.m, args.k,
+                               args.delta_mix, args.encoding)
+        if res["reanchor_hit_p50_ms"] is not None:
+            emit("service_reanchor_hit", 1e3 * res["reanchor_hit_p50_ms"],
+                 f"miss_rate={res['post_reanchor_miss_rate']:.3f}")
+        p = _save_merged(res)
+        print(f"[bench_service] mode=delta_mix deltas={res['deltas']} "
+              f"reanchor_hit_p50={res['reanchor_hit_p50_ms']}ms "
+              f"miss_rate={res['post_reanchor_miss_rate']:.3f} -> {p}")
+        if res["deltas"]["reanchored"] == 0:
+            sys.exit("[bench_service] degenerate run: nothing re-anchored")
+        return
+
+    if args.stream:
+        res = _stream_probe(points=5 * 32768 + 11 if args.smoke
+                            else 8 * 32768 + 11)
+        emit("service_stream_compress", 1e3 * res["stream_compress_p50_ms"],
+             f"chunks={res['http_stream_chunks']} "
+             f"peak_ratio={res['encode_peak_ratio']:.2f}")
+        p = _save_merged(res)
+        print(f"[bench_service] mode=stream chunks={res['chunks']} "
+              f"peak_ratio={res['encode_peak_ratio']:.2f} "
+              f"stream_p50={res['stream_compress_p50_ms']:.2f}ms "
+              f"buffered_p50={res['buffered_compress_p50_ms']:.2f}ms -> {p}")
+        if res["chunks"] < 4 or res["http_stream_chunks"] < 4:
+            sys.exit("[bench_service] degenerate run: stream did not chunk")
+        return
+
     res = run(args.duration, args.clients, args.n, args.m, args.k,
               args.http, args.encoding, args.engine,
               (args.register_n, args.register_m), cluster=args.cluster)

@@ -17,6 +17,10 @@ Gated rows (lower is better, all wall-clock):
                        (the ``cluster`` suite: loadgen over the distributed
                        plane — register includes the band scatter, loss p50
                        rides gather/compose-built coresets)
+  bench_service.json   delta_mix.reanchor_hit_p50_ms +
+                       stream.stream_compress_p50_ms (the ``stream`` suite:
+                       builds served off a re-anchored cache entry, and the
+                       v2 chunked compress transfer)
 
 Absolute rows (gated against a fixed limit, not a baseline ratio):
 
@@ -28,7 +32,11 @@ Absolute rows (gated against a fixed limit, not a baseline ratio):
   its large-shape bucket; autotune.compensated.{sat_moments,hist_split}
   .rel_err <= 1e-6 — the compensated-f32 paths must hold their parity
   certificate vs the f64 oracle; autotune.dispatch_overhead.tuned_select_us
-  — the tuned-cache consult must stay microscopic on the dispatch hot path
+  — the tuned-cache consult must stay microscopic on the dispatch hot path;
+  delta_mix.post_reanchor_miss_rate <= 0.01 — a disjoint-delta re-anchor
+  must leave subsequent builds as pure cache hits;
+  stream.encode_peak_ratio <= 0.5 — the v2 chunked encoder's peak memory
+  must stay a small fraction of the buffered v1 body's
 
 Noise handling — micro-timings on shared boxes swing well past 25% run to
 run, so a single sample proves nothing:
@@ -148,6 +156,39 @@ def _autotune_abs_rows(doc: dict):
                float(ovh["tuned_select_us"]), _SELECT_OVERHEAD_MAX_US)
 
 
+_MISS_RATE_MAX = 0.01          # post-re-anchor builds must be cache hits
+_STREAM_PEAK_RATIO_MAX = 0.5   # v2 encode peak vs v1 buffered encode peak
+_RATE_FLOOR_MS = 1.0           # sub-ms p50s are scheduler noise
+
+
+def _stream_rows(doc: dict):
+    """Relative rows of the ``delta_mix`` and ``stream`` mode entries
+    written by ``bench_service.py --delta-mix`` / ``--stream``: the build
+    latency served off a re-anchored entry, and the chunked-compress p50."""
+    dm = doc.get("delta_mix")
+    if isinstance(dm, dict) and dm.get("reanchor_hit_p50_ms") is not None:
+        yield ("delta_mix.reanchor_hit_p50_ms",
+               float(dm["reanchor_hit_p50_ms"]), _RATE_FLOOR_MS)
+    st = doc.get("stream")
+    if isinstance(st, dict) and "stream_compress_p50_ms" in st:
+        yield ("stream.stream_compress_p50_ms",
+               float(st["stream_compress_p50_ms"]), _RATE_FLOOR_MS)
+
+
+def _stream_abs_rows(doc: dict):
+    """Fixed ceilings: a disjoint-delta re-anchor must leave subsequent
+    builds as pure cache hits, and the v2 encoder's peak memory must stay
+    a small fraction of the buffered v1 body's."""
+    dm = doc.get("delta_mix")
+    if isinstance(dm, dict) and "post_reanchor_miss_rate" in dm:
+        yield ("delta_mix.post_reanchor_miss_rate",
+               float(dm["post_reanchor_miss_rate"]), _MISS_RATE_MAX)
+    st = doc.get("stream")
+    if isinstance(st, dict) and "encode_peak_ratio" in st:
+        yield ("stream.encode_peak_ratio",
+               float(st["encode_peak_ratio"]), _STREAM_PEAK_RATIO_MAX)
+
+
 _SUITES = {
     "ops": ("bench_ops.json", _ops_rows,
             [[sys.executable, "-m", "benchmarks.bench_ops", "--fast"]],
@@ -166,6 +207,12 @@ _SUITES = {
                 [[sys.executable, "benchmarks/bench_service.py", "--smoke",
                   "--cluster"]],
                 None),
+    "stream": ("bench_service.json", _stream_rows,
+               [[sys.executable, "benchmarks/bench_service.py", "--smoke",
+                 "--delta-mix", "0.3"],
+                [sys.executable, "benchmarks/bench_service.py", "--smoke",
+                 "--stream"]],
+               _stream_abs_rows),
 }
 
 
@@ -262,7 +309,8 @@ def check(which: str, factor: float, update: bool, retries: int) -> int:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("which", nargs="?", default="all",
-                    choices=("ops", "autotune", "service", "cluster", "all"))
+                    choices=("ops", "autotune", "service", "cluster",
+                             "stream", "all"))
     ap.add_argument("--update", action="store_true",
                     help="refresh baselines from fresh results")
     ap.add_argument("--factor", type=float,

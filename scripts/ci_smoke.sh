@@ -26,6 +26,11 @@
 #             taxonomy (http -> scheduler wait -> linked fused dispatch ->
 #             ops.dispatch), >= 80% root coverage, shared fused-trace
 #             linking under a concurrent burst, valid Chrome export
+#   stream    re-anchor + v2 streaming gate: disjoint-delta ingest serves
+#             subsequent requests with zero rebuilds and bitwise parity,
+#             >= 4 MB compress streams in >= 4 chunks identical to the v1
+#             body; then the delta-mix/stream probes + their wall-clock,
+#             miss-rate and encode-peak regression gates
 #   cluster   distributed serving plane gate: 1 coordinator + 3 subprocess
 #             workers, bitwise fingerprint parity vs the single-host build,
 #             loss parity <= 1e-9, worker-kill -> degraded (200s, same
@@ -221,6 +226,20 @@ stage_trace() {
   python scripts/trace_gate.py
 }
 
+stage_stream() {
+  echo "== cache re-anchor + v2 streaming gate =="
+  python scripts/stream_gate.py
+
+  echo "== bench_service delta-mix probe (2s) =="
+  python benchmarks/bench_service.py --smoke --delta-mix 0.3
+
+  echo "== bench_service stream probe =="
+  python benchmarks/bench_service.py --smoke --stream
+
+  echo "== stream wall-clock / miss-rate / encode-peak regression gate =="
+  python scripts/check_bench_regression.py stream
+}
+
 stage_cluster() {
   echo "== distributed serving plane gate (1 coordinator + 3 workers) =="
   python scripts/cluster_gate.py
@@ -232,7 +251,7 @@ stage_cluster() {
   python scripts/check_bench_regression.py cluster
 }
 
-ALL_STAGES=(lint tests ops delta tune service coalesce trace cluster)
+ALL_STAGES=(lint tests ops delta tune service coalesce trace stream cluster)
 # bash 3.2 (macOS) treats an empty array as unbound under set -u, so pick
 # the default stage list off $# instead of the array length
 if [ $# -eq 0 ]; then
@@ -243,7 +262,7 @@ fi
 
 for stage in "${STAGES[@]}"; do
   case "$stage" in
-    lint|tests|ops|delta|tune|service|coalesce|trace|cluster) "stage_${stage}" ;;
+    lint|tests|ops|delta|tune|service|coalesce|trace|stream|cluster) "stage_${stage}" ;;
     *) echo "[ci_smoke] unknown stage '${stage}' (known: ${ALL_STAGES[*]})" >&2
        exit 2 ;;
   esac

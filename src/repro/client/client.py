@@ -12,9 +12,19 @@ wire encoding is invisible to them:
     deployment) downgrades the client to JSON for the rest of its life.
 
 Transient failures (connection errors, timeouts, HTTP 5xx) retry with
-exponential backoff up to ``retries`` times; structured API errors
-(status < 500 with the v1 envelope) raise ``CoresetAPIError(http, code,
-message)`` immediately and never retry.
+exponential backoff up to ``retries`` times — a ``Retry-After`` header on
+a retryable 5xx (503 overload pushback) stretches the next sleep to at
+least that many seconds; structured API errors (status < 500 with the v1
+envelope) raise ``CoresetAPIError(http, code, message)`` immediately and
+never retry.
+
+Large ``compress`` responses stream: with ``stream=True`` (the default on
+binary encoding) the client advertises ``;v=2`` in ``Accept`` and decodes
+the server's chunked segment stream incrementally — same typed result,
+same retry semantics (a stream that dies mid-transfer surfaces as a
+retryable transport fault, a corrupt one as ``ProtocolError``).  v1-only
+servers ignore the parameter and the buffered path is used unchanged;
+``client.last_stream_chunks`` tells which happened (0 = buffered).
 
 Every request carries a client-minted W3C ``traceparent`` header, so the
 server-side trace of a call IS the client's trace id: after any call,
@@ -65,12 +75,16 @@ class TransportError(Exception):
 class CoresetClient:
     def __init__(self, base_url: str, *, encoding: str = "binary",
                  timeout: float = 120.0, retries: int = 2,
-                 backoff: float = 0.1, deadline_ms: float | None = None):
+                 backoff: float = 0.1, deadline_ms: float | None = None,
+                 stream: bool = True):
         if encoding not in ("binary", "json"):
             raise ValueError(f"encoding must be 'binary' or 'json', "
                              f"got {encoding!r}")
         self.base_url = base_url.rstrip("/")
         self.encoding = encoding
+        # offer the v2 chunked stream on compress (binary encoding only);
+        # servers without v2 serve the buffered v1 response unchanged
+        self.stream = bool(stream)
         self.timeout = float(timeout)
         self.retries = int(retries)
         self.backoff = float(backoff)
@@ -89,6 +103,10 @@ class CoresetClient:
         # trace id back in X-Coreset-Trace-Id, so both sides agree)
         self.last_traceparent: str | None = None
         self.last_trace_id: str | None = None
+        # last compress: v2 segments decoded (0 = buffered v1 response);
+        # last retryable 5xx: the server's Retry-After seconds, if any
+        self.last_stream_chunks: int = 0
+        self.last_retry_after: float | None = None
 
     def _deadline(self, deadline_ms: float | None) -> float | None:
         ms = deadline_ms if deadline_ms is not None else self.deadline_ms
@@ -96,13 +114,17 @@ class CoresetClient:
 
     # ------------------------------------------------------------ transport
     def _request(self, method: str, path: str, body: bytes | None,
-                 content_type: str | None):
+                 content_type: str | None, stream: bool = False):
         if self.encoding == "binary":
             # advertise the strongest codec THIS host can decode; the
             # server encodes its response accordingly (zlib unless zstd is
             # explicitly offered), so a 200 is always decodable here
             codec = "zstd" if P.zstandard is not None else "zlib"
             accept = f"{P.CONTENT_TYPE_BINARY};codec={codec}"
+            if stream:
+                # v2 offer: a stream-capable server answers with chunked
+                # segments; everyone else ignores the parameter (v1)
+                accept += ";v=2"
         else:
             accept = P.CONTENT_TYPE_JSON
         headers = {"Accept": accept}
@@ -120,7 +142,16 @@ class CoresetClient:
                                      headers=headers, method=method)
         with urllib.request.urlopen(req, timeout=self.timeout) as resp:
             self._note_trace(resp.headers)
-            return resp.status, resp.headers.get("Content-Type", ""), resp.read()
+            rtype = resp.headers.get("Content-Type", "")
+            if rtype.split(";")[0].strip().lower() == P.CONTENT_TYPE_STREAM:
+                # v2 negotiated: decode segments as they arrive off the
+                # socket (urllib de-chunks the transfer encoding) — peak
+                # client memory is O(chunk) + the assembled arrays, never
+                # a second whole-body buffer
+                msg, chunks = P.read_compress_stream(resp.read)
+                self.last_stream_chunks = chunks
+                return resp.status, rtype, msg
+            return resp.status, rtype, resp.read()
 
     def _note_trace(self, headers) -> str | None:
         """Record the server's trace id for the last request (it normally
@@ -142,16 +173,30 @@ class CoresetClient:
                                   raw[:512].decode("utf-8", "replace"),
                                   trace_id) from None
 
+    @staticmethod
+    def _retry_after_s(headers) -> float | None:
+        """Seconds form of a Retry-After header (the HTTP-date form is not
+        worth a date parser on this path); absent/garbage -> None."""
+        val = headers.get("Retry-After") if headers is not None else None
+        if val is None:
+            return None
+        try:
+            return max(0.0, float(val))
+        except ValueError:
+            return None
+
     def _call(self, path: str, msg: P._Wire, expect: type,
-              retryable: bool = True):
+              retryable: bool = True, stream: bool = False):
         retries = self.retries if retryable else 0
         attempt = 0
         downgraded = False
         while True:
             ctype, body = msg.to_wire(self.encoding,
                                       binary_codec=self._codec)
+            retry_after = None
             try:
-                status, rtype, raw = self._request("POST", path, body, ctype)
+                status, rtype, raw = self._request("POST", path, body, ctype,
+                                                   stream=stream)
             except urllib.error.HTTPError as exc:
                 raw = exc.read()
                 err_tid = self._note_trace(exc.headers)
@@ -170,6 +215,11 @@ class CoresetClient:
                 if exc.code >= 500 and exc.code != 504:
                     last = TransportError(f"HTTP {exc.code} from {path}: "
                                           f"{raw[:256]!r}")
+                    # an overloaded server's 503 may carry Retry-After —
+                    # honor it below instead of hammering the fixed
+                    # exponential schedule into the same congestion
+                    retry_after = self._retry_after_s(exc.headers)
+                    self.last_retry_after = retry_after
                 else:
                     # < 500 (structured API error) and 504 deadline_exceeded
                     # raise immediately: a missed deadline is the answer,
@@ -177,16 +227,33 @@ class CoresetClient:
                     self._raise_api_error(
                         exc.code, exc.headers.get("Content-Type", ""), raw,
                         trace_id=err_tid)
+            except P.StreamTruncated as exc:
+                # the v2 stream died mid-transfer: indistinguishable from a
+                # dropped connection, so it retries like one (other
+                # ProtocolErrors — corrupt frames — raise through: resending
+                # the request would fetch the same corruption)
+                last = TransportError(f"stream truncated from {path}: {exc}")
             except (urllib.error.URLError, TimeoutError, ConnectionError,
                     OSError) as exc:
                 last = TransportError(f"{type(exc).__name__}: {exc}")
             else:
                 if status >= 400:  # non-raising urlopen implementations
                     self._raise_api_error(status, rtype, raw)
+                if isinstance(raw, P._Wire):
+                    # _request already decoded a v2 stream incrementally
+                    if not isinstance(raw, expect):
+                        raise P.ProtocolError(
+                            f"expected {expect.__name__}, streamed "
+                            f"{type(raw).__name__}")
+                    return raw
+                self.last_stream_chunks = 0
                 return P.decode(rtype, raw, expect=expect)
             if attempt >= retries:
                 raise last
-            time.sleep(self.backoff * (2 ** attempt))
+            delay = self.backoff * (2 ** attempt)
+            if retry_after is not None:
+                delay = max(delay, retry_after)
+            time.sleep(delay)
             attempt += 1
 
     @staticmethod
@@ -321,7 +388,8 @@ class CoresetClient:
             signal=P.SignalRef(name=name), spec=P.CoresetSpec(k=k, eps=eps),
             target_frac=target_frac, style=style, max_points=max_points,
             deadline_ms=self._deadline(deadline_ms))
-        return self._call("/v1/query/compress", msg, P.CompressResponse)
+        return self._call("/v1/query/compress", msg, P.CompressResponse,
+                          stream=self.stream and self.encoding == "binary")
 
     # ------------------------------------------------------------ telemetry
     def _get_json(self, path: str) -> dict:

@@ -380,6 +380,12 @@ class ClusterEngine(CoresetEngine):
             "degraded_builds": m.get("cluster_degraded_builds"),
             "band_cache_hits": m.get("cluster_band_cache_hits"),
             "worker_rejoins": m.get("cluster_worker_rejoins"),
+            # coordinator-cache re-anchors (appends to streamed signals ride
+            # the inherited engine fast path); the per-band analogue lives
+            # worker-side as worker_band_cache_purged — a delta drops ONLY
+            # the owning worker's content-addressed entries
+            "cache_reanchored": m.get("cache_reanchored"),
+            "reanchor_candidates": m.get("cache_reanchor_candidates"),
         }
         return out
 

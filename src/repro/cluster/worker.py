@@ -102,6 +102,22 @@ class ShardWorker:
         with self._lock:
             self._bands.pop(name, None)
 
+    def _purge_stale(self, name: str, keep_hash: str) -> int:
+        """Per-band cache invalidation: drop this signal's LRU entries
+        built against any slab hash other than ``keep_hash``.  The cache
+        key is content-addressed, so a delta to THIS worker's slab only
+        ever strands this worker's entries — the coordinator's other band
+        workers keep serving their (unchanged) band coresets from cache,
+        the cluster analogue of the engine's row-span re-anchor rule."""
+        with self._cache_lock:
+            dead = [key for key in self._cache
+                    if key[0] == name and key[1] != keep_hash]
+            for key in dead:
+                del self._cache[key]
+        if dead:
+            self.metrics.inc("worker_band_cache_purged", len(dead))
+        return len(dead)
+
     def assign(self, msg: BandAssignRequest) -> BandAck:
         band = np.ascontiguousarray(msg.band, np.float64)
         if band.ndim != 2 or band.size == 0:
@@ -114,6 +130,7 @@ class ShardWorker:
                            f"declared {msg.band_hash} (corrupt frame?)")
         with self._lock:
             self._bands[msg.signal.name] = st
+        self._purge_stale(msg.signal.name, st.hash)
         self.metrics.inc("worker_bands_assigned")
         self.metrics.set_gauge("worker_bands_held", len(self._bands))
         return self._ack(msg.signal.name, st)
@@ -152,6 +169,7 @@ class ShardWorker:
             st.band = slab
             st.stats = st.stats.patch_rows(r0, slab[r0:], copy=True)
             st.hash = new_hash
+        self._purge_stale(msg.signal.name, new_hash)
         self.metrics.inc("worker_deltas_applied")
         return self._ack(msg.signal.name, st)
 

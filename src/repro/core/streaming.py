@@ -232,14 +232,19 @@ class StreamingBuilder:
             merged = recompress(merged)
         return (merged, lo, total)
 
-    def insert_band(self, band_values: np.ndarray) -> None:
+    def insert_band(self, band_values: np.ndarray, *, _leaf_cs=None) -> None:
         from .coreset import signal_coreset
         # settle pending replacements first: the cascade below merges bucket
         # items, and merging a dirty bucket's stale item would bake the old
         # leaf into a clean higher-level bucket no flush could ever repair
         self.flush_dirty()
         band_values = np.asarray(band_values, np.float64)
-        cs = signal_coreset(band_values, self.k, self.eps)
+        # _leaf_cs (internal): prebuilt signal_coreset(band, k, eps) of this
+        # band — the serving engine's delta fast path builds the leaf once
+        # per (k, eps) spec and shares it between the cache splice and every
+        # live builder, instead of rebuilding it here per consumer
+        cs = (_leaf_cs if _leaf_cs is not None
+              else signal_coreset(band_values, self.k, self.eps))
         leaf = _Leaf(cs, self._next_row, band_values.shape[0])
         self._leaves.append(leaf)
         self._next_row += leaf.rows

@@ -340,6 +340,7 @@ class _Handler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
     access_log = None      # file-like; make_server sets it (None = off)
     slow_ms: float | None = None   # only log requests slower than this
+    stream_chunk_points: int = P.STREAM_CHUNK_POINTS   # v2 points/chunk
     _log_lock: threading.Lock = threading.Lock()
     _span = None           # this request's root span (per-request, set early)
     _status = 0
@@ -390,6 +391,48 @@ class _Handler(BaseHTTPRequestHandler):
                 codec = "zlib"
         ctype, body = msg.to_wire(encoding, binary_codec=codec)
         self._reply(code, body, ctype, deprecated_for)
+
+    def _reply_compress_stream(self, resp: P.CompressResponse) -> None:
+        """v2 negotiated compress: write the response as one transfer-
+        encoding chunk per protocol segment, each flushed before the next
+        is encoded — server-side peak memory for the wire path is
+        O(stream_chunk_points), not O(response points).
+
+        Headers are committed before the first segment, so a mid-stream
+        failure cannot be converted into an error envelope; the connection
+        is torn down instead and the client's incremental decoder reports
+        ``StreamTruncated`` (which it treats as retryable).
+        """
+        codec = P._Wire.accept_codec(self.headers.get("Accept", ""))
+        if codec == "zstd" and P.zstandard is None:
+            codec = "zlib"
+        self._status = 200
+        self.send_response(200)
+        self.send_header("Content-Type", P.CONTENT_TYPE_STREAM)
+        self.send_header("Transfer-Encoding", "chunked")
+        sp = self._span
+        if sp is not None:
+            self.send_header("traceparent",
+                             obs.format_traceparent(sp.trace_id, sp.span_id))
+            self.send_header("X-Coreset-Trace-Id", sp.trace_id)
+        self.end_headers()
+        segments = 0
+        try:
+            for seg in P.compress_stream_segments(
+                    resp, chunk_points=self.stream_chunk_points,
+                    binary_codec=codec):
+                self.wfile.write(b"%x\r\n" % len(seg) + seg + b"\r\n")
+                self.wfile.flush()
+                segments += 1
+            self.wfile.write(b"0\r\n\r\n")
+        except OSError:
+            # client went away mid-stream; nothing to salvage on this
+            # connection, and the headers are long gone
+            self.close_connection = True
+            self.engine.metrics.inc("http_stream_aborts")
+            return
+        self.engine.metrics.inc("http_stream_responses")
+        self.engine.metrics.inc("http_stream_segments", segments)
 
     def _reply_json(self, code: int, payload,
                     content_type: str = "application/json",
@@ -463,7 +506,18 @@ class _Handler(BaseHTTPRequestHandler):
                             raise ApiError(415, "unsupported_media",
                                            f"unsupported Content-Type {ctype!r}")
                         msg = P.decode(ctype, raw, expect=msg_cls)
-                        self._reply_msg(200, handler(eng, msg), out_enc)
+                        resp = handler(eng, msg)
+                        if (v1_path == "/v1/query/compress"
+                                and out_enc == "binary"
+                                and P.accept_stream(
+                                    self.headers.get("Accept"))):
+                            # Accept carried ";v=2": stream the response as
+                            # length-prefixed segments over chunked
+                            # transfer-encoding instead of one buffered
+                            # frame (protocol.py, "v2 chunked streaming")
+                            self._reply_compress_stream(resp)
+                        else:
+                            self._reply_msg(200, resp, out_enc)
                 else:
                     eng.metrics.inc("http_404")
                     self._error(404, "not_found", f"no route {method} {path}")
@@ -598,7 +652,8 @@ class _Handler(BaseHTTPRequestHandler):
 
 def make_server(engine: CoresetEngine, host: str = "127.0.0.1",
                 port: int = 0, *, access_log=None,
-                slow_ms: float | None = None) -> ThreadingHTTPServer:
+                slow_ms: float | None = None,
+                stream_chunk_points: int | None = None) -> ThreadingHTTPServer:
     """Bind a ThreadingHTTPServer to (host, port); port 0 = ephemeral.
 
     ``access_log`` (a writable text file object, e.g. an opened path or
@@ -606,10 +661,15 @@ def make_server(engine: CoresetEngine, host: str = "127.0.0.1",
     request with method, path, status, duration_ms and trace_id.
     ``slow_ms`` filters it to requests at or above that duration — the
     slow-request log.  Both default off; the handler never logs otherwise.
+    ``stream_chunk_points`` overrides the points-per-chunk of v2 streamed
+    compress responses (default ``protocol.STREAM_CHUNK_POINTS``).
     """
     handler = type("CoresetHandler", (_Handler,), {
         "engine": engine, "access_log": access_log,
         "slow_ms": float(slow_ms) if slow_ms is not None else None,
+        "stream_chunk_points": (int(stream_chunk_points)
+                                if stream_chunk_points is not None
+                                else P.STREAM_CHUNK_POINTS),
         "_log_lock": threading.Lock()})
     srv = _Server((host, port), handler)
     return srv

@@ -18,6 +18,17 @@ Entries are keyed by (signal, version, k, eps); ``version`` is a content
 hash maintained by the engine (a new ingested band bumps it), so stale
 coresets can never serve a mutated signal.
 
+Each entry also records ``row_spans`` — the merged half-open row intervals
+its coreset's blocks cover (derived from ``coreset.rects`` at insert).
+They are the provenance metadata of the delta-ingest **re-anchoring** fast
+path: a delta whose row window is disjoint from every span cannot change
+any block the entry stores, so the engine may re-key the entry to the
+successor version (after splicing in the new rows' leaf blocks) instead of
+rebuilding — an O(entries x spans) interval intersection, no coreset math.
+``invalidate_signal(keep_version=...)`` returns the entries it dropped so
+the engine can inspect exactly those re-anchor candidates, and
+``stats()`` exposes ``reanchored`` / ``reanchor_candidates`` counters.
+
 Eviction is cost-aware (GDSF — greedy-dual size-frequency) over a byte
 budget: an entry's priority is
 
@@ -36,15 +47,52 @@ import collections
 import dataclasses
 import threading
 
+import numpy as np
+
 from repro.core.coreset import SignalCoreset
 
 from .metrics import ServiceMetrics
 
-__all__ = ["CacheEntry", "DominanceCache"]
+__all__ = ["CacheEntry", "DominanceCache", "block_row_spans",
+           "spans_intersect"]
 
 
 def _eps_key(eps: float) -> float:
     return round(float(eps), 6)
+
+
+def block_row_spans(rects: np.ndarray) -> np.ndarray:
+    """Merged, sorted half-open row intervals covered by coreset blocks.
+
+    ``rects[:, :2]`` are per-block ``[row0, row1)`` windows; adjacent or
+    overlapping windows merge, so a composed coreset over bands
+    ``[0,32) [32,64)`` collapses to one span ``[0,64)``.  The result is the
+    provenance record a :class:`CacheEntry` carries: any delta window
+    disjoint from every span provably cannot alter the entry's blocks.
+    """
+    r = np.asarray(rects).reshape(-1, 4)[:, :2].astype(np.int64)
+    if r.shape[0] == 0:
+        return np.empty((0, 2), np.int64)
+    r = r[np.argsort(r[:, 0], kind="stable")]
+    spans = [[int(r[0, 0]), int(r[0, 1])]]
+    for row0, row1 in r[1:]:
+        if int(row0) <= spans[-1][1]:
+            spans[-1][1] = max(spans[-1][1], int(row1))
+        else:
+            spans.append([int(row0), int(row1)])
+    return np.asarray(spans, np.int64)
+
+
+def spans_intersect(spans: np.ndarray | None, row0: int, row1: int) -> bool:
+    """True when ``[row0, row1)`` overlaps any span.  ``None`` (unknown
+    provenance — e.g. an entry inserted before span tracking) is treated as
+    intersecting: re-anchoring must never be optimistic."""
+    if spans is None:
+        return True
+    spans = np.asarray(spans).reshape(-1, 2)
+    if spans.shape[0] == 0 or row1 <= row0:
+        return False
+    return bool(np.any((spans[:, 0] < row1) & (int(row0) < spans[:, 1])))
 
 
 @dataclasses.dataclass
@@ -62,6 +110,9 @@ class CacheEntry:
                                  # weighed against nbytes + recency by the
                                  # GDSF eviction policy
     priority: float = 0.0        # GDSF score, maintained by DominanceCache
+    row_spans: np.ndarray | None = None   # merged [row0, row1) block
+                                          # coverage; filled from
+                                          # coreset.rects at put() if unset
 
     @property
     def key(self) -> tuple:
@@ -88,6 +139,10 @@ class DominanceCache:
         self._by_signal: dict[str, dict[str, set[tuple]]] = {}
         self._bytes = 0
         self._clock = 0.0   # GDSF aging clock; advances to victim priority
+        self._reanchored = 0           # entries re-keyed to a new version
+        self._reanchor_candidates = 0  # entries dropped by a keep_version
+                                       # invalidation (the population the
+                                       # re-anchor fast path competes for)
 
     def _boost(self, e: CacheEntry) -> None:
         """Refresh an entry's GDSF priority (call under the lock, on every
@@ -150,6 +205,8 @@ class DominanceCache:
         return e
 
     def put(self, entry: CacheEntry) -> None:
+        if entry.row_spans is None:
+            entry.row_spans = block_row_spans(entry.coreset.rects)
         with self._lock:
             self._drop(entry.key)
             self._entries[entry.key] = entry
@@ -177,17 +234,45 @@ class DominanceCache:
             return sorted({(self._entries[k].k, self._entries[k].eps)
                            for k in keys})
 
-    def invalidate_signal(self, signal: str, keep_version: str | None = None) -> int:
+    def take(self, signal: str, version: str, k: int,
+             eps: float) -> CacheEntry | None:
+        """Pop an entry by exact key WITHOUT touching hit/miss counters —
+        the re-anchor path removes the stale-version entry, splices the new
+        rows in, and re-puts it under the successor version."""
+        with self._lock:
+            return self._drop((signal, version, int(k), _eps_key(eps)))
+
+    def mark_reanchored(self, n: int = 1) -> None:
+        """Record ``n`` entries re-keyed to a new version in metadata time
+        (no rebuild).  Shows up as ``cache_reanchored`` in the metrics
+        snapshot and ``stats()["reanchored"]``."""
+        with self._lock:
+            self._reanchored += n
+        self.metrics.inc("cache_reanchored", n)
+
+    def invalidate_signal(self, signal: str,
+                          keep_version: str | None = None) -> list[CacheEntry]:
         """Drop entries of stale versions (the version key already prevents
-        wrong serving; this just frees the bytes eagerly)."""
+        wrong serving; this just frees the bytes eagerly).
+
+        Returns the dropped entries — with ``keep_version`` given these are
+        exactly the re-anchor candidates the fast path did NOT claim (their
+        blocks intersected the delta, or the delta shape was ineligible),
+        so callers can see what fell back to invalidate+rebuild.  Also
+        bumps ``reanchor_candidates`` in that case.
+        """
         with self._lock:
             dead = [k for ver, keys in self._by_signal.get(signal, {}).items()
                     if ver != keep_version for k in keys]
-            for k in dead:
-                self._drop(k)
-            if dead:
-                self.metrics.inc("cache_invalidations", len(dead))
-            return len(dead)
+            dropped = [e for e in (self._drop(k) for k in dead)
+                       if e is not None]
+            if dropped and keep_version is not None:
+                self._reanchor_candidates += len(dropped)
+        if dropped:
+            self.metrics.inc("cache_invalidations", len(dropped))
+            if keep_version is not None:
+                self.metrics.inc("cache_reanchor_candidates", len(dropped))
+        return dropped
 
     # ----------------------------------------------------------------- stats
     def __len__(self) -> int:
@@ -207,6 +292,8 @@ class DominanceCache:
                 "byte_budget": self.byte_budget,
                 "eviction_policy": "gdsf",
                 "clock": self._clock,
+                "reanchored": self._reanchored,
+                "reanchor_candidates": self._reanchor_candidates,
                 "keys": [{"signal": e.signal, "k": e.k, "eps": e.eps,
                           "eps_eff": e.eps_eff, "blocks": e.coreset.num_blocks,
                           "nbytes": e.nbytes, "hits": e.hits,

@@ -33,7 +33,7 @@ from repro.core.sharded import (MESH_BACKEND, fitting_loss_batched,
 from repro.core.streaming import StreamingBuilder
 from repro.trees.forest import RandomForestRegressor
 
-from .cache import CacheEntry, DominanceCache, _eps_key
+from .cache import CacheEntry, DominanceCache, _eps_key, spans_intersect
 from .metrics import ServiceMetrics
 from .query_scheduler import QueryScheduler
 from .scheduler import BuildScheduler
@@ -416,6 +416,7 @@ class CoresetEngine:
         applied: list[int] = []
         replaced: list[tuple[int, np.ndarray]] = []   # (band_index, band)
         dense_replaces = 0
+        reanchored = 0
         with self.metrics.timed("ingest_delta"):
             # hold EVERY live builder lock across the mutation + leaf swap
             # (slot.lock before st.lock, the documented order): a concurrent
@@ -441,6 +442,8 @@ class CoresetEngine:
                     # entries live under the signal's PRE-burst version:
                     # capture their specs before the first mutation bumps it
                     prev_specs = self.cache.specs_for(name, st.version)
+                    old_version, old_n = st.version, st.n
+                    old_streamed, old_bands = st.streamed, len(st.bands)
                     for r0, b in deltas:
                         # mode decision and placement are atomic with the
                         # write: an explicit row0 == n is an append only if
@@ -459,6 +462,11 @@ class CoresetEngine:
                                 replaced.append((idx, b))
                             else:
                                 dense_replaces += 1
+                    # version after OUR deltas, read under the same lock
+                    # hold that applied them — re-anchored entries must be
+                    # keyed to exactly this state, not whatever st.version
+                    # says after a concurrent writer slips in
+                    post_version = st.version
                 if replaced:
                     # swap each replaced leaf in every builder that already
                     # consumed it — builders keep their merge-reduce state
@@ -486,6 +494,19 @@ class CoresetEngine:
                     # next build its O(N) re-SAT
                     self.metrics.inc("ingest_delta_rebuilds_avoided",
                                      dense_replaces)
+                if (prev_specs and modes == ["append"] and old_streamed
+                        and old_bands >= 2 and old_bands % 2 == 0):
+                    # re-anchor fast path: a pure append touches rows the
+                    # cached blocks provably do not cover, and with an even
+                    # prior band count the merge-reduce cascade stays cold,
+                    # so the fresh-build result is exactly "cached arrays +
+                    # the new band's leaf blocks".  Splice in metadata time
+                    # and re-key to the post-append version — no rebuild.
+                    # (Builder locks are still held here: the eager feed
+                    # below must not race a concurrent _build_streamed.)
+                    reanchored = self._reanchor_append(
+                        st, slots, old_version, post_version, old_n,
+                        deltas[0][1], prev_specs, old_bands)
             if replaced:
                 # close the slot-creation window: a slot born between the
                 # snapshot above and the version bump may have consumed the
@@ -537,7 +558,8 @@ class CoresetEngine:
                 "row0": applied[0], "rows": int(band.shape[0]),
                 "deltas": len(deltas),
                 "buckets_recompressed": int(buckets),
-                "entries_recached": int(recached)}
+                "entries_recached": int(recached),
+                "entries_reanchored": int(reanchored)}
 
     @staticmethod
     def _validate_burst_locked(st: SignalState, deltas: list) -> None:
@@ -581,6 +603,110 @@ class CoresetEngine:
         with st.lock:
             return sum(s.builder.buckets_recompressed_total
                        for s in st.builders.values())
+
+    # ----------------------------------------------------- cache re-anchoring
+    @staticmethod
+    def _spliced_coreset(cs: SignalCoreset, leaf: SignalCoreset,
+                         row0: int) -> SignalCoreset:
+        """Append-splice: the cached composed coreset plus one new band's
+        leaf coreset placed at ``row0``, folded EXACTLY as
+        ``streaming.compose`` folds its items — so the result is bitwise
+        identical to a fresh merge-reduce build of the grown signal.
+
+        Why the fields fold this way: a fresh ``StreamingBuilder.result()``
+        over the grown band set composes ``sorted(old bucket items) +
+        [new leaf]``.  ``cs`` *is* ``compose(old items)``, and every compose
+        fold is associative: eps/max_slices take max, sigma/tolerance take
+        min, build_seconds sums, rects/labels/weights/moments concatenate in
+        row order (``cs``'s rects are already absolute; the leaf's shift by
+        ``row0``), and bicriteria comes from the first item in row order —
+        unchanged, since the leaf sorts last.
+        """
+        rects = leaf.rects.copy()
+        rects[:, 0] += row0
+        rects[:, 1] += row0
+        return SignalCoreset(
+            n=int(row0 + leaf.n), m=cs.m, k=cs.k,
+            eps=max(cs.eps, leaf.eps),
+            rects=np.concatenate([cs.rects, rects], axis=0),
+            labels=np.concatenate([cs.labels, leaf.labels], axis=0),
+            weights=np.concatenate([cs.weights, leaf.weights], axis=0),
+            moments=np.concatenate([cs.moments, leaf.moments], axis=0),
+            sigma=min(cs.sigma, leaf.sigma),
+            tolerance=min(cs.tolerance, leaf.tolerance),
+            max_slices=max(cs.max_slices, leaf.max_slices),
+            bicriteria=cs.bicriteria,
+            build_seconds=cs.build_seconds + leaf.build_seconds,
+            certified=bool(cs.certified and leaf.certified),
+        )
+
+    def _reanchor_append(self, st: SignalState, slots: list, old_version: str,
+                         new_version: str, old_n: int, band: np.ndarray,
+                         prev_specs: list, old_bands: int) -> int:
+        """Re-key every old-version cache entry whose blocks are disjoint
+        from the appended rows to ``new_version``, splicing in the new
+        band's leaf blocks instead of rebuilding (O(entries x spans)
+        metadata work + one leaf coreset per cached spec).
+
+        Soundness gate (checked by the caller): the delta is a SINGLE
+        append to a streamed signal with an EVEN prior band count.  In the
+        merge-reduce binary counter an even count leaves level 0 empty, so
+        inserting the new band cascades nothing — no bucket merges, no
+        recompression, ``max_level`` (hence eps_eff) unchanged — and a
+        fresh build is literally the old composition plus the new leaf.
+        Odd counts (or replaces) change bucket contents and fall back to
+        invalidate+rebuild.  Per-entry, ``row_spans`` disjointness is
+        checked anyway: an entry with unknown provenance must not ride.
+
+        Entries whose spec has a live builder that consumed exactly the
+        pre-append bands also feed that builder the prebuilt leaf (caller
+        holds the slot locks), so the next ``result()`` is a no-op replay.
+        """
+        rows = int(band.shape[0])
+        taken: list[CacheEntry] = []
+        for k, eps in prev_specs:
+            entry = self.cache.take(st.name, old_version, k, eps)
+            if entry is None:
+                continue
+            if spans_intersect(entry.row_spans, old_n, old_n + rows):
+                # overlapping or unknown provenance: put it back for
+                # invalidate_signal to drop (and count as a candidate
+                # that fell back to the rebuild path)
+                self.cache.put(entry)
+                continue
+            taken.append(entry)
+        if not taken:
+            return 0
+        with self.metrics.timed("cache_reanchor"):
+            # one leaf build per cached (k, eps) spec, batched over the
+            # query pool — shared between the splice and the eager feed
+            leaves = self.queries.map_fanout(
+                [lambda e=e: signal_coreset(band, e.k, e.eps)
+                 for e in taken])
+            by_spec: dict[tuple, SignalCoreset] = {}
+            for entry, leaf in zip(taken, leaves):
+                spliced = self._spliced_coreset(entry.coreset, leaf, old_n)
+                self.cache.put(CacheEntry(
+                    signal=st.name, version=new_version, k=entry.k,
+                    eps=entry.eps, eps_eff=entry.eps_eff, coreset=spliced,
+                    nbytes=spliced.nbytes,
+                    fingerprint=spliced.fingerprint(), hits=entry.hits,
+                    build_seconds=float(spliced.build_seconds)))
+                by_spec[(entry.k, _eps_key(entry.eps))] = leaf
+            with st.lock:
+                live = dict(st.builders)
+            for slot in slots:
+                key = (slot.builder.k, _eps_key(slot.builder.eps))
+                leaf = by_spec.get(key)
+                # feed only builders exactly at the pre-append state (a
+                # lagging builder must replay bands in ingest order; a
+                # slot no longer registered is already evicted)
+                if (leaf is not None and live.get(key) is slot
+                        and slot.consumed == old_bands):
+                    slot.builder.insert_band(band, _leaf_cs=leaf)
+                    slot.consumed += 1
+        self.cache.mark_reanchored(len(taken))
+        return len(taken)
 
     def signal(self, name: str) -> SignalState:
         with self._lock:

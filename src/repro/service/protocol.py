@@ -29,8 +29,10 @@ them; npz stores raw IEEE bytes).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import io
 import json
+import struct
 import zlib
 
 import numpy as np
@@ -48,6 +50,10 @@ __all__ = [
     "BuildResponse", "LossResponse", "BatchLossResponse", "FitResponse",
     "CompressResponse", "ErrorInfo", "ErrorResponse", "ProtocolError",
     "UnsupportedCodec", "decode", "encode",
+    # ---- v2 chunked streaming
+    "PROTOCOL_VERSION_STREAM", "CONTENT_TYPE_STREAM", "STREAM_MAGIC",
+    "StreamTruncated", "CompressHeader", "CompressChunk", "CompressTrailer",
+    "accept_stream", "compress_stream_segments", "read_compress_stream",
 ]
 
 PROTOCOL_VERSION = "v1"
@@ -477,6 +483,8 @@ class IngestDeltaResponse(_Wire):
     buckets_recompressed: int
     entries_recached: int
     deltas: int = 1           # bands in the burst (1 = single-delta form)
+    entries_reanchored: int = 0   # cache entries re-keyed to the new
+                                  # version in metadata time (no rebuild)
 
 
 @_message("build_response")
@@ -564,3 +572,218 @@ class ErrorResponse(_Wire):
     ``{"type": "error", "error": {"code", "message"}}``."""
     error: ErrorInfo
     _NESTED = {"error": ErrorInfo}
+
+
+# ===================================================== v2 chunked streaming
+#
+# The v1 path buffers a whole ``CompressResponse`` — metadata + every
+# (X, y, w) point — into ONE npz frame on both sides, so peak memory during
+# a large ``compress`` scales with coreset size.  v2 streams the same
+# response as a sequence of independently decodable SEGMENTS over HTTP
+# chunked transfer-encoding:
+#
+#     RPS2 | seg(header) | seg(chunk 0) ... seg(chunk C-1) | seg(trailer)
+#
+#     seg(msg) := u32 big-endian frame length | v1 binary frame of msg
+#
+# Each segment's payload is an ordinary v1 binary frame (magic + codec byte
+# + compressed npz) of a registered message, so codec negotiation, bomb
+# ceilings, and typed decode errors are all inherited from the v1 machinery
+# — v2 only adds framing, sequencing, and an end-to-end digest:
+#
+#   * ``CompressHeader``  — the scalar half of ``CompressResponse`` plus
+#     the expected chunk count, sent before any points;
+#   * ``CompressChunk``   — ``seq`` (0-based, strictly sequential) and a
+#     bounded slice of the point arrays, so the producer's working set is
+#     O(chunk) no matter how large the coreset;
+#   * ``CompressTrailer`` — chunk/point totals and a blake2b digest over
+#     the raw point bytes in order, so truncation at a segment boundary
+#     (which plain chunked encoding cannot detect) and reordering both
+#     fail closed as ``StreamTruncated`` / ``ProtocolError``.
+#
+# Version negotiation rides the Accept header — ``Accept:
+# application/x-repro-npz-v1;codec=zstd;v=2`` — so a v2 client talking to a
+# v1 server degrades silently to the buffered response (the v1 server
+# matches on the content-type substring and ignores the parameter), and a
+# v1 client never sees a stream it did not ask for.
+
+PROTOCOL_VERSION_STREAM = "v2"
+CONTENT_TYPE_STREAM = "application/x-repro-stream-v2"
+STREAM_MAGIC = b"RPS2"
+STREAM_CHUNK_POINTS = 32768     # default points per chunk (~1 MiB raw)
+_MAX_SEGMENT = 1 << 28          # one segment must never be a whole-response
+                                # buffer in disguise (nor an alloc bomb)
+
+
+class StreamTruncated(ProtocolError):
+    """v2 stream ended mid-segment or before its trailer — the transfer
+    died, not the request.  Clients treat this as transient (retryable)
+    where other ProtocolErrors are terminal."""
+
+
+@_message("compress_header")
+class CompressHeader(_Wire):
+    """Everything of a ``CompressResponse`` except the point arrays, known
+    before the first chunk is encoded."""
+    k: int
+    eps_eff: float
+    served_from: str
+    fingerprint: str
+    size: int
+    blocks: int
+    nbytes: int
+    compression_ratio: float
+    truncated: bool
+    points: int               # total points the chunks will carry
+    chunks: int               # segments to expect before the trailer
+
+
+@_message("compress_chunk")
+class CompressChunk(_Wire):
+    seq: int                  # 0-based, strictly sequential
+    X: np.ndarray             # (p, 2) slice of the point coordinates
+    y: np.ndarray             # (p,)
+    w: np.ndarray             # (p,)
+    _COERCE = {"X": _arr(np.float64, ndim=2),
+               "y": _arr(np.float64, ndim=1),
+               "w": _arr(np.float64, ndim=1)}
+
+
+@_message("compress_trailer")
+class CompressTrailer(_Wire):
+    chunks: int
+    points: int
+    digest: str               # blake2b-16 over the raw chunk bytes in order
+
+
+def accept_stream(accept_header: str | None) -> bool:
+    """True when the client negotiated the v2 stream: the binary content
+    type with a ``v=2`` parameter (or the stream type spelled out)."""
+    accept = (accept_header or "").replace(" ", "").lower()
+    if CONTENT_TYPE_STREAM in accept:
+        return True
+    return CONTENT_TYPE_BINARY in accept and ";v=2" in (accept + ";")
+
+
+def _chunk_digest() -> "hashlib._Hash":
+    return hashlib.blake2b(digest_size=16)
+
+
+def _digest_update(h, X: np.ndarray, y: np.ndarray, w: np.ndarray) -> None:
+    h.update(np.ascontiguousarray(X, np.float64).tobytes())
+    h.update(np.ascontiguousarray(y, np.float64).tobytes())
+    h.update(np.ascontiguousarray(w, np.float64).tobytes())
+
+
+def _segment(msg: "_Wire", binary_codec: str) -> bytes:
+    _, frame = msg.to_wire("binary", binary_codec=binary_codec)
+    return struct.pack(">I", len(frame)) + frame
+
+
+def compress_stream_segments(resp: CompressResponse, *,
+                             chunk_points: int = STREAM_CHUNK_POINTS,
+                             binary_codec: str = "zlib"):
+    """Yield the v2 byte segments of ``resp`` (magic first, trailer last).
+
+    Each yielded bytes object is one write: the caller (the HTTP layer)
+    flushes it as a transfer-encoding chunk before the next is encoded, so
+    encode-side peak memory is O(chunk_points), not O(points).  Chunk
+    slices are views into ``resp``'s arrays — nothing is copied until the
+    per-segment npz encode.
+    """
+    chunk_points = max(1, int(chunk_points))
+    points = int(resp.y.shape[0])
+    chunks = (points + chunk_points - 1) // chunk_points
+    header = CompressHeader(
+        k=resp.k, eps_eff=resp.eps_eff, served_from=resp.served_from,
+        fingerprint=resp.fingerprint, size=resp.size, blocks=resp.blocks,
+        nbytes=resp.nbytes, compression_ratio=resp.compression_ratio,
+        truncated=resp.truncated, points=points, chunks=chunks)
+    yield STREAM_MAGIC + _segment(header, binary_codec)
+    h = _chunk_digest()
+    for seq in range(chunks):
+        lo, hi = seq * chunk_points, min((seq + 1) * chunk_points, points)
+        X, y, w = resp.X[lo:hi], resp.y[lo:hi], resp.w[lo:hi]
+        _digest_update(h, X, y, w)
+        yield _segment(CompressChunk(seq=seq, X=X, y=y, w=w), binary_codec)
+    yield _segment(CompressTrailer(chunks=chunks, points=points,
+                                   digest=h.hexdigest()), binary_codec)
+
+
+def _read_exact(read, n: int, what: str) -> bytes:
+    """Drain exactly ``n`` bytes from a ``read(size)`` callable (short reads
+    are normal at transport boundaries); EOF mid-object is truncation."""
+    parts, got = [], 0
+    while got < n:
+        piece = read(n - got)
+        if not piece:
+            raise StreamTruncated(
+                f"v2 stream truncated reading {what}: wanted {n} bytes, "
+                f"got {got}")
+        parts.append(piece)
+        got += len(piece)
+    return b"".join(parts)
+
+
+def _read_segment(read, expect: type, what: str) -> "_Wire":
+    (length,) = struct.unpack(">I", _read_exact(read, 4, f"{what} length"))
+    if length == 0 or length > _MAX_SEGMENT:
+        raise ProtocolError(f"v2 segment length {length} out of range")
+    frame = _read_exact(read, length, what)
+    return decode(CONTENT_TYPE_BINARY, frame, expect=expect)
+
+
+def read_compress_stream(read) -> tuple[CompressResponse, int]:
+    """Incrementally decode a v2 stream from a ``read(size)`` callable
+    (e.g. ``http.client`` response ``read`` — urllib de-chunks the
+    transfer encoding transparently, so this sees the raw segments).
+
+    Returns ``(response, chunks)`` where ``response`` is field-identical
+    to the v1 buffered ``CompressResponse`` for the same request.  Raises
+    ``StreamTruncated`` on EOF mid-stream (retryable) and ``ProtocolError``
+    on sequencing/count/digest violations (corrupt, not transient).
+    """
+    magic = _read_exact(read, len(STREAM_MAGIC), "stream magic")
+    if magic != STREAM_MAGIC:
+        raise ProtocolError(f"bad v2 stream magic {magic!r}")
+    header = _read_segment(read, CompressHeader, "header segment")
+    if header.chunks < 0 or header.points < 0:
+        raise ProtocolError("negative chunk/point count in stream header")
+    h = _chunk_digest()
+    Xs, ys, ws = [], [], []
+    got_points = 0
+    for seq in range(header.chunks):
+        chunk = _read_segment(read, CompressChunk, f"chunk {seq}")
+        if chunk.seq != seq:
+            raise ProtocolError(
+                f"v2 chunk out of order: expected seq {seq}, "
+                f"got {chunk.seq}")
+        if not (chunk.X.shape[0] == chunk.y.shape[0] == chunk.w.shape[0]):
+            raise ProtocolError("v2 chunk arrays disagree on point count")
+        _digest_update(h, chunk.X, chunk.y, chunk.w)
+        Xs.append(chunk.X)
+        ys.append(chunk.y)
+        ws.append(chunk.w)
+        got_points += int(chunk.y.shape[0])
+    trailer = _read_segment(read, CompressTrailer, "trailer segment")
+    if trailer.chunks != header.chunks or trailer.points != header.points:
+        raise ProtocolError(
+            f"v2 trailer disagrees with header: "
+            f"{trailer.chunks}/{trailer.points} chunks/points vs "
+            f"{header.chunks}/{header.points}")
+    if got_points != header.points:
+        raise ProtocolError(
+            f"v2 stream carried {got_points} points, header promised "
+            f"{header.points}")
+    if trailer.digest != h.hexdigest():
+        raise ProtocolError("v2 stream digest mismatch (corrupt chunk)")
+    resp = CompressResponse(
+        k=header.k, eps_eff=header.eps_eff, served_from=header.served_from,
+        fingerprint=header.fingerprint, size=header.size,
+        blocks=header.blocks, nbytes=header.nbytes,
+        compression_ratio=header.compression_ratio,
+        truncated=header.truncated,
+        X=(np.concatenate(Xs, axis=0) if Xs else np.empty((0, 2))),
+        y=(np.concatenate(ys) if ys else np.empty(0)),
+        w=(np.concatenate(ws) if ws else np.empty(0)))
+    return resp, int(header.chunks)

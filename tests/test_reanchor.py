@@ -1,0 +1,281 @@
+"""Version-aware cache re-anchoring: a disjoint append delta must re-key
+every cached coreset to the new signal version in metadata time — the
+re-anchored entry is **bitwise fingerprint-equal** to a from-scratch build
+on the grown signal (the merge-reduce binary counter with an even band
+count leaves level 0 empty, so the fresh build is exactly concat(cached
+blocks, new leaf blocks)) — while any intersecting replace falls back to
+invalidate+rebuild.  The cluster analogue: a forwarded band delta purges
+ONLY the owning worker's content-addressed band-coreset cache entries."""
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.client import CoresetClient
+from repro.cluster import ClusterEngine, ShardWorker, make_worker_server
+from repro.core import random_tree_segmentation, signal_coreset, true_loss
+from repro.data import piecewise_signal
+from repro.service import (CacheEntry, CoresetEngine, DominanceCache,
+                           ServiceMetrics, make_server,
+                           serve_forever_in_thread)
+from repro.service.cache import block_row_spans, spans_intersect
+
+M, ROWS = 48, 12           # band geometry shared by every streamed test
+
+
+def _engine(**kw):
+    kw.setdefault("workers", 2)
+    kw.setdefault("metrics", ServiceMetrics())
+    return CoresetEngine(**kw)
+
+
+def _bands(count, seed=0):
+    y = piecewise_signal(ROWS * count, M, 8, noise=0.15, seed=seed)
+    return [y[i * ROWS:(i + 1) * ROWS] for i in range(count)]
+
+
+# ----------------------------------------------------------- span metadata
+def test_block_row_spans_merges_overlapping_blocks():
+    rects = np.array([[0, 4, 0, 48], [2, 6, 0, 48], [10, 12, 0, 48],
+                      [6, 8, 0, 48]], np.int64)
+    spans = block_row_spans(rects)
+    assert spans.tolist() == [[0, 8], [10, 12]]
+    assert block_row_spans(np.empty((0, 4))).shape == (0, 2)
+
+
+def test_spans_intersect_half_open_semantics():
+    spans = np.array([[0, 8], [10, 12]], np.int64)
+    assert spans_intersect(spans, 7, 9)          # overlaps [0, 8)
+    assert not spans_intersect(spans, 8, 10)     # exactly the gap
+    assert not spans_intersect(spans, 12, 20)    # past the end
+    assert not spans_intersect(spans, 5, 5)      # empty delta
+    assert spans_intersect(None, 0, 1)           # unknown provenance: assume
+    assert not spans_intersect(np.empty((0, 2)), 0, 100)
+
+
+def _entry(version, k=4, eps=0.3, n=24, seed=0):
+    cs = signal_coreset(piecewise_signal(n, M, k, seed=seed), k, eps)
+    return CacheEntry(signal="s", version=version, k=k, eps=eps, eps_eff=eps,
+                      coreset=cs, nbytes=cs.nbytes,
+                      fingerprint=cs.fingerprint())
+
+
+def test_cache_take_and_reanchor_candidate_counters():
+    cache = DominanceCache(byte_budget=1 << 26)
+    cache.put(_entry("v1", k=4))
+    cache.put(_entry("v1", k=6))
+    e = cache.take("s", "v1", 4, 0.3)
+    assert e is not None and e.k == 4
+    assert e.row_spans is not None          # put() derived spans from rects
+    assert cache.take("s", "v1", 4, 0.3) is None   # gone, no counters bumped
+    assert cache.metrics.get("cache_invalidations") == 0
+    dropped = cache.invalidate_signal("s", keep_version="v2")
+    assert [d.k for d in dropped] == [6]    # returned for re-anchor triage
+    assert cache.stats()["reanchor_candidates"] == 1
+    cache.mark_reanchored(3)
+    assert cache.stats()["reanchored"] == 3
+
+
+# ------------------------------------------------------- splice bit-parity
+@pytest.mark.parametrize("nbands,k,eps", [(2, 5, 0.3), (4, 5, 0.3),
+                                          (4, 8, 0.2), (6, 3, 0.4)])
+def test_append_reanchor_is_bitwise_equal_to_fresh_build(nbands, k, eps):
+    bands = _bands(nbands + 1, seed=nbands)
+    eng, ref = _engine(), _engine()
+    try:
+        for b in bands[:-1]:
+            eng.ingest_band("st", b)
+        eng.get_coreset("st", k, eps)
+        builds = eng.metrics.get("coreset_builds")
+        out = eng.ingest_delta("st", bands[-1])        # append: disjoint
+        assert out["entries_reanchored"] == 1
+        cs, eps_eff, how = eng.get_coreset("st", k, eps)
+        assert how == "exact"                          # served, not rebuilt
+        assert eng.metrics.get("coreset_builds") == builds
+        assert eng.metrics.get("cache_reanchored") == 1
+
+        for b in bands:
+            ref.ingest_band("st", b)
+        cs_ref, eps_ref, _ = ref.get_coreset("st", k, eps)
+        assert cs.fingerprint() == cs_ref.fingerprint()
+        assert eps_eff == eps_ref
+        np.testing.assert_array_equal(cs.rects, cs_ref.rects)
+        np.testing.assert_array_equal(cs.labels, cs_ref.labels)
+        np.testing.assert_array_equal(cs.weights, cs_ref.weights)
+    finally:
+        eng.close()
+        ref.close()
+
+
+def test_append_reanchor_covers_every_cached_spec():
+    bands = _bands(5, seed=17)
+    specs = [(4, 0.35), (6, 0.25), (8, 0.2)]
+    eng, ref = _engine(), _engine()
+    try:
+        for b in bands[:-1]:
+            eng.ingest_band("st", b)
+        for kk, ee in specs:
+            eng.get_coreset("st", kk, ee)
+        builds = eng.metrics.get("coreset_builds")
+        out = eng.ingest_delta("st", bands[-1])
+        assert out["entries_reanchored"] == len(specs)
+        for b in bands:
+            ref.ingest_band("st", b)
+        for kk, ee in specs:
+            cs, _, how = eng.get_coreset("st", kk, ee)
+            assert how == "exact"
+            cs_ref, _, _ = ref.get_coreset("st", kk, ee)
+            assert cs.fingerprint() == cs_ref.fingerprint()
+        assert eng.metrics.get("coreset_builds") == builds
+    finally:
+        eng.close()
+        ref.close()
+
+
+def test_odd_band_count_append_falls_back_to_rebuild():
+    # an odd prior band count cascades the binary counter on append, so the
+    # cached blocks are NOT a prefix of the fresh build — must invalidate
+    bands = _bands(4, seed=3)
+    eng, ref = _engine(), _engine()
+    try:
+        for b in bands[:-1]:
+            eng.ingest_band("st", b)      # 3 bands: ineligible
+        eng.get_coreset("st", 5, 0.3)
+        out = eng.ingest_delta("st", bands[-1])
+        assert out["entries_reanchored"] == 0
+        assert eng.metrics.get("cache_reanchored") == 0
+        cs, _, _ = eng.get_coreset("st", 5, 0.3)
+        for b in bands:
+            ref.ingest_band("st", b)
+        cs_ref, _, _ = ref.get_coreset("st", 5, 0.3)
+        assert cs.fingerprint() == cs_ref.fingerprint()   # correct either way
+    finally:
+        eng.close()
+        ref.close()
+
+
+def test_intersecting_replace_never_serves_stale_coreset():
+    bands = _bands(4, seed=5)
+    eng = _engine()
+    try:
+        for b in bands:
+            eng.ingest_band("st", b)
+        eng.get_coreset("st", 5, 0.25)
+        before = eng.cache.stats()["reanchor_candidates"]
+        patch = piecewise_signal(ROWS, M, 4, noise=0.1, seed=99)
+        out = eng.ingest_delta("st", patch, row0=ROWS)    # hits cached rows
+        assert out["entries_reanchored"] == 0             # fell back
+        assert eng.cache.stats()["reanchor_candidates"] > before
+        # the re-cached entry answers for the PATCHED signal within eps
+        y = np.vstack([bands[0], patch, bands[2], bands[3]])
+        n = y.shape[0]
+        rng = np.random.default_rng(2)
+        for _ in range(3):
+            q = random_tree_segmentation(n, M, 5, rng)
+            r = eng.tree_loss("st", q.rects, q.labels, eps=0.25)
+            tl = true_loss(y, q.rects, q.labels)
+            assert abs(r["loss"] - tl) <= 0.25 * max(tl, 1e-9)
+    finally:
+        eng.close()
+
+
+# ----------------------------------------------------------- HTTP service
+def test_http_disjoint_delta_serves_with_zero_rebuilds():
+    eng = _engine()
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    try:
+        cl = CoresetClient(f"http://127.0.0.1:{srv.server_address[1]}")
+        bands = _bands(3, seed=11)
+        for b in bands[:-1]:
+            cl.ingest("st", band=b)
+        cl.build("st", 5, 0.3)
+        builds = eng.metrics.get("coreset_builds")
+        r = cl.ingest_delta("st", bands[-1])              # append
+        assert r.entries_reanchored == 1                  # on the wire
+        b2 = cl.build("st", 5, 0.3)
+        assert b2.served_from == "exact"
+        comp = cl.compress("st", 5, 0.3)
+        assert comp.served_from == "exact" and len(comp.X) > 0
+        assert eng.metrics.get("coreset_builds") == builds     # zero rebuilds
+        stats = cl.stats()
+        assert stats["cache"]["reanchored"] == 1
+        assert stats["metrics"]["counters"].get("cache_reanchored", 0) == 1 \
+            or eng.metrics.get("cache_reanchored") == 1
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+# ---------------------------------------------------------------- cluster
+def _start_worker(i):
+    w = ShardWorker(worker_id=f"w{i}")
+    srv = make_worker_server(w, port=0, tracer=obs.Tracer())
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return SimpleNamespace(worker=w, server=srv,
+                           url=f"http://127.0.0.1:{srv.server_address[1]}")
+
+
+def test_cluster_delta_purges_only_owning_workers_band_cache():
+    nodes = [_start_worker(i) for i in range(3)]
+    coord = ClusterEngine([n.url for n in nodes], workers=2, reprobe_s=0.2,
+                          rpc_timeout=10.0, metrics=ServiceMetrics())
+    try:
+        n_rows = 96
+        y = piecewise_signal(n_rows, M, 5, noise=0.15, seed=21)
+        coord.register_signal("sig", y)
+        coord.get_coreset("sig", 5, 0.3)
+        for nd in nodes:
+            assert nd.worker.metrics.get("worker_band_builds") == 1
+        # replace rows owned by exactly one worker's slab (middle band)
+        slab = n_rows // 3
+        r0 = slab + 4
+        patch = piecewise_signal(8, M, 3, noise=0.1, seed=22)
+        pre_keys = [set(nd.worker._cache) for nd in nodes]
+        assert all(len(k) == 1 for k in pre_keys)
+        coord.ingest_delta("sig", patch, row0=r0)
+        # the delta schedules a background re-cache build; let it finish so
+        # the counters below are stable
+        deadline = time.time() + 15
+        while coord.scheduler.in_flight() and time.time() < deadline:
+            time.sleep(0.02)
+        assert coord.scheduler.in_flight() == 0
+        purged = [nd.worker.metrics.get("worker_band_cache_purged")
+                  for nd in nodes]
+        assert sum(1 for p in purged if p) == 1        # only the owner
+        owner = purged.index(next(p for p in purged if p))
+        for i, nd in enumerate(nodes):
+            if i == owner:     # stale-hash entries gone from the owner
+                assert not (pre_keys[i] & set(nd.worker._cache))
+            else:              # untouched bands keep their entries
+                assert pre_keys[i] <= set(nd.worker._cache)
+        # steady state after the delta: re-gathers at the new version hit
+        # every worker's band cache again
+        coord.cache.invalidate_signal("sig", keep_version=None)
+        coord.get_coreset("sig", 5, 0.3)       # warm caches at new version
+        hits = coord.metrics.get("cluster_band_cache_hits")
+        b0 = [nd.worker.metrics.get("worker_band_builds") for nd in nodes]
+        coord.cache.invalidate_signal("sig", keep_version=None)
+        cs, _, _ = coord.get_coreset("sig", 5, 0.3)
+        assert coord.metrics.get("cluster_band_cache_hits") == hits + 3
+        assert [nd.worker.metrics.get("worker_band_builds")
+                for nd in nodes] == b0
+        # parity with a single-host engine over the patched signal
+        single = CoresetEngine(num_bands=3, workers=2,
+                               metrics=ServiceMetrics())
+        try:
+            y2 = y.copy()
+            y2[r0:r0 + 8] = patch
+            single.register_signal("sig", y2)
+            cs_s, _, _ = single.get_coreset("sig", 5, 0.3)
+            assert cs.fingerprint() == cs_s.fingerprint()
+        finally:
+            single.close()
+    finally:
+        coord.close()
+        for nd in nodes:
+            nd.server.shutdown()
+            nd.server.server_close()

@@ -459,7 +459,9 @@ def test_dominance_cache_evicts_stale_versions_on_ingest():
     cache.put(entry("v2", 4))
     assert len(cache) == 3
     dropped = cache.invalidate_signal("s", keep_version="v2")
-    assert dropped == 2 and len(cache) == 1
+    assert len(dropped) == 2 and len(cache) == 1
+    assert {e.version for e in dropped} == {"v1"}
+    assert cache.stats()["reanchor_candidates"] == 2
     e, kind = cache.lookup("s", "v2", 4, 0.3)
     assert kind == "exact" and e.build_seconds == cs.build_seconds
     assert cache.lookup("s", "v1", 4, 0.3) == (None, None)

@@ -1,0 +1,260 @@
+"""v2 chunked compress streaming: length-prefixed npz segments over HTTP
+chunked transfer-encoding, negotiated with ``Accept: <binary>;v=2``.  The
+stream must round-trip bitwise, reject reordered / miscounted / corrupted
+segments terminally (ProtocolError) while a mid-segment EOF is the
+retryable ``StreamTruncated``; the HTTP layer must serve >= 4 chunks for a
+multi-chunk coreset and degrade silently to the buffered v1 body for v1
+clients; the client must honor ``Retry-After`` on 503."""
+import http.server
+import io
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import repro.client.client as client_mod
+from repro.client import CoresetAPIError, CoresetClient, TransportError
+from repro.data import piecewise_signal
+from repro.service import (CoresetEngine, ServiceMetrics, make_server,
+                           serve_forever_in_thread)
+from repro.service import protocol as P
+
+
+def _resp(points, seed=0):
+    rng = np.random.default_rng(seed)
+    return P.CompressResponse(
+        k=5, eps_eff=0.25, served_from="built", fingerprint="ab" * 16,
+        size=points, blocks=max(points // 7, 1), nbytes=points * 32,
+        compression_ratio=0.5, truncated=False,
+        X=rng.random((points, 2)) * 100, y=rng.random(points),
+        w=rng.random(points) + 0.5)
+
+
+def _segments(resp, chunk_points):
+    return list(P.compress_stream_segments(resp, chunk_points=chunk_points))
+
+
+def _decode(blob: bytes):
+    return P.read_compress_stream(io.BytesIO(blob).read)
+
+
+# ------------------------------------------------------------- negotiation
+def test_accept_stream_negotiation():
+    assert P.accept_stream(f"{P.CONTENT_TYPE_BINARY};v=2")
+    assert P.accept_stream(f"{P.CONTENT_TYPE_BINARY}; v=2, */*")
+    assert P.accept_stream(P.CONTENT_TYPE_STREAM)
+    assert not P.accept_stream(P.CONTENT_TYPE_BINARY)
+    assert not P.accept_stream("application/json;v=2")
+    assert not P.accept_stream(None)
+    assert not P.accept_stream("")
+
+
+# -------------------------------------------------------------- round-trip
+@pytest.mark.parametrize("points,chunk_points,want_chunks",
+                         [(0, 64, 0), (1, 64, 1), (64, 64, 1),
+                          (65, 64, 2), (1000, 64, 16), (257, 64, 5)])
+def test_stream_round_trips_bitwise(points, chunk_points, want_chunks):
+    resp = _resp(points, seed=points)
+    segs = _segments(resp, chunk_points)
+    assert segs[0].startswith(P.STREAM_MAGIC)
+    got, chunks = _decode(b"".join(segs))
+    assert chunks == want_chunks
+    for f in ("k", "eps_eff", "served_from", "fingerprint", "size", "blocks",
+              "nbytes", "compression_ratio", "truncated"):
+        assert getattr(got, f) == getattr(resp, f)
+    np.testing.assert_array_equal(got.X, resp.X)
+    np.testing.assert_array_equal(got.y, resp.y)
+    np.testing.assert_array_equal(got.w, resp.w)
+    assert got.X.dtype == np.float64 and got.X.shape == (points, 2)
+
+
+def test_stream_of_large_coreset_is_many_segments():
+    resp = _resp(100_001)
+    segs = _segments(resp, P.STREAM_CHUNK_POINTS)
+    # magic+header, ceil(100001/32768)=4 chunks, trailer
+    assert len(segs) == 1 + 4 + 1
+    got, chunks = _decode(b"".join(segs))
+    assert chunks == 4
+    np.testing.assert_array_equal(got.y, resp.y)
+
+
+# ------------------------------------------------------ stream corruptions
+def test_truncated_stream_is_retryable_error():
+    blob = b"".join(_segments(_resp(300), 64))
+    for cut in (0, 2, len(P.STREAM_MAGIC) + 2, len(blob) // 2, len(blob) - 1):
+        with pytest.raises(P.StreamTruncated):
+            _decode(blob[:cut])
+
+
+def test_reordered_chunks_rejected():
+    segs = _segments(_resp(300), 64)       # header, 5 chunks, trailer
+    segs[1], segs[2] = segs[2], segs[1]
+    with pytest.raises(P.ProtocolError) as exc:
+        _decode(b"".join(segs))
+    assert not isinstance(exc.value, P.StreamTruncated)
+
+
+def test_corrupt_frame_byte_rejected():
+    segs = _segments(_resp(300), 64)
+    bad = bytearray(segs[1])
+    bad[len(bad) // 2] ^= 0xFF             # inside the npz+zlib payload
+    segs[1] = bytes(bad)
+    with pytest.raises(P.ProtocolError) as exc:
+        _decode(b"".join(segs))
+    assert not isinstance(exc.value, P.StreamTruncated)
+
+
+def test_digest_and_count_mismatches_rejected():
+    resp = _resp(300)
+    segs = _segments(resp, 64)
+    forged = P._segment(P.CompressTrailer(chunks=5, points=300,
+                                          digest="00" * 16), "zlib")
+    with pytest.raises(P.ProtocolError, match="digest"):
+        _decode(b"".join(segs[:-1]) + forged)
+    forged = P._segment(P.CompressTrailer(chunks=4, points=300,
+                                          digest="00" * 16), "zlib")
+    with pytest.raises(P.ProtocolError):
+        _decode(b"".join(segs[:-1]) + forged)
+
+
+def test_bad_magic_rejected():
+    blob = b"".join(_segments(_resp(10), 64))
+    with pytest.raises(P.ProtocolError):
+        _decode(b"XXXX" + blob[4:])
+
+
+# ---------------------------------------------------------------- HTTP e2e
+N, M = 96, 48
+
+
+def _server(**kw):
+    eng = CoresetEngine(workers=2, metrics=ServiceMetrics())
+    srv = make_server(eng, **kw)
+    serve_forever_in_thread(srv)
+    return eng, srv, f"http://127.0.0.1:{srv.server_address[1]}"
+
+
+def test_http_v2_stream_matches_v1_buffered():
+    # small chunk size so a modest coreset spans >= 4 chunks on the wire
+    eng, srv, base = _server(stream_chunk_points=16)
+    try:
+        y = piecewise_signal(N, M, 6, noise=0.15, seed=3)
+        v1 = CoresetClient(base, encoding="binary", stream=False)
+        v1.register_signal("s", values=y)
+        r1 = v1.compress("s", 6, 0.25, max_points=256)
+        assert v1.last_stream_chunks == 0
+        v2 = CoresetClient(base, encoding="binary")       # stream=True
+        r2 = v2.compress("s", 6, 0.25, max_points=256)
+        assert v2.last_stream_chunks >= 4
+        assert r2.fingerprint == r1.fingerprint
+        np.testing.assert_array_equal(r2.X, r1.X)
+        np.testing.assert_array_equal(r2.y, r1.y)
+        np.testing.assert_array_equal(r2.w, r1.w)
+        assert eng.metrics.get("http_stream_responses") == 1
+        assert eng.metrics.get("http_stream_segments") >= 6
+        # JSON clients never negotiate the stream
+        rj = CoresetClient(base, encoding="json").compress("s", 6, 0.25,
+                                                           max_points=256)
+        np.testing.assert_allclose(rj.X, r1.X)
+        assert eng.metrics.get("http_stream_responses") == 1
+        # non-compress binary endpoints still answer buffered v1 bodies
+        b = v2.build("s", 6, 0.25)
+        assert b.fingerprint == r1.fingerprint
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_http_default_chunking_on_large_coreset():
+    # acceptance: a >= 4 MB coreset streams in >= 4 DEFAULT-size chunks and
+    # the client-decoded output is identical to the buffered v1 body
+    eng, srv, base = _server()
+    try:
+        cl = CoresetClient(base, encoding="binary")
+        y = np.random.default_rng(9).random((256, 256)) * 8.0   # block-rich
+        cl.register_signal("big", values=y)
+        r = cl.compress("big", 3, 0.01, max_points=1 << 20)
+        assert r.X.shape[0] > 4 * P.STREAM_CHUNK_POINTS
+        assert r.X.nbytes + r.y.nbytes + r.w.nbytes >= 4 << 20
+        assert cl.last_stream_chunks >= 4
+        v1 = CoresetClient(base, encoding="binary", stream=False)
+        r1 = v1.compress("big", 3, 0.01, max_points=1 << 20)   # cached now
+        np.testing.assert_array_equal(r.X, r1.X)
+        np.testing.assert_array_equal(r.y, r1.y)
+        np.testing.assert_array_equal(r.w, r1.w)
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+# -------------------------------------------------------------- Retry-After
+class _FlakyHandler(http.server.BaseHTTPRequestHandler):
+    fails = 2
+
+    def log_message(self, *a):  # noqa: D102
+        pass
+
+    def do_POST(self):  # noqa: N802
+        self.rfile.read(int(self.headers.get("Content-Length", 0)))
+        srv = self.server
+        if srv.seen < self.fails:
+            srv.seen += 1
+            body = b'{"type": "error", "error": {"code": "unavailable", ' \
+                   b'"message": "warming up"}}'
+            self.send_response(503)
+            self.send_header("Retry-After", "0.5")
+        else:
+            body = b'{"type": "error", "error": {"code": "not_found", ' \
+                   b'"message": "nope"}}'
+            self.send_response(404)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+
+def test_client_honors_retry_after_on_503(monkeypatch):
+    srv = http.server.ThreadingHTTPServer(("127.0.0.1", 0), _FlakyHandler)
+    srv.seen = 0
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    sleeps = []
+    monkeypatch.setattr(
+        client_mod, "time",
+        SimpleNamespace(sleep=sleeps.append, time=time.time,
+                        perf_counter=time.perf_counter,
+                        monotonic=time.monotonic))
+    try:
+        cl = CoresetClient(f"http://127.0.0.1:{srv.server_address[1]}",
+                           retries=3, backoff=0.01)
+        with pytest.raises(CoresetAPIError) as exc:
+            cl.build("s", 4, 0.3)
+        assert exc.value.http == 404            # retried past both 503s
+        assert sleeps == [0.5, 0.5]             # Retry-After > tiny backoff
+        assert cl.last_retry_after == 0.5
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_client_backoff_wins_over_smaller_retry_after(monkeypatch):
+    srv = http.server.ThreadingHTTPServer(("127.0.0.1", 0), _FlakyHandler)
+    srv.seen = 0
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    sleeps = []
+    monkeypatch.setattr(
+        client_mod, "time",
+        SimpleNamespace(sleep=sleeps.append, time=time.time,
+                        perf_counter=time.perf_counter,
+                        monotonic=time.monotonic))
+    monkeypatch.setattr(_FlakyHandler, "fails", 1)
+    try:
+        cl = CoresetClient(f"http://127.0.0.1:{srv.server_address[1]}",
+                           retries=2, backoff=2.0)
+        with pytest.raises(CoresetAPIError):
+            cl.build("s", 4, 0.3)
+        assert sleeps == [2.0]                  # max(backoff, Retry-After)
+    finally:
+        srv.shutdown()
+        srv.server_close()
