@@ -31,6 +31,7 @@ for CI to compare.
   python benchmarks/bench_service.py --smoke --cluster    # distributed plane
   python benchmarks/bench_service.py --smoke --delta-mix 0.3  # re-anchor probe
   python benchmarks/bench_service.py --smoke --stream     # v2 streaming probe
+  python benchmarks/bench_service.py --smoke --overload   # admission QoS probe
 
 ``--cluster`` swaps the single-host engine for the distributed serving
 plane — 3 in-process ShardWorkers behind a ClusterEngine coordinator — so
@@ -42,6 +43,11 @@ re-anchored and the build latency served off a re-anchored entry, the
 second the v2 chunked streaming encoder's peak memory and compress p50s
 vs the buffered v1 body.  Both merge their own mode row into
 ``bench_service.json`` for the ``stream`` regression suite.
+``--overload`` drives one hot + one cold tenant against an admission
+controller set to half the measured capacity and records the
+accept/reject split, per-tenant percentiles, the Retry-After
+distribution, the in-process admit-decision cost and the 503 round-trip
+cost — the last two feed the ``qos`` regression suite.
 """
 from __future__ import annotations
 
@@ -362,6 +368,161 @@ def _stream_probe(points: int, reps: int = 15) -> dict:
             "buffered_compress_p50_ms": p50(lats["buffered"])}
 
 
+def _overload_probe(duration: float, n: int, m: int, k_max: int,
+                    hot_frac: float) -> dict:
+    """Admission-control probe: one hot tenant over its share, one cold
+    tenant under it, against a rate set to half the measured capacity.
+
+    Three numbers matter downstream (the ``qos`` regression suite):
+
+      * ``admit_decision_us`` — in-process cost of one admit+release cycle
+        (the overhead EVERY admitted request pays), gated absolute < 50us;
+      * ``rejected_rtt_p50_ms`` — HTTP round-trip of a 503 rejection (the
+        cost of saying no), a relative wall-clock row;
+      * the per-tenant accept/reject split, latency percentiles and the
+        Retry-After distribution — recorded for eyeballing, not gated
+        (scripts/overload_gate.py owns the QoS pass/fail).
+    """
+    from repro.client import AdmissionRejectedError
+    from repro.service import AdmissionConfig, AdmissionController
+
+    # ---- in-process micro-bench: the decision itself, uncontended
+    ctl = AdmissionController(AdmissionConfig(tenants={"t": 1.0},
+                                              rate_rps=1e9))
+    reps = 5000
+    for _ in range(500):                      # warm allocator + dicts
+        with ctl.admit("loss", "t"):
+            pass
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with ctl.admit("loss", "t"):
+            pass
+    admit_us = 1e6 * (time.perf_counter() - t0) / reps
+
+    # ---- HTTP phase: measure capacity bare, then admit at half of it
+    metrics = ServiceMetrics()
+    engine = CoresetEngine(workers=4, metrics=metrics)
+    srv = make_server(engine)
+    serve_forever_in_thread(srv)
+    base = f"http://127.0.0.1:{srv.server_address[1]}"
+    setup = CoresetClient(base, encoding="binary")
+    y = piecewise_signal(n, m, k_max, noise=0.15, seed=0)
+    setup.register_signal("bench-overload", y, replace=True)
+    setup.build("bench-overload", k_max, 0.2)
+    rng = np.random.default_rng(2)
+    trees = [random_tree_segmentation(n, m, 6, rng) for _ in range(12)]
+    for t in trees[:4]:
+        setup.query_loss("bench-overload", t.rects, t.labels, eps=0.3)
+
+    recs: dict[str, dict] = {}
+    lock = threading.Lock()
+
+    def drive(tenant: str, stop: threading.Event, pace_s: float | None):
+        cl = CoresetClient(base, tenant=tenant, retries=0)
+        r = recs.setdefault(tenant, {"ok": 0, "rejected": 0, "errors": 0,
+                                     "lat": [], "retry_after": []})
+        lrng = np.random.default_rng(abs(hash(tenant)) % (1 << 32))
+        while not stop.is_set():
+            q = trees[int(lrng.integers(len(trees)))]
+            t0 = time.perf_counter()
+            try:
+                cl.query_loss("bench-overload", q.rects, q.labels, eps=0.3)
+                dt = time.perf_counter() - t0
+                with lock:
+                    r["ok"] += 1
+                    r["lat"].append(dt)
+            except AdmissionRejectedError as exc:
+                with lock:
+                    r["rejected"] += 1
+                    if exc.retry_after is not None:
+                        r["retry_after"].append(exc.retry_after)
+                time.sleep(0.002)
+            except Exception:  # noqa: BLE001
+                with lock:
+                    r["errors"] += 1
+            if pace_s is not None:
+                time.sleep(pace_s)
+
+    # unloaded capacity: short unthrottled burst with admission off
+    stop = threading.Event()
+    cap_threads = [threading.Thread(target=drive, args=("cap", stop, None))
+                   for _ in range(4)]
+    for t in cap_threads:
+        t.start()
+    cap_window = min(1.0, duration / 2)
+    time.sleep(cap_window)
+    stop.set()
+    for t in cap_threads:
+        t.join()
+    capacity = recs["cap"]["ok"] / cap_window
+
+    rate = 0.5 * capacity
+    ctl = AdmissionController(AdmissionConfig(
+        tenants={"hot": 2.0, "cold": 1.0}, rate_rps=rate, burst_s=0.2,
+        parallelism=4))
+    ctl.metrics = metrics
+    engine.admission = ctl
+    cold_share = rate / 3.0
+    hot_threads = max(1, round(4 * hot_frac))
+    stop = threading.Event()
+    threads = [threading.Thread(target=drive, args=("hot", stop, None))
+               for _ in range(hot_threads)]
+    threads.append(threading.Thread(
+        target=drive, args=("cold", stop, 1.0 / max(cold_share * 0.4, 1.0))))
+    for t in threads:
+        t.start()
+    time.sleep(duration)
+    stop.set()
+    for t in threads:
+        t.join()
+
+    # the cost of saying no: shrink the rate to ~zero and time pure 503s
+    ctl.config.rate_rps = 1e-9
+    rej_cl = CoresetClient(base, tenant="hot", retries=0)
+    rej_lat: list[float] = []
+    for _ in range(80):
+        q = trees[int(rng.integers(len(trees)))]
+        t0 = time.perf_counter()
+        try:
+            rej_cl.query_loss("bench-overload", q.rects, q.labels, eps=0.3)
+        except AdmissionRejectedError:
+            rej_lat.append(time.perf_counter() - t0)
+    snap = engine.stats()["admission"]
+    srv.shutdown()
+    engine.close()
+
+    def pct(xs, q):
+        return 1e3 * float(np.percentile(xs, q)) if xs else None
+
+    tenants = {}
+    for name in ("hot", "cold"):
+        r = recs.get(name, {"ok": 0, "rejected": 0, "errors": 0, "lat": [],
+                            "retry_after": []})
+        offered = r["ok"] + r["rejected"]
+        tenants[name] = {"ok": r["ok"], "rejected": r["rejected"],
+                         "errors": r["errors"],
+                         "accept_rate": r["ok"] / max(offered, 1),
+                         "p50_ms": pct(r["lat"], 50),
+                         "p95_ms": pct(r["lat"], 95)}
+    ra = recs.get("hot", {}).get("retry_after", []) \
+        + recs.get("cold", {}).get("retry_after", [])
+    return {"mode": "overload", "duration_s": duration, "hot_frac": hot_frac,
+            "capacity_rps": capacity, "admitted_rate_rps": rate,
+            "admit_decision_us": admit_us,
+            "rejected_rtt_p50_ms": pct(rej_lat, 50),
+            "rejected_rtt_p95_ms": pct(rej_lat, 95),
+            "rejected_samples": len(rej_lat),
+            "tenants": tenants,
+            "retry_after_s": {"count": len(ra),
+                              "min": min(ra) if ra else None,
+                              "p50": float(np.percentile(ra, 50)) if ra else None,
+                              "p95": float(np.percentile(ra, 95)) if ra else None,
+                              "max": max(ra) if ra else None},
+            "admission": {"admitted_total": snap["admitted_total"],
+                          "rejected_total": snap["rejected_total"],
+                          "rejected_by_reason": snap["rejected_by_reason"]}}
+
+
 def _time_registration(client, n: int, m: int, repeats: int = 3) -> float:
     """Best-of-``repeats`` wall-clock to register an (n, m) dense signal —
     isolates the wire codec + server parse cost (no coreset build)."""
@@ -591,6 +752,13 @@ def main() -> None:
     ap.add_argument("--stream", action="store_true",
                     help="run the v2-streaming probe instead of the loadgen "
                          "(encode peak memory + chunked compress p50)")
+    ap.add_argument("--overload", type=float, default=None, metavar="HOT_FRAC",
+                    nargs="?", const=0.75,
+                    help="run the admission-control overload probe instead "
+                         "of the loadgen: HOT_FRAC of the closed-loop "
+                         "drivers belong to the hot tenant (accept/reject "
+                         "split, per-tenant p50/p95, Retry-After "
+                         "distribution, admit-decision us)")
     ap.add_argument("--smoke", action="store_true",
                     help="2-second CI run: 4 clients, small signal")
     args = ap.parse_args()
@@ -599,10 +767,12 @@ def main() -> None:
 
     if args.cluster and (args.engine or args.http):
         ap.error("--cluster boots its own plane; drop --engine/--http")
-    if args.delta_mix is not None and args.stream:
-        ap.error("--delta-mix and --stream are separate probe runs")
-    if (args.delta_mix is not None or args.stream) and \
-            (args.engine or args.http or args.cluster):
+    probes = [args.delta_mix is not None, args.stream,
+              args.overload is not None]
+    if sum(probes) > 1:
+        ap.error("--delta-mix / --stream / --overload are separate probe "
+                 "runs")
+    if any(probes) and (args.engine or args.http or args.cluster):
         ap.error("the probes boot their own server; drop "
                  "--engine/--http/--cluster")
 
@@ -620,6 +790,26 @@ def main() -> None:
               f"miss_rate={res['post_reanchor_miss_rate']:.3f} -> {p}")
         if res["deltas"]["reanchored"] == 0:
             sys.exit("[bench_service] degenerate run: nothing re-anchored")
+        return
+
+    if args.overload is not None:
+        if not 0.0 < args.overload < 1.0:
+            ap.error("--overload HOT_FRAC must be in (0, 1)")
+        res = _overload_probe(args.duration, args.n, args.m, args.k,
+                              args.overload)
+        emit("service_admit_decision", res["admit_decision_us"],
+             f"rejected_rtt_p50={res['rejected_rtt_p50_ms']}ms")
+        p = _save_merged(res)
+        t = res["tenants"]
+        print(f"[bench_service] mode=overload rate={res['admitted_rate_rps']:.0f}rps "
+              f"hot ok={t['hot']['ok']} rej={t['hot']['rejected']} "
+              f"cold ok={t['cold']['ok']} rej={t['cold']['rejected']} "
+              f"admit={res['admit_decision_us']:.1f}us "
+              f"rejected_rtt_p50={res['rejected_rtt_p50_ms']}ms -> {p}")
+        if res["admission"]["rejected_total"] == 0:
+            sys.exit("[bench_service] degenerate run: nothing was rejected")
+        if res["rejected_samples"] == 0:
+            sys.exit("[bench_service] degenerate run: 503 cost unmeasured")
         return
 
     if args.stream:

@@ -21,6 +21,8 @@ Gated rows (lower is better, all wall-clock):
                        stream.stream_compress_p50_ms (the ``stream`` suite:
                        builds served off a re-anchored cache entry, and the
                        v2 chunked compress transfer)
+  bench_service.json   overload.rejected_rtt_p50_ms (the ``qos`` suite:
+                       the HTTP round-trip of a 503 admission rejection)
 
 Absolute rows (gated against a fixed limit, not a baseline ratio):
 
@@ -36,7 +38,9 @@ Absolute rows (gated against a fixed limit, not a baseline ratio):
   delta_mix.post_reanchor_miss_rate <= 0.01 — a disjoint-delta re-anchor
   must leave subsequent builds as pure cache hits;
   stream.encode_peak_ratio <= 0.5 — the v2 chunked encoder's peak memory
-  must stay a small fraction of the buffered v1 body's
+  must stay a small fraction of the buffered v1 body's;
+  overload.admit_decision_us < 50 — the admission decision (admit +
+  release) sits on every admitted request's path and must stay microscopic
 
 Noise handling — micro-timings on shared boxes swing well past 25% run to
 run, so a single sample proves nothing:
@@ -189,6 +193,30 @@ def _stream_abs_rows(doc: dict):
                float(st["encode_peak_ratio"]), _STREAM_PEAK_RATIO_MAX)
 
 
+_ADMIT_DECISION_MAX_US = 50.0  # admit+release cycle every request pays
+_REJECT_FLOOR_MS = 0.2         # 503 RTTs are small; sub-0.2ms is noise
+
+
+def _qos_rows(doc: dict):
+    """Relative rows of the ``overload`` mode entry written by
+    ``bench_service.py --overload``: the HTTP round-trip of a 503
+    rejection — saying no must stay cheap or overload pushback melts the
+    server it is protecting."""
+    ov = doc.get("overload")
+    if isinstance(ov, dict) and ov.get("rejected_rtt_p50_ms") is not None:
+        yield ("overload.rejected_rtt_p50_ms",
+               float(ov["rejected_rtt_p50_ms"]), _REJECT_FLOOR_MS)
+
+
+def _qos_abs_rows(doc: dict):
+    """Fixed ceiling: the in-process admission decision (admit + release)
+    must stay under 50us — it sits on EVERY admitted request's path."""
+    ov = doc.get("overload")
+    if isinstance(ov, dict) and "admit_decision_us" in ov:
+        yield ("overload.admit_decision_us",
+               float(ov["admit_decision_us"]), _ADMIT_DECISION_MAX_US)
+
+
 _SUITES = {
     "ops": ("bench_ops.json", _ops_rows,
             [[sys.executable, "-m", "benchmarks.bench_ops", "--fast"]],
@@ -213,6 +241,10 @@ _SUITES = {
                 [sys.executable, "benchmarks/bench_service.py", "--smoke",
                  "--stream"]],
                _stream_abs_rows),
+    "qos": ("bench_service.json", _qos_rows,
+            [[sys.executable, "benchmarks/bench_service.py", "--smoke",
+              "--overload"]],
+            _qos_abs_rows),
 }
 
 
@@ -310,7 +342,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("which", nargs="?", default="all",
                     choices=("ops", "autotune", "service", "cluster",
-                             "stream", "all"))
+                             "stream", "qos", "all"))
     ap.add_argument("--update", action="store_true",
                     help="refresh baselines from fresh results")
     ap.add_argument("--factor", type=float,

@@ -36,6 +36,11 @@
 #             loss parity <= 1e-9, worker-kill -> degraded (200s, same
 #             bytes) -> same-port rejoin; then the cluster loadgen smoke +
 #             its wall-clock regression gate
+#   qos       admission control / multi-tenant QoS gate: under 4x overload
+#             with one hot tenant, admitted requests never 504, the hot
+#             tenant is capped within +-20% of its weighted share, cold
+#             p95 <= 2x unloaded; then the overload probe + its regression
+#             gate (admit decision < 50us, 503 round-trip wall-clock)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -224,6 +229,17 @@ stage_coalesce() {
 stage_trace() {
   echo "== end-to-end tracing gate =="
   python scripts/trace_gate.py
+
+  echo "== trace-retrieval race regression (20x repeat) =="
+  # this test raced trace finalization (root span ends AFTER the response is
+  # written) and only failed under load; Tracer.get now bounded-waits on a
+  # condition variable.  Repeat it to keep the race from regressing silently
+  for _ in $(seq 20); do
+    python -m pytest -q -x tests/test_service.py \
+      -k "trace_retrieval" >/dev/null \
+      || { echo "[ci_smoke] FAIL: trace retrieval raced finalization"; exit 1; }
+  done
+  echo "[ci_smoke] 20/20 trace-retrieval repeats clean"
 }
 
 stage_stream() {
@@ -251,7 +267,18 @@ stage_cluster() {
   python scripts/check_bench_regression.py cluster
 }
 
-ALL_STAGES=(lint tests ops delta tune service coalesce trace stream cluster)
+stage_qos() {
+  echo "== admission control / multi-tenant QoS overload gate =="
+  python scripts/overload_gate.py --smoke
+
+  echo "== bench_service overload probe (admit-decision us + 503 cost) =="
+  python benchmarks/bench_service.py --smoke --overload
+
+  echo "== qos regression gate (admit < 50us, 503 round-trip wall-clock) =="
+  python scripts/check_bench_regression.py qos
+}
+
+ALL_STAGES=(lint tests ops delta tune service coalesce trace stream cluster qos)
 # bash 3.2 (macOS) treats an empty array as unbound under set -u, so pick
 # the default stage list off $# instead of the array length
 if [ $# -eq 0 ]; then
@@ -262,7 +289,7 @@ fi
 
 for stage in "${STAGES[@]}"; do
   case "$stage" in
-    lint|tests|ops|delta|tune|service|coalesce|trace|stream|cluster) "stage_${stage}" ;;
+    lint|tests|ops|delta|tune|service|coalesce|trace|stream|cluster|qos) "stage_${stage}" ;;
     *) echo "[ci_smoke] unknown stage '${stage}' (known: ${ALL_STAGES[*]})" >&2
        exit 2 ;;
   esac

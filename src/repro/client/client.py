@@ -50,7 +50,8 @@ import numpy as np
 from repro import obs
 from repro.service import protocol as P
 
-__all__ = ["CoresetClient", "CoresetAPIError", "TransportError"]
+__all__ = ["CoresetClient", "CoresetAPIError", "TransportError",
+           "AdmissionRejectedError"]
 
 
 class CoresetAPIError(Exception):
@@ -68,6 +69,24 @@ class CoresetAPIError(Exception):
         self.trace_id = trace_id
 
 
+class AdmissionRejectedError(CoresetAPIError):
+    """503 ``overloaded``: the server refused the request ON ARRIVAL
+    (admission control) and every retry met the same pushback.
+    ``retry_after`` is the server's final backoff hint in seconds;
+    ``reason`` is the admission verdict (``deadline_unmeetable``,
+    ``tenant_rate``, ``tenant_inflight``); ``tenant`` is who it was
+    charged to."""
+
+    def __init__(self, http: int, code: str, message: str,
+                 trace_id: str | None = None, *,
+                 retry_after: float | None = None,
+                 tenant: str | None = None, reason: str | None = None):
+        super().__init__(http, code, message, trace_id)
+        self.retry_after = retry_after
+        self.tenant = tenant
+        self.reason = reason
+
+
 class TransportError(Exception):
     """Connection-level failure after exhausting retries."""
 
@@ -75,8 +94,9 @@ class TransportError(Exception):
 class CoresetClient:
     def __init__(self, base_url: str, *, encoding: str = "binary",
                  timeout: float = 120.0, retries: int = 2,
-                 backoff: float = 0.1, deadline_ms: float | None = None,
-                 stream: bool = True):
+                 backoff: float = 0.1, backoff_cap: float = 30.0,
+                 deadline_ms: float | None = None,
+                 stream: bool = True, tenant: str | None = None):
         if encoding not in ("binary", "json"):
             raise ValueError(f"encoding must be 'binary' or 'json', "
                              f"got {encoding!r}")
@@ -88,6 +108,11 @@ class CoresetClient:
         self.timeout = float(timeout)
         self.retries = int(retries)
         self.backoff = float(backoff)
+        # ceiling on any single retry sleep, INCLUDING a server-sent
+        # Retry-After: an admission-controlled server computes its hint
+        # from the configured rate, and a tiny rate yields an honest but
+        # enormous hint — a client must never block unboundedly on it
+        self.backoff_cap = float(backoff_cap)
         # default server-side budget attached to every query/build request;
         # per-call deadline_ms overrides it.  Past the budget the server
         # fails the request 504 deadline_exceeded (never retried here — the
@@ -95,6 +120,10 @@ class CoresetClient:
         # request was queued in is unaffected)
         self.deadline_ms = float(deadline_ms) if deadline_ms is not None \
             else None
+        # QoS identity: sent as X-Coreset-Tenant on every request so an
+        # admission-controlled server charges this client's traffic to its
+        # fair-share bucket (None = the server's default tenant)
+        self.tenant = tenant
         # request-frame codec: None = best this host encodes; negotiated
         # down to "zlib" if the server 415s a zstd frame
         self._codec: str | None = None
@@ -128,6 +157,8 @@ class CoresetClient:
         else:
             accept = P.CONTENT_TYPE_JSON
         headers = {"Accept": accept}
+        if self.tenant is not None:
+            headers["X-Coreset-Tenant"] = self.tenant
         if content_type is not None:
             headers["Content-Type"] = content_type
         # W3C trace propagation: the server continues THIS trace id, so the
@@ -172,6 +203,25 @@ class CoresetClient:
             raise CoresetAPIError(http, "unknown",
                                   raw[:512].decode("utf-8", "replace"),
                                   trace_id) from None
+
+    def _admission_error(self, ctype: str, raw: bytes,
+                         trace_id: str | None,
+                         retry_after: float | None,
+                         ) -> AdmissionRejectedError | None:
+        """Typed rejection from a 503 body carrying the ``overloaded``
+        envelope; None for any other 503 (proxy, mid-restart, no body)."""
+        try:
+            env = P.decode(ctype, raw, expect=P.ErrorResponse)
+        except (P.ProtocolError, ValueError):
+            return None
+        if env.error.code != "overloaded":
+            return None
+        return AdmissionRejectedError(
+            503, env.error.code, env.error.message,
+            trace_id or self.last_trace_id,
+            retry_after=(env.error.retry_after if env.error.retry_after
+                         is not None else retry_after),
+            tenant=env.error.tenant, reason=env.error.reason)
 
     @staticmethod
     def _retry_after_s(headers) -> float | None:
@@ -220,6 +270,16 @@ class CoresetClient:
                     # exponential schedule into the same congestion
                     retry_after = self._retry_after_s(exc.headers)
                     self.last_retry_after = retry_after
+                    if exc.code == 503:
+                        # admission pushback still retries (the server said
+                        # when), but once the budget is spent the caller
+                        # gets the typed rejection, not a bare transport
+                        # error: reason/tenant/retry_after survive
+                        rej = self._admission_error(
+                            exc.headers.get("Content-Type", ""), raw,
+                            err_tid, retry_after)
+                        if rej is not None:
+                            last = rej
                 else:
                     # < 500 (structured API error) and 504 deadline_exceeded
                     # raise immediately: a missed deadline is the answer,
@@ -253,7 +313,7 @@ class CoresetClient:
             delay = self.backoff * (2 ** attempt)
             if retry_after is not None:
                 delay = max(delay, retry_after)
-            time.sleep(delay)
+            time.sleep(min(delay, self.backoff_cap))
             attempt += 1
 
     @staticmethod

@@ -41,6 +41,7 @@ from repro import obs
 from repro.core.coreset import SignalCoreset, signal_coreset
 from repro.core.sharded import band_bounds, shared_tolerance
 from repro.core.streaming import compose
+from repro.service.admission import current_ticket
 from repro.service.engine import CoresetEngine, SignalState
 
 from .rpc import (WorkerClient, WorkerRPCError, WorkerTransportError,
@@ -141,7 +142,18 @@ class ClusterEngine(CoresetEngine):
 
     # ---------------------------------------------------------------- ingest
     def register_signal(self, name: str, values: np.ndarray, *,
-                        replace: bool = False) -> dict:
+                        replace: bool = False,
+                        tenant: str | None = None) -> dict:
+        # admit BEFORE scattering: a refused registration must cost zero
+        # worker RPCs.  Requests arriving over HTTP already hold a ticket
+        # (api.py admitted them and made it current), so only direct engine
+        # callers trigger a fresh decision here — one request, one charge.
+        ctl = self.admission
+        if ctl is not None and current_ticket() is None:
+            with ctl.admit("register", tenant, signal=name):
+                info = super().register_signal(name, values, replace=replace)
+                self._scatter(name)
+                return info
         info = super().register_signal(name, values, replace=replace)
         self._scatter(name)
         return info

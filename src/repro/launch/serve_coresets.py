@@ -243,6 +243,29 @@ def main() -> None:
     ap.add_argument("--slow-ms", type=float, default=None,
                     help="with --access-log, only log requests taking at "
                          "least this many milliseconds (slow-request log)")
+    ap.add_argument("--admission", action="store_true",
+                    help="enable front-door admission control: 503 + "
+                         "Retry-After for work predicted to miss its "
+                         "deadline_ms, plus per-tenant weighted fair-share "
+                         "rate/in-flight caps (X-Coreset-Tenant header)")
+    ap.add_argument("--admission-rate", type=float, default=None,
+                    metavar="RPS",
+                    help="total admitted requests/second, split across "
+                         "tenants by weight (default: unlimited)")
+    ap.add_argument("--admission-burst-s", type=float, default=1.0,
+                    help="token-bucket depth in seconds of a tenant's rate "
+                         "share")
+    ap.add_argument("--admission-max-inflight", type=int, default=None,
+                    help="total in-flight requests, split across tenants by "
+                         "weight (default: unlimited)")
+    ap.add_argument("--admission-tenants", default="",
+                    metavar="NAME=W,...",
+                    help="tenant weights, e.g. 'gold=4,silver=2' — unknown "
+                         "tenants join at --admission-default-weight")
+    ap.add_argument("--admission-default-weight", type=float, default=1.0)
+    ap.add_argument("--no-deadline-guard", action="store_true",
+                    help="with --admission, keep fair-share caps but never "
+                         "reject on predicted deadline misses")
     ap.add_argument("--no-runtime-hygiene", action="store_true",
                     help="skip startup hygiene (persistent XLA compilation "
                          "cache, autotune-cache preload)")
@@ -259,6 +282,23 @@ def main() -> None:
     if args.no_tracing:
         from repro import obs
         obs.set_enabled(False)
+
+    admission = None
+    if args.admission:
+        from repro.service.admission import AdmissionConfig, AdmissionController
+        admission = AdmissionController(AdmissionConfig(
+            tenants=AdmissionConfig.parse_tenants(args.admission_tenants),
+            default_weight=args.admission_default_weight,
+            rate_rps=args.admission_rate,
+            burst_s=args.admission_burst_s,
+            max_inflight=args.admission_max_inflight,
+            parallelism=args.workers,
+            deadline_guard=not args.no_deadline_guard))
+    elif (args.admission_rate is not None
+          or args.admission_max_inflight is not None
+          or args.admission_tenants):
+        ap.error("--admission-* options require --admission")
+
     access_fp = None
     if args.access_log is not None:
         access_fp = (sys.stderr if args.access_log == "-"
@@ -294,7 +334,8 @@ def main() -> None:
                                workers=args.workers,
                                query_window=args.query_window_ms / 1e3,
                                query_max_fuse=args.query_max_fuse,
-                               coalesce=not args.no_coalesce)
+                               coalesce=not args.no_coalesce,
+                               admission=admission)
         up = sum("error" not in h for h in engine.probe_workers().values())
         print(f"[serve_coresets] coordinator: {up}/{len(peers)} workers up",
               flush=True)
@@ -304,7 +345,8 @@ def main() -> None:
                                num_bands=args.num_bands,
                                query_window=args.query_window_ms / 1e3,
                                query_max_fuse=args.query_max_fuse,
-                               coalesce=not args.no_coalesce)
+                               coalesce=not args.no_coalesce,
+                               admission=admission)
     srv = make_server(engine, host=args.host, port=args.port,
                       access_log=access_fp, slow_ms=args.slow_ms)
     print(f"[serve_coresets] listening on http://{args.host}:"

@@ -284,6 +284,9 @@ class Tracer:
         self.max_spans_per_trace = int(max_spans_per_trace)
         self._enabled = bool(enabled)
         self._lock = threading.Lock()
+        # readers waiting for an in-flight trace to finalize (see get()):
+        # shares _lock, so notify happens under the same mutual exclusion
+        self._cond = threading.Condition(self._lock)
         self._active: dict[str, _ActiveTrace] = {}
         self._finished: "OrderedDict[str, dict]" = OrderedDict()
         self.completed_total = 0
@@ -394,6 +397,7 @@ class Tracer:
         self.completed_total += 1
         while len(self._finished) > self.capacity:
             self._finished.popitem(last=False)
+        self._cond.notify_all()
 
     @staticmethod
     def _span_dict(rec: tuple) -> dict:
@@ -419,11 +423,28 @@ class Tracer:
                         "spans": len(t["spans"])})
         return out
 
-    def get(self, trace_id: str, *, resolve_links: bool = True) -> dict | None:
+    def get(self, trace_id: str, *, resolve_links: bool = True,
+            wait_s: float = 0.0) -> dict | None:
         """One completed trace, plus (one hop of) the traces its spans link
         to — so a request trace arrives together with the fused-dispatch
-        trace it rode in."""
-        with self._lock:
+        trace it rode in.
+
+        ``wait_s`` bounds a wait for a trace that is still ACTIVE: the HTTP
+        layer writes the response body *before* the request's root span ends
+        (the observation must not gate the reply), so a client that turns
+        around and fetches its own trace can arrive in the microseconds
+        between reply and finalize.  Waiting only applies to known in-flight
+        trace ids — an id the tracer has never seen returns None immediately,
+        so a bad id cannot stall the trace route."""
+        with self._cond:
+            if wait_s > 0.0:
+                deadline = time.perf_counter() + wait_s
+                while (trace_id not in self._finished
+                       and trace_id in self._active):
+                    left = deadline - time.perf_counter()
+                    if left <= 0.0:
+                        break
+                    self._cond.wait(left)
             t = self._finished.get(trace_id)
             if t is None:
                 return None
@@ -449,11 +470,11 @@ class Tracer:
                 out["linked_traces"] = linked
         return out
 
-    def chrome(self, trace_id: str) -> dict | None:
+    def chrome(self, trace_id: str, *, wait_s: float = 0.0) -> dict | None:
         """Chrome trace-event JSON (Perfetto loads it as-is): the trace's
         spans as complete ("X") events, linked traces as separate process
         groups, and flow arrows ("s"/"f") along every link."""
-        t = self.get(trace_id, resolve_links=True)
+        t = self.get(trace_id, resolve_links=True, wait_s=wait_s)
         if t is None:
             return None
         events: list[dict] = []
@@ -486,8 +507,8 @@ class Tracer:
             emit(lt["spans"], i, f"linked {lt['trace_id'][:8]} ({lt['root']})")
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
-    def chrome_json(self, trace_id: str) -> bytes | None:
-        doc = self.chrome(trace_id)
+    def chrome_json(self, trace_id: str, *, wait_s: float = 0.0) -> bytes | None:
+        doc = self.chrome(trace_id, wait_s=wait_s)
         return None if doc is None else json.dumps(doc).encode()
 
     def stats(self) -> dict:

@@ -3,6 +3,8 @@
 # dominance-aware cache, continuous-batching build scheduler, streamed
 # ingest via merge-reduce, a typed v1 wire protocol (JSON + binary npz
 # frames) and a stdlib HTTP front.  See DESIGN.md.
+from .admission import (AdmissionConfig, AdmissionController,
+                        AdmissionRejected)
 from .cache import CacheEntry, DominanceCache
 from .engine import CoresetEngine, SignalState, UnknownSignalError
 from .metrics import Histogram, ServiceMetrics
@@ -12,6 +14,7 @@ from . import protocol
 from .api import ApiError, make_server, serve_forever_in_thread
 
 __all__ = [
+    "AdmissionConfig", "AdmissionController", "AdmissionRejected",
     "CacheEntry", "DominanceCache", "CoresetEngine", "SignalState",
     "UnknownSignalError", "Histogram", "ServiceMetrics", "BuildScheduler",
     "QueryScheduler", "DeadlineExceeded",

@@ -34,9 +34,14 @@ including errors.  An optional JSON-lines access log (``make_server``'s
 Every status >= 400 carries the uniform envelope
 ``{"type": "error", "error": {"code", "message"}}`` with code in
 {bad_request, not_found, conflict, payload_too_large, unsupported_media,
-deadline_exceeded, internal}.  Requests carrying ``deadline_ms`` that miss
-their deadline (build queue wait, query batching window) fail 504
-``deadline_exceeded`` without disturbing the batch they were queued in.
+deadline_exceeded, overloaded, internal}.  Requests carrying
+``deadline_ms`` that miss their deadline (build queue wait, query batching
+window) fail 504 ``deadline_exceeded`` without disturbing the batch they
+were queued in.  When admission control is on (``make_server`` engines
+constructed with ``admission=``), requests may instead be refused ON
+ARRIVAL with 503 ``overloaded`` + a fractional-seconds ``Retry-After``
+header and ``reason``/``tenant``/``retry_after`` fields in the envelope;
+the tenant comes from ``X-Coreset-Tenant`` (default tenant otherwise).
 
 The pre-v1 unversioned routes (``/signals``, ``/ingest``, ``/build``,
 ``/query/*``, ``/healthz``, ``/stats``, ``/metrics``) remain as thin
@@ -51,6 +56,7 @@ can measure the serving engine rather than the wire codec.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import threading
 import time
@@ -62,6 +68,7 @@ import numpy as np
 from repro import obs
 
 from . import protocol as P
+from .admission import DEFAULT_TENANT, AdmissionRejected
 from .engine import CoresetEngine, UnknownSignalError
 from .protocol import ProtocolError, UnsupportedCodec
 from .query_scheduler import DeadlineExceeded
@@ -69,6 +76,7 @@ from .query_scheduler import DeadlineExceeded
 __all__ = ["make_server", "serve_forever_in_thread", "ApiError"]
 
 _MAX_BODY = 256 << 20
+_TRACE_WAIT_S = 0.25   # bounded wait for an in-flight trace to finalize
 
 # concurrent.futures.TimeoutError aliases builtins.TimeoutError on 3.11+,
 # but is a distinct class before — catch whichever this runtime has
@@ -78,10 +86,12 @@ from concurrent.futures import TimeoutError as _FutTimeout  # noqa: E402
 class ApiError(Exception):
     """Handler-raised error with a definite HTTP status + envelope code."""
 
-    def __init__(self, http: int, code: str, message: str):
+    def __init__(self, http: int, code: str, message: str,
+                 retry_after: float | None = None):
         super().__init__(message)
         self.http = http
         self.code = code
+        self.retry_after = retry_after
 
 
 def _synthetic(spec: dict) -> np.ndarray:
@@ -352,7 +362,8 @@ class _Handler(BaseHTTPRequestHandler):
 
     # ------------------------------------------------------------- plumbing
     def _reply(self, code: int, body: bytes, content_type: str,
-               deprecated_for: str | None = None):
+               deprecated_for: str | None = None,
+               retry_after: float | None = None):
         if code >= 400:
             # an error may leave the request body unread (oversized payload,
             # JSON abort) — reusing the keep-alive connection would parse the
@@ -369,6 +380,13 @@ class _Handler(BaseHTTPRequestHandler):
             self.send_header("traceparent",
                              obs.format_traceparent(sp.trace_id, sp.span_id))
             self.send_header("X-Coreset-Trace-Id", sp.trace_id)
+        if retry_after is not None:
+            # fractional seconds: RFC 9110 says integer delay-seconds, but
+            # sub-second backoff is the whole point at ms-scale requests —
+            # our SDK float()s the header, and integer-only parsers reading
+            # "0.25" as garbage fall back to their own schedule, which is
+            # exactly the no-header behavior
+            self.send_header("Retry-After", f"{max(retry_after, 0.001):.3f}")
         if deprecated_for is not None:
             self.send_header("Deprecation", "true")
             self.send_header("Link",
@@ -377,7 +395,8 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def _reply_msg(self, code: int, msg: P._Wire, encoding: str,
-                   deprecated_for: str | None = None):
+                   deprecated_for: str | None = None,
+                   retry_after: float | None = None):
         # binary responses use the codec the client's Accept advertised
         # ("zlib" unless it explicitly said codec=zstd), so a zlib-only
         # client never receives a frame it cannot decode.  The advertised
@@ -390,7 +409,7 @@ class _Handler(BaseHTTPRequestHandler):
             if codec == "zstd" and P.zstandard is None:
                 codec = "zlib"
         ctype, body = msg.to_wire(encoding, binary_codec=codec)
-        self._reply(code, body, ctype, deprecated_for)
+        self._reply(code, body, ctype, deprecated_for, retry_after)
 
     def _reply_compress_stream(self, resp: P.CompressResponse) -> None:
         """v2 negotiated compress: write the response as one transfer-
@@ -442,11 +461,38 @@ class _Handler(BaseHTTPRequestHandler):
         self._reply(code, body, content_type, deprecated_for)
 
     def _error(self, http: int, code: str, message: str,
-               deprecated_for: str | None = None):
+               deprecated_for: str | None = None, *,
+               retry_after: float | None = None,
+               tenant: str | None = None, reason: str | None = None):
         # errors are always JSON: the envelope must stay readable even when
         # the request's binary frame was the thing that failed to parse
-        env = P.ErrorResponse(error=P.ErrorInfo(code=code, message=message))
-        self._reply_msg(http, env, "json", deprecated_for)
+        env = P.ErrorResponse(error=P.ErrorInfo(
+            code=code, message=message, retry_after=retry_after,
+            tenant=tenant, reason=reason))
+        self._reply_msg(http, env, "json", deprecated_for,
+                        retry_after=retry_after)
+
+    def _admitted(self, eng: CoresetEngine, msg: P._Wire):
+        """Front-door admission for one decoded request.  Returns a context
+        manager: the admission Ticket (made current for the handler call, so
+        inner engine hops — cluster scatter — are charged exactly once and
+        its exit feeds the observed service time back into the predictor),
+        or a no-op when the engine runs without admission.  Raises
+        :class:`AdmissionRejected` → 503 + Retry-After before any engine
+        work happens."""
+        ctl = eng.admission
+        if ctl is None:
+            return contextlib.nullcontext()
+        tenant = (self.headers.get("X-Coreset-Tenant")
+                  or getattr(msg, "tenant", None) or DEFAULT_TENANT)
+        sig = getattr(msg, "signal", None)
+        ticket = ctl.admit(msg.kind, tenant,
+                           deadline_ms=getattr(msg, "deadline_ms", None),
+                           signal=sig.name if sig is not None else None)
+        sp = self._span
+        if sp:
+            sp.set_attr("tenant", tenant)
+        return ticket
 
     def _body(self) -> bytes:
         length = int(self.headers.get("Content-Length", 0))
@@ -496,7 +542,8 @@ class _Handler(BaseHTTPRequestHandler):
                     if successor is not None:
                         # legacy flat-dict schema; JSON only, like the old API
                         msg = _legacy_to_msg(path, json.loads(raw or b"{}"))
-                        resp = handler(eng, msg)
+                        with self._admitted(eng, msg):
+                            resp = handler(eng, msg)
                         self._reply_json(200, _legacy_payload(resp),
                                          deprecated_for=successor)
                     else:
@@ -506,7 +553,8 @@ class _Handler(BaseHTTPRequestHandler):
                             raise ApiError(415, "unsupported_media",
                                            f"unsupported Content-Type {ctype!r}")
                         msg = P.decode(ctype, raw, expect=msg_cls)
-                        resp = handler(eng, msg)
+                        with self._admitted(eng, msg):
+                            resp = handler(eng, msg)
                         if (v1_path == "/v1/query/compress"
                                 and out_enc == "binary"
                                 and P.accept_stream(
@@ -525,9 +573,22 @@ class _Handler(BaseHTTPRequestHandler):
             eng.metrics.inc("http_200")
             if successor is not None:
                 eng.metrics.inc("http_deprecated")
+        except AdmissionRejected as exc:
+            # refused ON ARRIVAL (503 overloaded + Retry-After): the request
+            # never touched the engine.  Distinct from 504 deadline_exceeded,
+            # which is admitted work dying at its deadline.
+            eng.metrics.inc("http_503")
+            if root:
+                root.set_attr("admission.rejected", True)
+                root.set_attr("admission.reason", exc.reason)
+                root.set_attr("admission.tenant", exc.tenant)
+            self._error(503, "overloaded", exc.message, successor,
+                        retry_after=exc.retry_after, tenant=exc.tenant,
+                        reason=exc.reason)
         except ApiError as exc:
             eng.metrics.inc(f"http_{exc.http}")
-            self._error(exc.http, exc.code, str(exc), successor)
+            self._error(exc.http, exc.code, str(exc), successor,
+                        retry_after=exc.retry_after)
         except UnknownSignalError as exc:
             # the one *intentional* KeyError (engine signal lookup); stray
             # KeyErrors from handler bugs still surface as 500 internal
@@ -607,8 +668,14 @@ class _Handler(BaseHTTPRequestHandler):
             return
         trace_id = path[len("/v1/trace/"):]
         fmt = params.get("format", ["json"])[0]
+        # grace for the reply-before-finalize window: a request's response
+        # is written BEFORE its root span ends (observation must not gate
+        # the reply), so a client fetching its own trace straight off the
+        # response headers can beat finalization by microseconds.  The wait
+        # only engages for ids the tracer knows are in flight — unknown ids
+        # still 404 immediately.
         if fmt == "chrome":
-            body = obs.TRACER.chrome_json(trace_id)
+            body = obs.TRACER.chrome_json(trace_id, wait_s=_TRACE_WAIT_S)
             if body is None:
                 raise ApiError(404, "not_found",
                                f"unknown trace {trace_id!r}")
@@ -618,7 +685,7 @@ class _Handler(BaseHTTPRequestHandler):
             raise ApiError(400, "bad_request",
                            f"unknown trace format {fmt!r} "
                            "(expected json or chrome)")
-        doc = obs.TRACER.get(trace_id)
+        doc = obs.TRACER.get(trace_id, wait_s=_TRACE_WAIT_S)
         if doc is None:
             raise ApiError(404, "not_found", f"unknown trace {trace_id!r}")
         self._reply_json(200, doc)

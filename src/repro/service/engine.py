@@ -33,6 +33,7 @@ from repro.core.sharded import (MESH_BACKEND, fitting_loss_batched,
 from repro.core.streaming import StreamingBuilder
 from repro.trees.forest import RandomForestRegressor
 
+from .admission import AdmissionController
 from .cache import CacheEntry, DominanceCache, _eps_key, spans_intersect
 from .metrics import ServiceMetrics
 from .query_scheduler import QueryScheduler
@@ -258,8 +259,16 @@ class CoresetEngine:
                  num_bands: int = 4, batch_window: float = 0.004,
                  query_window: float = 0.002, query_max_fuse: int = 16,
                  coalesce: bool = True,
-                 metrics: ServiceMetrics | None = None, mesh=None):
+                 metrics: ServiceMetrics | None = None, mesh=None,
+                 admission: "AdmissionController | None" = None):
         self.metrics = metrics or ServiceMetrics()
+        # optional front-door admission control (service/admission.py):
+        # consulted by the HTTP layer and the cluster coordinator, never by
+        # the engine's own compute paths — admitted work runs bit-identically
+        # to an engine without it
+        self.admission = admission
+        if admission is not None and admission.metrics is None:
+            admission.metrics = self.metrics
         self.cache = DominanceCache(cache_bytes, metrics=self.metrics)
         self.scheduler = BuildScheduler(max_workers=workers,
                                         batch_window=batch_window,
@@ -1109,6 +1118,12 @@ class CoresetEngine:
                 "ops_backends": ops.snapshot(),
                 "ops_autotune": autotune.snapshot(),
                 "tracing": obs.TRACER.stats(),
+                "admission": ({**self.admission.snapshot(),
+                               "scheduler_load": {
+                                   "builds": self.scheduler.load(),
+                                   "queries": self.queries.load()}}
+                              if self.admission is not None
+                              else {"enabled": False}),
                 "metrics": self.metrics.snapshot()}
 
     def close(self) -> None:

@@ -352,6 +352,7 @@ class RegisterRequest(_Wire):
     values: np.ndarray | None = None     # (n, m) dense payload
     synthetic: dict | None = None        # server-side generation spec
     replace: bool = False
+    tenant: str | None = None            # QoS accounting identity (PR 10)
     _NESTED = {"signal": SignalRef}
     _COERCE = {"values": _arr(np.float64, ndim=2, allow_none=True)}
 
@@ -361,6 +362,7 @@ class IngestRequest(_Wire):
     signal: SignalRef
     band: np.ndarray | None = None       # (rows, m) appended row band
     synthetic: dict | None = None
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef}
     _COERCE = {"band": _arr(np.float64, ndim=2, allow_none=True)}
 
@@ -381,6 +383,7 @@ class IngestDeltaRequest(_Wire):
     row0: int | None = None
     row0s: list | None = None            # burst: per-band placement
     rows: list | None = None             # burst: per-band row counts
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef}
     _COERCE = {"band": _arr(np.float64, ndim=2)}
 
@@ -390,6 +393,7 @@ class BuildRequest(_Wire):
     signal: SignalRef
     spec: CoresetSpec
     deadline_ms: float | None = None
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
 
 
@@ -408,6 +412,7 @@ class LossQuery(_Wire):
     spec: CoresetSpec | None = None
     deadline_ms: float | None = None
     coalesce: bool = True
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"rects": _arr(np.int64, ndim=2),
                "labels": _arr(np.float64, ndim=1)}
@@ -426,6 +431,7 @@ class BatchLossQuery(_Wire):
     spec: CoresetSpec | None = None
     deadline_ms: float | None = None
     coalesce: bool = True
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"rects": _arr(np.int64, ndim=3),
                "labels": _arr(np.float64, ndim=2)}
@@ -440,6 +446,7 @@ class FitRequest(_Wire):
     predict: np.ndarray | None = None     # (P, 2) grid points to evaluate
     seed: int = 0
     deadline_ms: float | None = None
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
     _COERCE = {"predict": _arr(np.float64, ndim=2, allow_none=True)}
 
@@ -452,6 +459,7 @@ class CompressRequest(_Wire):
     style: str = "mean"
     max_points: int = 4096
     deadline_ms: float | None = None
+    tenant: str | None = None
     _NESTED = {"signal": SignalRef, "spec": CoresetSpec}
 
 
@@ -562,8 +570,14 @@ class CompressResponse(_Wire):
 
 @_message("error_info")
 class ErrorInfo(_Wire):
-    code: str                 # bad_request | not_found | conflict | internal
+    code: str                 # bad_request | not_found | overloaded | internal
     message: str
+    # admission-rejection extras (PR 10).  All optional with None defaults,
+    # so v1 peers that predate them decode the envelope unchanged (unknown
+    # keys are ignored on decode, missing keys fill from defaults).
+    retry_after: float | None = None    # seconds; mirrors the Retry-After header
+    tenant: str | None = None           # tenant the rejection was charged to
+    reason: str | None = None           # deadline_unmeetable | tenant_rate | ...
 
 
 @_message("error")

@@ -354,6 +354,16 @@ class QueryScheduler:
         with self._cond:
             return sum(len(b.items) for b in self._buckets.values())
 
+    def load(self) -> dict:
+        """Queue-pressure snapshot for admission control / the overload
+        gate: queries still waiting in batching windows and how many fusion
+        buckets they spread across (depth concentrated in one bucket drains
+        in one dispatch; spread across many it drains serially)."""
+        with self._cond:
+            return {"queued": sum(len(b.items)
+                                  for b in self._buckets.values()),
+                    "buckets": len(self._buckets)}
+
     def shutdown(self, wait: bool = True) -> None:
         """Drain: every queued query is flushed (reason="drain") and served
         before the pool stops accepting work."""

@@ -175,6 +175,15 @@ class BuildScheduler:
         with self._lock:
             return len(self._pending)
 
+    def load(self) -> dict:
+        """Queue-pressure snapshot for admission control / the overload
+        gate: coalesced build keys pending (submitted, not yet finished)
+        and how many of them carry at least one waiter deadline."""
+        with self._lock:
+            return {"pending": len(self._pending),
+                    "with_deadline": sum(d is not None
+                                         for d in self._deadlines.values())}
+
     def shutdown(self, wait: bool = True) -> None:
         with self._lock:
             if self._closed:

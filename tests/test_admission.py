@@ -1,0 +1,314 @@
+"""Admission control & multi-tenant QoS: on-arrival 503 vs at-deadline 504
+taxonomy, Retry-After monotonicity, weighted fair shares, bitwise parity of
+admitted work, and the cluster coordinator's admit-before-scatter rule."""
+import threading
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.client import AdmissionRejectedError, CoresetAPIError, CoresetClient
+from repro.cluster import ClusterEngine, ShardWorker, make_worker_server
+from repro.core import random_tree_segmentation
+from repro.data import piecewise_signal
+from repro.service import (AdmissionConfig, AdmissionController,
+                           AdmissionRejected, CoresetEngine, ServiceMetrics,
+                           make_server, serve_forever_in_thread)
+
+N, M, KMAX = 72, 48, 8
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float) -> None:
+        self.t += dt
+
+
+def _signal(seed=0):
+    return piecewise_signal(N, M, KMAX, noise=0.15, seed=seed)
+
+
+def _engine(admission=None, **kw):
+    kw.setdefault("workers", 2)
+    kw.setdefault("metrics", ServiceMetrics())
+    return CoresetEngine(admission=admission, **kw)
+
+
+def _server(admission=None):
+    eng = _engine(admission=admission)
+    srv = make_server(eng)
+    serve_forever_in_thread(srv)
+    return eng, srv, f"http://127.0.0.1:{srv.server_address[1]}"
+
+
+# ----------------------------------------------------------- unit: controller
+def test_token_bucket_enforces_weighted_rate_shares():
+    clk = FakeClock()
+    ctl = AdmissionController(AdmissionConfig(
+        tenants={"hot": 3.0, "cold": 1.0}, rate_rps=40.0, burst_s=0.05),
+        clock=clk)
+    admitted = {"hot": 0, "cold": 0}
+    for _ in range(4000):           # 4s of saturating demand from both
+        clk.tick(0.001)
+        for tenant in ("hot", "cold"):
+            try:
+                ctl.admit("loss_query", tenant, signal="s").done()
+                admitted[tenant] += 1
+            except AdmissionRejected:
+                pass
+    # shares 3/4 and 1/4 of 40 rps over 4s -> ~120 and ~40
+    assert admitted["hot"] == pytest.approx(120, rel=0.2)
+    assert admitted["cold"] == pytest.approx(40, rel=0.2)
+
+
+def test_fair_share_property_random_mixes():
+    """Admitted throughput tracks configured weights within 20% for random
+    tenant mixes under uniformly saturating demand."""
+    rng = np.random.default_rng(42)
+    for trial in range(4):
+        n_tenants = int(rng.integers(2, 5))
+        weights = {f"t{i}": float(rng.integers(1, 6))
+                   for i in range(n_tenants)}
+        clk = FakeClock()
+        ctl = AdmissionController(AdmissionConfig(
+            tenants=weights, rate_rps=100.0, burst_s=0.02), clock=clk)
+        admitted = dict.fromkeys(weights, 0)
+        for _ in range(3000):      # 3 simulated seconds, everyone saturates
+            clk.tick(0.001)
+            for tenant in weights:
+                try:
+                    ctl.admit("loss_query", tenant, signal="s").done()
+                    admitted[tenant] += 1
+                except AdmissionRejected:
+                    pass
+        wsum = sum(weights.values())
+        total = 100.0 * 3.0
+        for tenant, w in weights.items():
+            expect = total * w / wsum
+            assert admitted[tenant] == pytest.approx(expect, rel=0.2), \
+                f"trial {trial}: {tenant} w={w} got {admitted[tenant]} " \
+                f"want ~{expect}"
+
+
+def test_rejections_do_not_consume_tokens():
+    clk = FakeClock()
+    ctl = AdmissionController(AdmissionConfig(rate_rps=10.0, burst_s=0.1),
+                              clock=clk)
+    ctl.admit("build", "a", signal="s").done()     # drains the 1-token bucket
+    for _ in range(50):                            # hammering while empty...
+        with pytest.raises(AdmissionRejected):
+            ctl.admit("build", "a", signal="s")
+    clk.tick(0.11)                                 # ...must not delay refill
+    ctl.admit("build", "a", signal="s").done()
+
+
+def test_deadline_guard_uses_ewma_and_depth():
+    clk = FakeClock()
+    ctl = AdmissionController(AdmissionConfig(parallelism=1), clock=clk)
+    t = ctl.admit("build", None, signal="s")
+    clk.tick(0.5)
+    t.done()                                       # class EWMA = 500ms
+    # budget far below the predicted 500ms -> refused on arrival
+    with pytest.raises(AdmissionRejected) as ei:
+        ctl.admit("build", None, signal="s", deadline_ms=50.0)
+    assert ei.value.reason == "deadline_unmeetable"
+    # a generous budget sails through
+    ctl.admit("build", None, signal="s", deadline_ms=5000.0).done()
+    # other classes are unaffected by this class's EWMA
+    ctl.admit("loss_query", None, signal="s", deadline_ms=50.0).done()
+
+
+def test_retry_after_monotonic_in_queue_depth():
+    clk = FakeClock()
+    ctl = AdmissionController(AdmissionConfig(parallelism=2), clock=clk)
+    t = ctl.admit("build", None, signal="s")
+    clk.tick(0.1)
+    t.done()                                       # EWMA = 100ms
+    hints, held = [], []
+    for depth in range(1, 8):                      # grow the admitted backlog
+        held.append(ctl.admit("build", None, signal="s"))
+        with pytest.raises(AdmissionRejected) as ei:
+            ctl.admit("build", None, signal="s", deadline_ms=1.0)
+        assert ei.value.reason == "deadline_unmeetable"
+        hints.append(ei.value.retry_after)
+    assert hints == sorted(hints), f"Retry-After not monotonic: {hints}"
+    assert hints[-1] > hints[0]
+    for t in held:
+        t.done()
+
+
+def test_inflight_cap_is_weighted_and_releases():
+    clk = FakeClock()
+    ctl = AdmissionController(AdmissionConfig(
+        tenants={"big": 3.0, "small": 1.0}, max_inflight=4), clock=clk)
+    big = [ctl.admit("build", "big", signal="s") for _ in range(3)]
+    with pytest.raises(AdmissionRejected) as ei:
+        ctl.admit("build", "big", signal="s")
+    assert ei.value.reason == "tenant_inflight"
+    # small's slice (1 of 4) is untouched by big's saturation
+    small = ctl.admit("build", "small", signal="s")
+    with pytest.raises(AdmissionRejected):
+        ctl.admit("build", "small", signal="s")
+    big[0].done()
+    ctl.admit("build", "big", signal="s").done()   # slot freed
+    for t in big[1:] + [small]:
+        t.done()
+
+
+def test_ticket_done_is_idempotent_and_snapshot_coherent():
+    clk = FakeClock()
+    ctl = AdmissionController(AdmissionConfig(), clock=clk)
+    t = ctl.admit("build", "x", signal="s")
+    t.done()
+    t.done()
+    snap = ctl.snapshot()
+    assert snap["tenants"]["x"]["inflight"] == 0
+    assert snap["tenants"]["x"]["admitted"] == 1
+    assert snap["admitted_total"] == 1
+
+
+# ------------------------------------------------------------- HTTP taxonomy
+def test_http_503_on_arrival_vs_504_at_deadline():
+    """One server, both failure modes: admitted work that misses its budget
+    fails 504 deadline_exceeded; refused work fails 503 overloaded with a
+    Retry-After hint, before touching the engine."""
+    ctl = AdmissionController(AdmissionConfig(deadline_guard=False))
+    eng, srv, base = _server(admission=ctl)
+    try:
+        cl = CoresetClient(base, retries=0)
+        y = _signal(3)
+        cl.register_signal("s", values=y)
+        q = random_tree_segmentation(N, M, 5, np.random.default_rng(0))
+
+        # 1) admitted + impossible budget -> 504, the AT-DEADLINE taxonomy
+        with pytest.raises(CoresetAPIError) as ei:
+            cl.query_loss("s", q.rects, q.labels, eps=0.3, deadline_ms=0.01)
+        assert ei.value.http == 504
+        assert ei.value.code == "deadline_exceeded"
+        assert not isinstance(ei.value, AdmissionRejectedError)
+
+        # 2) starve the rate bucket -> 503 overloaded ON ARRIVAL
+        ctl.config.rate_rps = 1e-6       # ~1 token, then a 11-day refill
+        cl.query_loss("s", q.rects, q.labels, eps=0.3)     # takes the token
+        with pytest.raises(AdmissionRejectedError) as ei:
+            cl.query_loss("s", q.rects, q.labels, eps=0.3)
+        err = ei.value
+        assert err.http == 503 and err.code == "overloaded"
+        assert err.reason == "tenant_rate"
+        assert err.retry_after is not None and err.retry_after > 0
+        assert err.tenant == "default"
+        # rejected on arrival: the engine never saw the request
+        assert eng.metrics.get("http_503") == 1
+        snap = eng.stats()["admission"]
+        assert snap["rejected_total"] == 1
+        assert snap["rejected_by_reason"] == {"tenant_rate": 1}
+        # observability: the counter family carries reason + tenant labels
+        assert ('admission_rejected_total{reason="tenant_rate",'
+                'tenant="default"}') in eng.metrics.render()
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_http_tenant_header_and_sdk_arg_reach_accounting():
+    ctl = AdmissionController(AdmissionConfig())
+    eng, srv, base = _server(admission=ctl)
+    try:
+        gold = CoresetClient(base, tenant="gold")
+        gold.register_signal("s", values=_signal(4))
+        anon = CoresetClient(base)
+        anon.build("s", 4, 0.3)
+        snap = ctl.snapshot()
+        assert snap["tenants"]["gold"]["admitted"] >= 1
+        assert snap["tenants"]["default"]["admitted"] >= 1
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+def test_sdk_retries_stretch_to_retry_after_then_surface_typed_error():
+    ctl = AdmissionController(AdmissionConfig(rate_rps=1e-6, burst_s=1.0))
+    eng, srv, base = _server(admission=ctl)
+    try:
+        # backoff_cap bounds the honored Retry-After: the 1e-6 rps rate
+        # yields an honest ~1e6s hint that must NOT block the client
+        cl = CoresetClient(base, retries=1, backoff=0.01, backoff_cap=0.05)
+        cl.register_signal("s", values=_signal(5))    # consumes the token
+        with pytest.raises(AdmissionRejectedError):
+            cl.build("s", 4, 0.3)
+        assert cl.last_retry_after is not None and cl.last_retry_after > 0
+    finally:
+        srv.shutdown()
+        eng.close()
+
+
+# ------------------------------------------------------------ bitwise parity
+def test_admitted_work_bitwise_parity_with_no_admission_path():
+    """Admission only gates entry: every admitted response is byte-for-byte
+    the response an engine without admission produces."""
+    ctl = AdmissionController(AdmissionConfig(
+        tenants={"gold": 2.0}, rate_rps=10_000.0, max_inflight=64))
+    eng_a, srv_a, base_a = _server(admission=ctl)
+    eng_p, srv_p, base_p = _server(admission=None)
+    try:
+        y = _signal(9)
+        ca = CoresetClient(base_a, tenant="gold")
+        cp = CoresetClient(base_p)
+        for cl in (ca, cp):
+            cl.register_signal("s", values=y)
+        ba = ca.build("s", KMAX, 0.2)
+        bp = cp.build("s", KMAX, 0.2)
+        assert ba.fingerprint == bp.fingerprint       # bitwise-equal build
+        rng = np.random.default_rng(21)
+        for _ in range(4):
+            q = random_tree_segmentation(N, M, 6, rng)
+            ra = ca.query_loss("s", q.rects, q.labels, eps=0.3)
+            rp = cp.query_loss("s", q.rects, q.labels, eps=0.3)
+            assert ra.loss == rp.loss                 # bitwise, not approx
+            assert ra.fingerprint == rp.fingerprint
+        assert ctl.snapshot()["rejected_total"] == 0
+    finally:
+        srv_a.shutdown()
+        eng_a.close()
+        srv_p.shutdown()
+        eng_p.close()
+
+
+# ------------------------------------------------- coordinator admit-first
+def _start_worker(i: int):
+    w = ShardWorker(worker_id=f"w{i}")
+    srv = make_worker_server(w, port=0, tracer=obs.Tracer())
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return SimpleNamespace(worker=w, server=srv,
+                           url=f"http://127.0.0.1:{srv.server_address[1]}")
+
+
+def test_cluster_coordinator_admits_before_scatter():
+    nodes = [_start_worker(i) for i in range(2)]
+    ctl = AdmissionController(AdmissionConfig(rate_rps=1e-6, burst_s=1.0))
+    coord = ClusterEngine([n.url for n in nodes], workers=2,
+                          rpc_timeout=10.0, metrics=ServiceMetrics(),
+                          admission=ctl)
+    try:
+        coord.register_signal("a", _signal(0))        # takes the only token
+        scattered = coord.metrics.get("cluster_bands_scattered")
+        assert scattered >= 1
+        with pytest.raises(AdmissionRejected):
+            coord.register_signal("b", _signal(1))
+        # refused registration cost ZERO worker RPCs and no local state
+        assert coord.metrics.get("cluster_bands_scattered") == scattered
+        assert "b" not in [s["name"] for s in coord.list_signals()]
+        snap = ctl.snapshot()
+        assert snap["rejected_total"] == 1
+        assert snap["tenants"]["default"]["admitted"] == 1
+    finally:
+        coord.close()
+        for n in nodes:
+            n.server.shutdown()
+            n.server.server_close()

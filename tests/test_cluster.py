@@ -209,7 +209,9 @@ def test_trace_id_spans_coordinator_and_worker_hops(cluster):
     linked_ids = {li["span_id"] for li in gathers[0].get("links", ())}
     assert len(linked_ids) == 3                      # gather fan-in links
     for n in cluster.nodes:
-        wt = n.tracer.get(root.trace_id)
+        # the worker finalizes its root span AFTER flushing the RPC reply,
+        # so bound-wait for the trace to finish rather than racing it
+        wt = n.tracer.get(root.trace_id, wait_s=2.0)
         assert wt is not None
         names = {s["name"] for s in wt["spans"]}
         assert "POST /v1/worker/band:build" in names
